@@ -1,0 +1,95 @@
+"""Kernel micro-benchmarks: interpret-mode correctness + jnp-path wall time.
+
+Wall times on this CPU container are RELATIVE indicators only (the Pallas
+kernels target TPU; interpret mode executes the kernel body in Python).
+What is asserted: kernel == oracle on production-relevant shapes; what is
+reported: the jnp-reference throughput (XLA:CPU) as the derived column.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.semiring import MIN_PLUS, PLUS_MUL
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.semiring_spmm.ops import spmv_blocked
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    # --- semiring SpMV: production tile size B=128 ------------------------
+    B, nvb, T = 128, 8, 48
+    cols = np.sort(rng.integers(0, nvb, T)).astype(np.int32)
+    rows = rng.integers(0, nvb, T).astype(np.int32)
+    for sr in (MIN_PLUS, PLUS_MUL):
+        tiles = np.full((T, B, B), sr.zero, np.float32)
+        for t in range(T):
+            m = rng.random((B, B)) < 0.1
+            tiles[t][m] = rng.random(int(m.sum()))
+        x = rng.random(nvb * B).astype(np.float32)
+        args = (jnp.asarray(tiles), jnp.asarray(rows), jnp.asarray(cols),
+                jnp.asarray(x), sr)
+        y_ref = spmv_blocked(*args, use_pallas=False)
+        y_pal = spmv_blocked(*args, use_pallas=True, interpret=True)
+        ref_np, pal_np = np.asarray(y_ref), np.asarray(y_pal)
+        fin = np.isfinite(ref_np)
+        ok = np.array_equal(fin, np.isfinite(pal_np)) and np.allclose(
+            ref_np[fin], pal_np[fin], rtol=3e-5, atol=3e-5)
+        jit_ref = jax.jit(lambda *a: spmv_blocked(*a, sr, use_pallas=False))
+        dt = _time(jit_ref, *args[:4])
+        flops = T * B * B * 2
+        emit(f"kernels/spmv_{sr.name}", dt * 1e6,
+             f"allclose={ok};jnp_gflops={flops / dt / 1e9:.2f}")
+        assert ok
+
+    # --- flash attention: 4k-token slice of the prefill shape -------------
+    Bb, S, H, K, d = 1, 512, 8, 2, 128
+    q = jnp.asarray(rng.normal(size=(Bb, S, H, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(Bb, S, K, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(Bb, S, K, d)), jnp.float32)
+    o_ref = flash_attention(q, k, v, causal=True, use_pallas=False)
+    o_pal = flash_attention(q, k, v, causal=True, use_pallas=True,
+                            interpret=True)
+    ok = bool(jnp.max(jnp.abs(o_ref - o_pal)) < 2e-4)
+    jit_ref = jax.jit(lambda *a: flash_attention(*a, causal=True,
+                                                 use_pallas=False))
+    dt = _time(jit_ref, q, k, v)
+    flops = 4 * Bb * H * S * S * d // 2  # causal half
+    emit("kernels/flash_attention", dt * 1e6,
+         f"allclose={ok};jnp_gflops={flops / dt / 1e9:.2f}")
+    assert ok
+
+    # --- decode attention: long-cache single token -------------------------
+    Bb, S, H, K, d = 4, 4096, 8, 2, 128
+    q = jnp.asarray(rng.normal(size=(Bb, H, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(Bb, S, K, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(Bb, S, K, d)), jnp.float32)
+    lens = jnp.asarray(rng.integers(S // 2, S, Bb), jnp.int32)
+    o_ref = decode_attention(q, k, v, lens, use_pallas=False)
+    o_pal = decode_attention(q, k, v, lens, use_pallas=True, interpret=True)
+    ok = bool(jnp.max(jnp.abs(o_ref - o_pal)) < 2e-4)
+    jit_ref = jax.jit(lambda *a: decode_attention(*a, use_pallas=False))
+    dt = _time(jit_ref, q, k, v, lens)
+    bytes_moved = 2 * Bb * S * K * d * 4
+    emit("kernels/decode_attention", dt * 1e6,
+         f"allclose={ok};jnp_gbps={bytes_moved / dt / 1e9:.2f}")
+    assert ok
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""§Roofline table generation from the dry-run JSONL records.
+
+Prints one CSV row per (arch x shape) cell plus the markdown table used in
+EXPERIMENTS.md.  Does NOT recompile anything — the dry-run is the
+measurement; this is the analysis.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit
+from benchmarks.roofline import load_cells, markdown_table
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run(write_markdown: bool = True) -> None:
+    path = os.path.join(RESULTS, "dryrun_single.jsonl")
+    if not os.path.exists(path):
+        emit("roofline/missing", 0.0, f"run `python -m repro.launch.dryrun --all --out {path}` first")
+        return
+    cells = load_cells(path)
+    for c in cells:
+        if c.skipped:
+            emit(f"roofline/{c.arch}/{c.shape}", 0.0, "skipped")
+            continue
+        emit(
+            f"roofline/{c.arch}/{c.shape}",
+            c.t_bound * 1e6,
+            f"bound={c.dominant};t_comp_ms={c.t_compute*1e3:.2f};"
+            f"t_mem_ms={c.t_memory*1e3:.2f};t_coll_ms={c.t_collective*1e3:.2f};"
+            f"useful={c.useful_ratio:.2f};roofline_frac={c.roofline_fraction:.3f}",
+        )
+    if write_markdown:
+        out = os.path.join(RESULTS, "roofline_table.md")
+        with open(out, "w") as f:
+            f.write(markdown_table(cells))
+        emit("roofline/table_written", 0.0, out)
+
+
+if __name__ == "__main__":
+    run()

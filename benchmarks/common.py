@@ -1,0 +1,66 @@
+"""Shared benchmark scaffolding: the scaled-down TR analogue + deployments.
+
+The paper's TR collection (19.4M vertices, 146 instances, 12 hosts) is
+scaled to a CPU-runnable replica that preserves the *relative* layout
+questions: temporal packing (paper i1/i20 -> i1/i6 here), subgraph bin
+packing (s20/s40 -> s4/s8), slice caching (c0/c14).  Benchmarks print
+``name,us_per_call,derived`` CSV rows (derived = quantities computed from
+the measurement, e.g. slice counts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, Tuple
+
+from repro.configs.base import GraphConfig
+from repro.core.generator import generate_collection
+from repro.gofs import GoFSStore, deploy_collection
+
+BENCH_GRAPH = GraphConfig(
+    name="tr-bench",
+    num_vertices=4096,
+    avg_degree=2.0,
+    num_instances=12,
+    num_partitions=4,
+    block_size=64,
+    instances_per_slice=6,
+    bins_per_partition=4,
+    cache_slots=14,
+    seed=5,
+)
+
+# layout configurations mirroring the paper's §VI-B grid
+LAYOUTS = {
+    "s4-i1": dict(bins_per_partition=4, instances_per_slice=1),
+    "s4-i6": dict(bins_per_partition=4, instances_per_slice=6),
+    "s8-i1": dict(bins_per_partition=8, instances_per_slice=1),
+    "s8-i6": dict(bins_per_partition=8, instances_per_slice=6),
+}
+
+_CACHE: Dict[str, Tuple[GraphConfig, str]] = {}
+
+
+def deployments(root: str = "/tmp/gofs_bench"):
+    """Deploy the bench collection under every layout config (once)."""
+    if _CACHE:
+        return _CACHE
+    tsg = generate_collection(BENCH_GRAPH)
+    for name, kw in LAYOUTS.items():
+        cfg = dataclasses.replace(BENCH_GRAPH, **kw)
+        d = os.path.join(root, name)
+        if not os.path.exists(os.path.join(d, "collection.json")):
+            deploy_collection(tsg, cfg, d)
+        _CACHE[name] = (cfg, d)
+    return _CACHE
+
+
+def store_for(name: str, cache_slots: int, **kw) -> GoFSStore:
+    deps = deployments()
+    cfg, root = deps[name]
+    return GoFSStore(root, cache_slots=cache_slots, **kw)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,162 @@
+"""Roofline model: turn dry-run records into the three-term analysis.
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  All inputs are PER-DEVICE quantities from the compiled SPMD module:
+
+  T_compute    = FLOPs / PEAK_FLOPS
+  T_memory     = bytes_accessed / HBM_BW
+  T_collective = sum_kind bytes_kind * ring_factor(kind) / ICI_BW
+
+Ring factors on a 16-ary mesh axis (k=16): all-gather and all-to-all move
+(k-1)/k of the op's output bytes per link; all-reduce = reduce-scatter +
+all-gather = ~2(k-1)/k; reduce-scatter outputs are post-division, so its
+factor is (k-1); collective-permute is a single hop.  (The dry-run stores
+aggregate bytes per kind; the per-axis refinement happens in the §Perf
+hillclimb where it matters.)
+
+Scan-body correction: cost_analysis counts while-loop bodies ONCE; the
+two-point (L, L/2) fit recovers per-layer body cost + outside cost, so
+``totals from fit`` = outside + per_layer * L.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+RING_FACTOR = {
+    "all-gather": 15.0 / 16.0,
+    "all-to-all": 15.0 / 16.0,
+    "all-reduce": 2.0 * 15.0 / 16.0,
+    "reduce-scatter": 15.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float  # per device, scan-corrected
+    bytes_hbm: float
+    coll_bytes: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float  # useful flops per device (6ND / 2ND)
+    useful_ratio: float  # model_flops / flops
+    roofline_fraction: float  # t_compute / max(all terms)
+    mem_gb: float
+    compile_s: float
+    skipped: Optional[str] = None
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+
+def _fit_totals(rec: Dict[str, Any]) -> Dict[str, Any]:
+    """Scan-corrected totals: prefer the unrolled-units fit, else raw."""
+    full = rec["full"]
+    if "fit" not in rec:
+        return {
+            "flops": full["flops"],
+            "bytes": full["bytes"],
+            "collectives": dict(full["collectives"]),
+        }
+    fit = rec["fit"]
+    coll = {k: max(v["total"], 0.0) for k, v in fit["collectives"].items()}
+    return {
+        "flops": max(fit["flops"]["total"], full["flops"]),
+        "bytes": max(fit["bytes"]["total"], full["bytes"]),
+        "collectives": coll,
+    }
+
+
+def model_flops_per_device(arch_cfg, shape, n_devices: int) -> float:
+    """6·N·D (train) or 2·N_active·D (serve fwd), D = global tokens."""
+    n = arch_cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / n_devices
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch / n_devices
+
+
+def analyze_record(rec: Dict[str, Any]) -> Optional[RooflineCell]:
+    if "skipped" in rec:
+        return RooflineCell(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec.get("mesh", ""),
+            flops=0, bytes_hbm=0, coll_bytes={}, t_compute=0, t_memory=0,
+            t_collective=0, dominant="-", model_flops=0, useful_ratio=0,
+            roofline_fraction=0, mem_gb=0, compile_s=0,
+            skipped=rec["skipped"],
+        )
+    if "error" in rec:
+        return None
+    from repro.configs import get_config, shape_by_name
+
+    totals = _fit_totals(rec)
+    t_comp = totals["flops"] / PEAK_FLOPS
+    t_mem = totals["bytes"] / HBM_BW
+    t_coll = sum(
+        b * RING_FACTOR.get(k, 1.0) / ICI_BW
+        for k, b in totals["collectives"].items()
+    )
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    cfg = get_config(rec["arch"])
+    shape = shape_by_name(rec["shape"])
+    mf = model_flops_per_device(cfg, shape, rec["num_devices"])
+    mem = rec["full"]["memory"]
+    mem_gb = ((mem.get("argument_size_in_bytes") or 0)
+              + (mem.get("temp_size_in_bytes") or 0)) / 1e9
+    t_bound = max(t_comp, t_mem, t_coll)
+    return RooflineCell(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        flops=totals["flops"], bytes_hbm=totals["bytes"],
+        coll_bytes=totals["collectives"],
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        dominant=dominant,
+        model_flops=mf,
+        useful_ratio=mf / totals["flops"] if totals["flops"] else 0.0,
+        roofline_fraction=(mf / PEAK_FLOPS) / t_bound if t_bound else 0.0,
+        mem_gb=mem_gb,
+        compile_s=rec["full"]["compile_seconds"],
+    )
+
+
+def load_cells(path: str) -> List[RooflineCell]:
+    out = []
+    for line in open(path):
+        c = analyze_record(json.loads(line))
+        if c is not None:
+            out.append(c)
+    return out
+
+
+def markdown_table(cells: List[RooflineCell]) -> str:
+    hdr = ("| arch | shape | T_comp (ms) | T_mem (ms) | T_coll (ms) | bound | "
+           "useful FLOPs ratio | roofline frac | mem GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in cells:
+        if c.skipped:
+            rows.append(f"| {c.arch} | {c.shape} | — | — | — | skipped | — | — | — |")
+            continue
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.t_compute*1e3:.2f} | "
+            f"{c.t_memory*1e3:.2f} | {c.t_collective*1e3:.2f} | "
+            f"{c.dominant} | {c.useful_ratio:.2f} | "
+            f"{c.roofline_fraction:.3f} | {c.mem_gb:.1f} |"
+        )
+    return hdr + "\n".join(rows)

@@ -1,0 +1,44 @@
+"""Benchmark runner: one section per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Usage:
+    PYTHONPATH=src python -m benchmarks.run [section ...]
+Sections: gofs_layout sssp_timesteps slices_read engine kernels roofline
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_engine,
+        bench_gofs_layout,
+        bench_kernels,
+        bench_roofline,
+        bench_slices_read,
+        bench_sssp_timesteps,
+    )
+
+    sections = {
+        "gofs_layout": bench_gofs_layout.run,     # paper Fig. 6
+        "sssp_timesteps": bench_sssp_timesteps.run,  # paper Fig. 7
+        "slices_read": bench_slices_read.run,     # paper Fig. 8
+        "engine": bench_engine.run,               # §II/IV superstep economy
+        "kernels": bench_kernels.run,             # §V hot-spot kernels
+        "roofline": bench_roofline.run,           # EXPERIMENTS §Roofline
+    }
+    wanted = sys.argv[1:] or list(sections)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in wanted:
+        try:
+            sections[name]()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED sections: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Temporal SSSP under changing traffic (paper §I's motivating example).
+
+A road-grid template with diurnal edge latencies: the shortest path from a
+depot evolves across 2-hour instances; the sequentially dependent iBSP
+carries distances between timesteps (a vertex only improves as new
+conditions are observed — incremental aggregation, §VI-A).
+
+  PYTHONPATH=src python examples/temporal_sssp.py
+"""
+import numpy as np
+
+from repro.core.algorithms import sssp
+from repro.core.blocked import build_blocked
+from repro.core.graph import (
+    AttributeDef, GraphInstance, GraphTemplate, TimeSeriesGraph,
+)
+from repro.core.partition import partition_graph
+
+
+def road_grid(n: int) -> GraphTemplate:
+    ids = np.arange(n * n).reshape(n, n)
+    src = np.concatenate([ids[:, :-1].ravel(), ids[:-1, :].ravel(),
+                          ids[:, 1:].ravel(), ids[1:, :].ravel()])
+    dst = np.concatenate([ids[:, 1:].ravel(), ids[1:, :].ravel(),
+                          ids[:, :-1].ravel(), ids[:-1, :].ravel()])
+    return GraphTemplate(
+        num_vertices=n * n, src=src.astype(np.int64), dst=dst.astype(np.int64),
+        edge_attrs=(AttributeDef("travel_time", "float32", default=1.0),),
+    )
+
+
+def main() -> None:
+    n = 32
+    tmpl = road_grid(n)
+    rng = np.random.default_rng(0)
+    instances = []
+    for t in range(12):  # one day, 2h windows
+        rush = 1.0 + 2.5 * np.exp(-((t - 4) ** 2) / 2) + 2.5 * np.exp(
+            -((t - 9) ** 2) / 2)  # two rush hours
+        w = (rng.gamma(3.0, 0.4, tmpl.num_edges) * rush).astype(np.float32)
+        instances.append(GraphInstance(
+            timestamp=t * 7200.0, duration=7200.0,
+            edge_values={"travel_time": w},
+        ))
+    tsg = TimeSeriesGraph(tmpl, instances)
+
+    assign = partition_graph(tmpl, 4)
+    bg = build_blocked(tmpl, assign, 64)
+    w = np.stack([tsg.edge_values(t, "travel_time") for t in range(len(tsg))])
+
+    depot = 0
+    # run the sequential pattern incrementally to inspect per-timestep state
+    print("t  reachable<40min  mean_dist  supersteps")
+    dist = None
+    for t in range(len(tsg)):
+        d_t, stats = sssp.run_blocked(bg, w[: t + 1], depot)
+        finite = np.isfinite(d_t)
+        print(f"{t:2d}  {int((d_t[finite] < 40).sum()):6d}        "
+              f"{d_t[finite].mean():8.2f}   {stats['supersteps'][-1]}")
+        dist = d_t
+    # distances only improve over time (incremental aggregation invariant)
+    d_first, _ = sssp.run_blocked(bg, w[:1], depot)
+    fin = np.isfinite(d_first)
+    assert np.all(dist[fin] <= d_first[fin] + 1e-5)
+    print("✓ incremental aggregation: final distances <= first-instance distances")
+
+
+if __name__ == "__main__":
+    main()

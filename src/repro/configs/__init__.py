@@ -1,0 +1,95 @@
+"""Config registry: ``get_config(arch_id)`` + the assigned shape grid."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (
+    ArchConfig,
+    GraphConfig,
+    GraphShapeConfig,
+    LM_SHAPES,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+)
+
+# arch id -> module name
+_ARCH_MODULES = {
+    "mistral-large-123b": "mistral_large_123b",
+    "glm4-9b": "glm4_9b",
+    "minitron-4b": "minitron_4b",
+    "starcoder2-7b": "starcoder2_7b",
+    "dbrx-132b": "dbrx_132b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "paligemma-3b": "paligemma_3b",
+    "whisper-medium": "whisper_medium",
+    "hymba-1.5b": "hymba_1_5b",
+    "xlstm-1.3b": "xlstm_1_3b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_graph_config(name: str = "small") -> GraphConfig:
+    mod = importlib.import_module("repro.configs.goffish_tr")
+    return {"full": mod.TR_FULL, "small": mod.TR_SMALL, "tiny": mod.TR_TINY}[name]
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    for s in LM_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell runs, with reason when skipped."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md §3)"
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return False, "encoder-only arch: no decode step"
+    return True, ""
+
+
+def all_cells() -> List[Tuple[str, str, bool, str]]:
+    """(arch_id, shape_name, applicable, reason) for the 40-cell grid."""
+    out = []
+    for aid in ARCH_IDS:
+        cfg = get_config(aid)
+        for s in LM_SHAPES:
+            ok, why = cell_applicable(cfg, s)
+            out.append((aid, s.name, ok, why))
+    return out
+
+
+__all__ = [
+    "ArchConfig",
+    "GraphConfig",
+    "GraphShapeConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "ShapeConfig",
+    "LM_SHAPES",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "ARCH_IDS",
+    "get_config",
+    "get_graph_config",
+    "shape_by_name",
+    "cell_applicable",
+    "all_cells",
+]

@@ -1,0 +1,300 @@
+"""Architecture + shape configuration for the repro framework.
+
+One ``ArchConfig`` covers every assigned family (dense / moe / vlm / audio /
+hybrid / ssm).  Family-specific knobs default to inert values so a config file
+only states what its architecture actually uses.
+
+Shapes are global (pre-sharding).  ``train_*`` shapes lower ``train_step``;
+``prefill_*`` lower the prefill half of ``serve_step``; ``decode_*`` /
+``long_*`` lower the single-new-token decode step against a KV cache of
+``seq_len``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """A single input-shape cell from the assignment."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+# The four LM shapes shared by all 10 assigned architectures.
+TRAIN_4K = ShapeConfig("train_4k", seq_len=4_096, global_batch=256, kind="train")
+PREFILL_32K = ShapeConfig("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill")
+DECODE_32K = ShapeConfig("decode_32k", seq_len=32_768, global_batch=128, kind="decode")
+LONG_500K = ShapeConfig("long_500k", seq_len=524_288, global_batch=1, kind="decode")
+
+LM_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # Every Nth layer is MoE (1 = all layers, as in dbrx / llama4-maverick-ish).
+    moe_every: int = 1
+    # llama4-style always-on shared expert alongside routed experts.
+    shared_expert: bool = False
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 16
+    conv_width: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """Complete architecture description.
+
+    ``family`` is one of: dense | moe | vlm | audio | hybrid | ssm.
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # Attention details
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    rope_theta: float = 10_000.0
+    rope_fraction: float = 1.0  # glm4 rotates only half the head dim
+    pos_embed: str = "rope"  # rope | sinusoidal | none
+    sliding_window: int = 0  # 0 = full attention
+    attn_logit_softcap: float = 0.0
+    max_seq_len: int = 524_288
+
+    # Activation / norm
+    mlp_activation: str = "swiglu"  # swiglu | geglu | gelu | relu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # Family extensions
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+
+    # [audio] enc-dec: encoder depth/width; frontend is a stub that provides
+    # precomputed frame embeddings of shape (batch, num_frames, d_model).
+    encoder_layers: int = 0
+    encoder_seq_len: int = 1_500  # whisper: 30s @ 50Hz after conv stub
+
+    # [vlm]: stub vision tower provides (batch, num_patches, d_model) patch
+    # embeddings prepended to the text sequence.
+    num_image_patches: int = 0
+
+    # [hybrid] hymba: attention and SSM heads run in parallel in each layer;
+    # meta tokens are learnable prefix tokens.
+    hybrid_ssm_heads: int = 0
+    meta_tokens: int = 0
+
+    # [ssm] xlstm: pattern of block kinds, e.g. ("m","m","s","m",...) cycled.
+    xlstm_slstm_every: int = 0  # every Nth block is sLSTM; 0 = pure mLSTM
+
+    # Whether full-attention makes long_500k inapplicable (sub-quadratic archs
+    # override to True).
+    supports_long_context: bool = False
+    # Encoder-only / enc-dec handling of decode shapes.
+    has_decoder: bool = True
+
+    # Training defaults
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: str = "full"  # none | dots | full
+
+    # Unroll layer scans (dry-run cost fitting: cost_analysis counts scan
+    # bodies once, so the fit compiles small UNROLLED configs and
+    # extrapolates body-per-unit x units).
+    scan_unroll: bool = False
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % self.num_kv_heads == 0, (
+            f"{self.name}: num_heads {self.num_heads} not divisible by "
+            f"num_kv_heads {self.num_kv_heads}"
+        )
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/head table rows, padded to 128 for TP divisibility
+        (whisper 51865 and hymba 32001 are not 16-divisible).  Logits beyond
+        ``vocab_size`` are masked in the loss/sampling paths."""
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe.num_experts > 0
+
+    def with_overrides(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- scan-unit scaling (dry-run cost fit) -----------------------------
+    def scan_units(self) -> int:
+        """Trips of the outer layer scan (what cost extrapolation counts):
+        dense/vlm/hybrid = layers; moe = layer groups; ssm = superblocks;
+        audio = decoder layers (encoder scales 1:1 alongside)."""
+        if self.is_moe:
+            return self.num_layers // self.moe.moe_every
+        if self.family == "ssm" and self.xlstm_slstm_every:
+            return self.num_layers // self.xlstm_slstm_every
+        return self.num_layers
+
+    def with_units(self, k: int) -> "ArchConfig":
+        """Config with exactly ``k`` outer-scan units (same structure)."""
+        kw = {}
+        if self.is_moe:
+            kw["num_layers"] = k * self.moe.moe_every
+        elif self.family == "ssm" and self.xlstm_slstm_every:
+            kw["num_layers"] = k * self.xlstm_slstm_every
+        else:
+            kw["num_layers"] = k
+        if self.encoder_layers:
+            kw["encoder_layers"] = k
+        return self.with_overrides(**kw)
+
+    def reduced(self) -> "ArchConfig":
+        """A tiny config of the same family for CPU smoke tests."""
+        kw = dict(
+            num_layers=max(2, min(4, self.num_layers)),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=max(1, min(2, self.num_kv_heads)),
+            head_dim=32,
+            d_ff=0 if self.d_ff == 0 else 256,
+            vocab_size=512,
+            max_seq_len=512,
+            encoder_layers=2 if self.encoder_layers else 0,
+            encoder_seq_len=32 if self.encoder_layers else self.encoder_seq_len,
+            num_image_patches=16 if self.num_image_patches else 0,
+            hybrid_ssm_heads=2 if self.hybrid_ssm_heads else 0,
+            meta_tokens=4 if self.meta_tokens else 0,
+            sliding_window=64 if self.sliding_window else 0,
+            remat="none",
+        )
+        if self.is_moe:
+            kw["moe"] = MoEConfig(
+                num_experts=4,
+                top_k=min(2, self.moe.top_k),
+                capacity_factor=self.moe.capacity_factor,
+                moe_every=self.moe.moe_every,
+            )
+        if self.family in ("ssm", "hybrid"):
+            kw["ssm"] = SSMConfig(state_dim=8, conv_width=4, expand=2)
+        return self.with_overrides(**kw)
+
+    # Parameter count (analytic; excludes biases which we do not use except
+    # where an arch requires them).  Used for 6·N·D roofline cross-checks.
+    def param_count(self) -> int:
+        d, h = self.d_model, self.head_dim
+        attn = d * (self.num_heads * h) + 2 * d * (self.num_kv_heads * h) + (self.num_heads * h) * d
+        if self.mlp_activation in ("swiglu", "geglu"):
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        if self.is_moe:
+            dense_every = self.moe.moe_every
+            n_moe = self.num_layers // dense_every
+            n_dense = self.num_layers - n_moe
+            router = d * self.moe.num_experts
+            n_ffn = self.moe.num_experts + (1 if self.moe.shared_expert else 0)
+            per_layer_moe = attn + n_ffn * mlp + router + 2 * d
+            per_layer_dense = attn + mlp + 2 * d
+            body = n_moe * per_layer_moe + n_dense * per_layer_dense
+        elif self.family == "ssm":
+            body = self.num_layers * self._xlstm_block_params()
+        elif self.family == "hybrid":
+            ssm_inner = self.ssm.expand * d
+            ssm = (
+                d * ssm_inner * 2
+                + ssm_inner * self.ssm.conv_width
+                + ssm_inner * (self.ssm.state_dim * 2 + self._dt_rank() + 1)
+                + self._dt_rank() * ssm_inner
+                + ssm_inner * d
+            )
+            body = self.num_layers * (attn + ssm + mlp + 3 * d)
+        else:
+            body = self.num_layers * (attn + mlp + 2 * d)
+        emb = self.vocab_size * d
+        head = 0 if self.tie_embeddings else self.vocab_size * d
+        enc = 0
+        if self.encoder_layers:
+            enc_attn = 4 * d * d
+            enc = self.encoder_layers * (enc_attn + mlp + 2 * d)
+            # decoder cross-attention adds one more attn block per layer
+            body += self.num_layers * enc_attn
+        return body + emb + head + enc + d
+
+    def _dt_rank(self) -> int:
+        return self.ssm.dt_rank or -(-self.d_model // 16)
+
+    def _xlstm_block_params(self) -> int:
+        d = self.d_model
+        # mLSTM block: up-proj 2x, qkv on inner dim, gates, down-proj (xLSTM paper pf=2)
+        inner = 2 * d
+        m = d * inner * 2 + 3 * inner * inner // max(1, self.num_heads) + 3 * inner + inner * d
+        return m + 2 * d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of num_experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        mlp = 3 * d * self.d_ff
+        inactive = (self.moe.num_experts - self.moe.top_k) * mlp
+        n_moe = self.num_layers // self.moe.moe_every
+        return self.param_count() - n_moe * inactive
+
+
+@dataclass(frozen=True)
+class GraphShapeConfig:
+    """Shape cell for the GoFFish graph workloads (the paper's own kind)."""
+
+    name: str
+    num_vertices: int
+    num_edges: int
+    num_instances: int
+    block_size: int = 128
+    pattern: str = "sequential"  # independent | eventually | sequential
+
+
+@dataclass(frozen=True)
+class GraphConfig:
+    """Configuration of a time-series graph collection (paper §III/§VI)."""
+
+    name: str
+    num_vertices: int
+    avg_degree: float
+    num_instances: int
+    num_partitions: int
+    block_size: int = 128
+    # GoFS layout knobs (paper §V-B..E)
+    instances_per_slice: int = 20  # temporal packing (i1/i20)
+    bins_per_partition: int = 20  # subgraph bin packing (s20/s40)
+    cache_slots: int = 14  # LRU slice cache (c0/c14)
+    seed: int = 0

@@ -1,0 +1,29 @@
+"""hymba-1.5b [hybrid] — arXiv:2411.13676.  Parallel attention + Mamba heads.
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Each layer runs attention heads and SSM (Mamba) heads in PARALLEL on the same
+input and fuses their (normalized) outputs.  Most layers use sliding-window
+attention; 128 learnable meta tokens are prepended.  Sub-quadratic ->
+long_500k applies.
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1_600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5_504,
+    vocab_size=32_001,
+    rope_theta=10_000.0,
+    sliding_window=1_024,
+    mlp_activation="swiglu",
+    norm="rmsnorm",
+    ssm=SSMConfig(state_dim=16, conv_width=4, expand=2),
+    hybrid_ssm_heads=25,
+    meta_tokens=128,
+    supports_long_context=True,
+)

@@ -1,0 +1,28 @@
+"""paligemma-3b [vlm] — arXiv:2407.07726.  SigLIP vision tower + Gemma-2B LM.
+
+Backbone (assigned): 18L d_model=2048 8H (GQA kv=1, i.e. MQA) d_ff=16384
+vocab=257216.  Gemma uses head_dim=256, GeGLU, RMSNorm, tied embeddings.
+
+The SigLIP frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings of shape (batch, num_image_patches, d_model)
+which are prepended to the text sequence (prefix-LM style).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="paligemma-3b",
+    family="vlm",
+    num_layers=18,
+    d_model=2_048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16_384,
+    vocab_size=257_216,
+    rope_theta=10_000.0,
+    mlp_activation="geglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    num_image_patches=256,  # 224px / 14px patches -> 16x16
+    supports_long_context=False,
+)

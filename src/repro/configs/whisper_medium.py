@@ -1,0 +1,29 @@
+"""whisper-medium [audio] — arXiv:2212.04356.  Encoder-decoder transformer.
+
+Assigned backbone: 24L d_model=1024 16H (kv=16, i.e. MHA) d_ff=4096
+vocab=51865.  24 encoder + 24 decoder layers, GELU MLP, LayerNorm,
+sinusoidal positions (no RoPE).
+
+The conv1d audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (batch, 1500, d_model) — 30 s of audio
+at 50 Hz after the two stride-2 convs.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,
+    d_model=1_024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4_096,
+    vocab_size=51_865,
+    pos_embed="sinusoidal",
+    mlp_activation="gelu",
+    norm="layernorm",
+    encoder_layers=24,
+    encoder_seq_len=1_500,
+    supports_long_context=False,
+)

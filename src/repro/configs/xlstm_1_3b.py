@@ -1,0 +1,26 @@
+"""xlstm-1.3b [ssm] — arXiv:2405.04517.  sLSTM + mLSTM blocks (xLSTM[7:1]).
+
+48L d_model=2048 4H (kv=4) d_ff=0 vocab=50304.  d_ff=0 per the assignment:
+feed-forward capacity lives inside the mLSTM (projection factor 2) and sLSTM
+(gated FFN, pf=4/3) blocks.  Every 8th block is sLSTM (7:1 ratio).
+Recurrent, O(1) state per token -> long_500k applies.
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2_048,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50_304,
+    pos_embed="none",  # recurrence carries position
+    mlp_activation="swiglu",
+    norm="layernorm",
+    ssm=SSMConfig(state_dim=16, conv_width=4, expand=2),
+    xlstm_slstm_every=8,
+    supports_long_context=True,
+)

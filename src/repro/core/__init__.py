@@ -1,0 +1,36 @@
+"""GoFFish core: time-series graph model, partitioning, blocked layout,
+sub-graph-centric iBSP engines (host-faithful + TPU-blocked), algorithms."""
+from repro.core.graph import (
+    AttributeDef,
+    GraphInstance,
+    GraphTemplate,
+    TimeSeriesGraph,
+)
+from repro.core.ibsp import (
+    ComputeContext,
+    IBSPResult,
+    InMemoryProvider,
+    InstanceProvider,
+    MergeContext,
+    SubgraphInstance,
+    run_ibsp,
+)
+from repro.core.partition import (
+    build_partitions,
+    discover_subgraphs,
+    edge_cut,
+    partition_graph,
+)
+from repro.core.semiring import MIN_PLUS, PLUS_MUL, Semiring
+from repro.core.subgraph import SubgraphTopology, build_subgraphs
+from repro.core.superstep import Comm, DeviceGraph, bsp_fixpoint, device_graph
+
+__all__ = [
+    "AttributeDef", "GraphInstance", "GraphTemplate", "TimeSeriesGraph",
+    "ComputeContext", "IBSPResult", "InMemoryProvider", "InstanceProvider",
+    "MergeContext", "SubgraphInstance", "run_ibsp",
+    "build_partitions", "discover_subgraphs", "edge_cut", "partition_graph",
+    "MIN_PLUS", "PLUS_MUL", "Semiring",
+    "SubgraphTopology", "build_subgraphs",
+    "Comm", "DeviceGraph", "bsp_fixpoint", "device_graph",
+]

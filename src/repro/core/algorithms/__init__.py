@@ -1,0 +1,3 @@
+from repro.core.algorithms import sssp, pagerank, nhop, components, tracking
+
+__all__ = ["sssp", "pagerank", "nhop", "components", "tracking"]

@@ -1,0 +1,72 @@
+"""Connected components per instance (independent pattern) — the classic
+label-propagation workload; exercises min-plus with 0/inf weights.
+
+Used by tests as a structural invariant check (components of the blocked
+path must match union-find on the host) and by the benchmark suite as a
+second independent-pattern application beside PageRank.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.blocked import BlockedGraph
+from repro.core.semiring import INF, MIN_PLUS
+from repro.core.superstep import Comm, bsp_fixpoint, device_graph
+
+
+def run_blocked(
+    bg: BlockedGraph,
+    src: np.ndarray,
+    dst: np.ndarray,
+    active: np.ndarray,  # (E,) 0/1 — edges active in this instance
+    *,
+    comm: Comm = Comm(),
+    use_pallas: bool = False,
+) -> np.ndarray:
+    """Min-label propagation over UNDIRECTED active edges.  Returns (V,)
+    component labels (min vertex id in component)."""
+    V = len(bg.part_of)
+    # symmetrize: propagate labels both ways
+    w = np.where(active > 0, 0.0, INF).astype(np.float32)
+    # build a temporary blocked graph over the symmetrized edge set by
+    # filling both orientations: run on a doubled edge list
+    from repro.core.graph import GraphTemplate
+    from repro.core.blocked import build_blocked
+
+    tmpl2 = GraphTemplate(
+        num_vertices=V,
+        src=np.concatenate([src, dst]),
+        dst=np.concatenate([dst, src]),
+    )
+    bg2 = build_blocked(tmpl2, bg.part_of, bg.block_size)
+    w2 = np.concatenate([w, w])
+    dg = device_graph(bg2, bg2.fill_local(w2), bg2.fill_boundary(w2))
+    labels0 = np.arange(V, dtype=np.float32)
+    x0 = jnp.asarray(bg2.scatter_vertex(labels0, INF))
+    x, _ = bsp_fixpoint(x0, dg, MIN_PLUS, comm=comm, use_pallas=use_pallas,
+                        max_supersteps=256)
+    return bg2.gather_vertex(np.asarray(x)).astype(np.int64)
+
+
+def oracle(
+    src: np.ndarray, dst: np.ndarray, active: np.ndarray, num_vertices: int
+) -> np.ndarray:
+    """Union-find oracle; labels = min vertex id per component."""
+    parent = np.arange(num_vertices)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v, a in zip(src, dst, active):
+        if a > 0:
+            ru, rv = find(int(u)), find(int(v))
+            if ru != rv:
+                parent[max(ru, rv)] = min(ru, rv)
+    return np.array([find(int(i)) for i in range(num_vertices)], np.int64)

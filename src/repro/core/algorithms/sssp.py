@@ -1,0 +1,202 @@
+"""Temporal SSSP (paper §VI-A/C): sequentially dependent pattern.
+
+Each timestep runs SSSP on its instance's edge weights (latency); distances
+are *incrementally aggregated* between instances — the previous timestep's
+distances seed the next (a vertex can only improve as new conditions are
+observed), matching the paper's iBSP SSSP.
+
+Two implementations share semantics:
+
+* ``compute``          — faithful host Compute: Dijkstra inside the subgraph
+  (the paper's shared-memory-algorithm reuse), boundary relaxations via
+  ``SendToSubgraph``, seed handoff via ``SendToNextTimeStep``.
+* ``run_blocked``      — TPU path: min-plus ``bsp_fixpoint`` per timestep,
+  scanned over instances carrying the distance vector.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocked import BlockedGraph
+from repro.core.ibsp import ComputeContext, InstanceProvider, run_ibsp
+from repro.core.semiring import INF, MIN_PLUS
+from repro.core.superstep import Comm, DeviceGraph, bsp_fixpoint, device_graph
+
+WEIGHT_ATTR = "latency"
+
+
+# --------------------------------------------------------------------------
+# Faithful host implementation (Compute + Dijkstra per subgraph)
+# --------------------------------------------------------------------------
+
+def _dijkstra_local(
+    topo, weights: np.ndarray, dist: np.ndarray, seeds: List[int]
+) -> Tuple[np.ndarray, List[Tuple[int, float]]]:
+    """Multi-source Dijkstra over LOCAL edges from ``seeds`` (local idx).
+
+    Returns (updated dist, relaxations over remote edges as
+    (remote_edge_row, new_distance))."""
+    indptr, indices, eids = topo.local_adjacency()
+    # weights are in local-edge order (topo.local_edge_id order)
+    eid_to_w = {int(e): float(w) for e, w in zip(topo.local_edge_id, weights)}
+    heap = [(dist[s], int(s)) for s in seeds]
+    heapq.heapify(heap)
+    while heap:
+        d, u = heapq.heappop(heap)
+        if d > dist[u]:
+            continue
+        for k in range(indptr[u], indptr[u + 1]):
+            v = int(indices[k])
+            w = eid_to_w[int(eids[k])]
+            nd = d + w
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(heap, (nd, v))
+    return dist
+
+
+def make_compute(source_vertex: int):
+    """Compute closure for the sequentially dependent SSSP.
+
+    Per-subgraph state (distances) is carried across supersteps in
+    ``ctx.subgraph`` scope via an external dict keyed by (sgid) — the engine
+    re-loads instances each superstep, so state lives here (the paper's
+    subgraph state survives within a timestep's BSP).
+    """
+    state: Dict[int, np.ndarray] = {}
+    result: Dict[int, np.ndarray] = {}
+
+    def compute(ctx: ComputeContext) -> None:
+        topo = ctx.subgraph.topology
+        n = topo.num_vertices
+        weights = ctx.subgraph.local_edge_values[WEIGHT_ATTR]
+        rweights = ctx.subgraph.remote_edge_values[WEIGHT_ATTR]
+
+        if ctx.superstep == 1:
+            # seed: previous timestep's result (sequential handoff through
+            # the per-subgraph state dict — in-process equivalent of the
+            # paper's SendToNextTimeStep carrying end state) or inf
+            if ctx.timestep == 0:
+                dist = np.full(n, INF)
+            else:
+                dist = state.get(topo.sgid, np.full(n, INF)).copy()
+            if source_vertex in topo.global_to_local:
+                dist[topo.global_to_local[source_vertex]] = 0.0
+            seeds = [i for i in range(n) if np.isfinite(dist[i])]
+        else:
+            dist = state[topo.sgid]
+            seeds = []
+            for v_global, d in ctx.messages:  # boundary relaxations
+                li = topo.global_to_local[int(v_global)]
+                if d < dist[li]:
+                    dist[li] = d
+                    seeds.append(li)
+
+        if seeds:
+            dist = _dijkstra_local(topo, weights, dist, seeds)
+            # relax remote edges; message the owning subgraph
+            for i in range(len(topo.remote_src)):
+                s = int(topo.remote_src[i])
+                nd = dist[s] + float(rweights[i])
+                if np.isfinite(nd):
+                    ctx.send_to_subgraph(
+                        int(topo.remote_dst_sgid[i]),
+                        (int(topo.remote_dst_vertex[i]), nd),
+                    )
+        state[topo.sgid] = dist
+        result[topo.sgid] = dist
+        ctx.vote_to_halt()
+
+    compute.state = state
+    compute.result = result
+    return compute
+
+
+def run_host(
+    provider: InstanceProvider,
+    source_vertex: int,
+    *,
+    workers: int = 0,
+) -> Tuple[Dict[int, np.ndarray], Any]:
+    """Faithful sequentially-dependent temporal SSSP.  Returns
+    ({sgid: final distances (local order)}, IBSPResult)."""
+    compute = make_compute(source_vertex)
+    res = run_ibsp(provider, compute, pattern="sequential", workers=workers)
+    return compute.result, res
+
+
+# --------------------------------------------------------------------------
+# Blocked TPU implementation
+# --------------------------------------------------------------------------
+
+def run_blocked(
+    bg: BlockedGraph,
+    instance_weights: np.ndarray,  # (I, E) per-instance edge latency
+    source_vertex: int,
+    *,
+    comm: Comm = Comm(),
+    subgraph_centric: bool = True,
+    use_pallas: bool = False,
+    max_supersteps: int = 64,
+) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+    """Temporal SSSP over all instances (sequential pattern, lax.scan).
+
+    Returns (final distances (V,), stats per timestep).
+    """
+    I = instance_weights.shape[0]
+    lt = np.stack([bg.fill_local(instance_weights[i]) for i in range(I)])
+    bt = np.stack([bg.fill_boundary(instance_weights[i]) for i in range(I)])
+    dg0 = device_graph(bg, lt[0], bt[0])
+
+    x0 = jnp.asarray(bg.scatter_vertex(np.full(bg.part_of.shape, INF), INF))
+    p = int(bg.part_of[source_vertex])
+    l = int(bg.local_of[source_vertex])
+    x0 = x0.at[p, l].set(0.0)
+
+    lt_j, bt_j = jnp.asarray(lt), jnp.asarray(bt)
+
+    def step(x, tb):
+        tiles, btiles = tb
+        dg = DeviceGraph(
+            block_size=dg0.block_size, num_boundary=dg0.num_boundary,
+            rows=dg0.rows, cols=dg0.cols, tiles=tiles,
+            brows=dg0.brows, bcols=dg0.bcols, btiles=btiles,
+            out_slot=dg0.out_slot, out_local=dg0.out_local,
+            out_mask=dg0.out_mask, vmask=dg0.vmask,
+        )
+        x, stats = bsp_fixpoint(
+            x, dg, MIN_PLUS, comm=comm, subgraph_centric=subgraph_centric,
+            use_pallas=use_pallas, max_supersteps=max_supersteps,
+        )
+        return x, (stats["supersteps"], stats["local_sweeps"])
+
+    x, (ss, lsw) = jax.lax.scan(step, x0, (lt_j, bt_j))
+    dist = bg.gather_vertex(np.asarray(x))
+    return dist, {"supersteps": np.asarray(ss), "local_sweeps": np.asarray(lsw)}
+
+
+# --------------------------------------------------------------------------
+# numpy oracle (Bellman-Ford over the full graph, incremental across time)
+# --------------------------------------------------------------------------
+
+def oracle(
+    src: np.ndarray, dst: np.ndarray, instance_weights: np.ndarray,
+    num_vertices: int, source_vertex: int,
+) -> np.ndarray:
+    dist = np.full(num_vertices, INF)
+    dist[source_vertex] = 0.0
+    for t in range(instance_weights.shape[0]):
+        w = instance_weights[t]
+        changed = True
+        while changed:
+            relaxed = dist[src] + w
+            new = dist.copy()
+            np.minimum.at(new, dst, relaxed)
+            changed = bool(np.any(new < dist))
+            dist = new
+    return dist

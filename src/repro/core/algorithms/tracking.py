@@ -1,0 +1,160 @@
+"""Vehicle tracking (paper Algorithm 1): sequentially dependent traversal.
+
+The graph template is a road network; each instance's vertex attribute
+``plates`` holds the license IDs seen at that intersection during the
+window.  Starting from an initial location, each timestep traces the
+vehicle spatially (bounded-depth search across subgraphs via superstep
+messages) until the trail goes cold in that instance, then hands the last
+known location to the next timestep (``SendToNextTimeStep``).
+
+Host path: faithful Alg. 1 — DFS per subgraph, remote handoff messages,
+(vertex, timestamp) carried between timesteps.  Blocked path: per timestep,
+a masked min-plus wavefront from the previous sighting restricted to
+vertices observing the plate.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.blocked import BlockedGraph
+from repro.core.ibsp import ComputeContext, InstanceProvider, run_ibsp
+from repro.core.semiring import INF, MIN_PLUS
+from repro.core.superstep import Comm, bsp_fixpoint, device_graph
+
+PLATE_ATTR = "plate"  # int vertex attribute: vehicle id seen (-1 = none)
+
+
+def make_compute(plate: int, initial_vertex: int, search_depth: int = 4):
+    """Alg. 1 Compute.  Messages within a timestep: (vertex, depth_left).
+    Messages across timesteps (via state dict): last sighting vertex."""
+    state: Dict[str, Any] = {"last_seen": initial_vertex, "trace": []}
+
+    def compute(ctx: ComputeContext) -> None:
+        topo = ctx.subgraph.topology
+        plates = ctx.subgraph.vertex_values[PLATE_ATTR]
+
+        if ctx.superstep == 1:
+            roots: List[Tuple[int, int]] = []
+            v = state["last_seen"]
+            if v is not None and int(v) in topo.global_to_local:
+                roots.append((topo.global_to_local[int(v)], search_depth))
+        else:
+            roots = [
+                (topo.global_to_local[int(v)], int(d))
+                for v, d in ctx.messages
+                if int(v) in topo.global_to_local
+            ]
+
+        if not roots:
+            ctx.vote_to_halt()
+            return
+
+        # DFS on the subgraph from the roots (paper line 17)
+        indptr, indices, _ = topo.local_adjacency()
+        best: Optional[int] = None
+        seen_depth: Dict[int, int] = {}
+        stack = list(roots)
+        while stack:
+            u, depth = stack.pop()
+            if seen_depth.get(u, -1) >= depth:
+                continue
+            seen_depth[u] = depth
+            if int(plates[u]) == plate:
+                g = int(topo.vertices[u])
+                if best is None or g < best:
+                    best = g
+            if depth > 0:
+                for k in range(indptr[u], indptr[u + 1]):
+                    stack.append((int(indices[k]), depth - 1))
+        # remote handoff (paper lines 18-21)
+        remote_by_src = topo.remote_by_src()
+        for u, depth in seen_depth.items():
+            if depth > 0:
+                for i in remote_by_src.get(u, []):
+                    ctx.send_to_subgraph(
+                        int(topo.remote_dst_sgid[i]),
+                        (int(topo.remote_dst_vertex[i]), depth - 1),
+                    )
+        if best is not None:
+            # found in this instance: remember (monotone min for determinism)
+            cur = state.get("found_at")
+            state["found_at"] = best if cur is None else min(cur, best)
+        ctx.vote_to_halt()
+
+    def on_timestep_end(t_idx: int) -> None:
+        found = state.pop("found_at", None)
+        if found is not None:
+            state["last_seen"] = found
+            state["trace"].append((t_idx, found))
+
+    compute.state = state
+    compute.on_timestep_end = on_timestep_end
+    return compute
+
+
+def run_host(
+    provider: InstanceProvider,
+    plate: int,
+    initial_vertex: int,
+    *,
+    search_depth: int = 4,
+    workers: int = 0,
+) -> Tuple[List[Tuple[int, int]], Any]:
+    """Returns (trace [(timestep, vertex), ...], IBSPResult)."""
+    compute = make_compute(plate, initial_vertex, search_depth)
+    # sequential pattern with an end-of-timestep hook: run timesteps one by
+    # one so the state handoff (Alg. 1 lines 22-27) lands between instances.
+    from repro.core.ibsp import BSPStats, IBSPResult, _TimestepBSP
+
+    total = BSPStats()
+    per_ts = []
+    for t in range(provider.num_timesteps()):
+        bsp = _TimestepBSP(provider, t, compute, {}, [], None)
+        bsp.run()
+        compute.on_timestep_end(t)
+        per_ts.append(bsp.stats)
+        total.merge_from(bsp.stats)
+    return compute.state["trace"], IBSPResult(None, [], total, per_ts)
+
+
+# --------------------------------------------------------------------------
+# Blocked TPU implementation
+# --------------------------------------------------------------------------
+
+def run_blocked(
+    bg: BlockedGraph,
+    instance_plates: np.ndarray,  # (I, V) int
+    plate: int,
+    initial_vertex: int,
+    *,
+    search_depth: int = 4,
+    comm: Comm = Comm(),
+    use_pallas: bool = False,
+) -> List[Tuple[int, int]]:
+    """Masked wavefront tracker.  Returns trace [(timestep, vertex)]."""
+    I, V = instance_plates.shape
+    E = len(bg.le_edge_id) + len(bg.re_edge_id)  # every edge local xor cut
+    w = np.ones(E, np.float32)
+    dg = device_graph(bg, bg.fill_local(w), bg.fill_boundary(w))
+    trace: List[Tuple[int, int]] = []
+    last = initial_vertex
+    for t in range(I):
+        x0 = jnp.asarray(bg.scatter_vertex(np.full(V, INF, np.float32), INF))
+        p, l = int(bg.part_of[last]), int(bg.local_of[last])
+        x0 = x0.at[p, l].set(0.0)
+        hops, _ = bsp_fixpoint(
+            x0, dg, MIN_PLUS, comm=comm, subgraph_centric=True,
+            use_pallas=use_pallas,
+        )
+        hv = bg.gather_vertex(np.asarray(hops))
+        cand = np.nonzero(
+            (hv <= search_depth) & (instance_plates[t] == plate)
+        )[0]
+        if len(cand):
+            last = int(cand.min())
+            trace.append((t, last))
+    return trace

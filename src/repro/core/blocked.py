@@ -1,0 +1,260 @@
+"""Block-sparse partitioned graph: the TPU-facing layout (DESIGN.md §2).
+
+The paper's template/instance split is what makes this layout efficient:
+*topology* (which 128x128 adjacency tiles are non-empty, which tile slot each
+edge occupies, the boundary-vertex index space) is computed ONCE from the
+template; each *instance* only re-fills tile values from its edge-attribute
+array with a precomputed O(E) scatter.
+
+Per-partition data (all partitions padded to identical shapes so they stack
+into SPMD arrays with a leading partition axis):
+
+* local adjacency   — tiles over (local vertex) x (local vertex), transposed
+  orientation: tile[t, i, j] = weight of edge (row_block*B + i -> col_block*B
+  + j), reduced over i during SpMV, i.e. y[dst] = add_u mul(x[src], w).
+* incoming boundary — tiles over (global boundary slot) x (local vertex) for
+  cut edges arriving at this partition.
+* out_slot          — local index -> global boundary slot scatter map for
+  vertices this partition must publish (it owns them and some other
+  partition reads them).
+
+The boundary exchange is a single ``psum``/``pmin`` of a dense
+(num_boundary,) buffer per superstep — O(cut vertices), the blocked analogue
+of Gopher's O(cut edges) message win over vertex-centric O(edges).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import GraphTemplate
+from repro.core.semiring import INF
+
+
+@dataclass
+class BlockedGraph:
+    """Static blocked structure for all partitions (host-side, numpy)."""
+
+    block_size: int
+    n_parts: int
+    # --- vertex numbering -------------------------------------------------
+    # global vertex id -> (partition, local index); locals are contiguous,
+    # grouped bin-major (paper §V-D ordered iterators), padded to B multiple.
+    part_of: np.ndarray  # (V,) int32
+    local_of: np.ndarray  # (V,) int32
+    global_of: np.ndarray  # (P, Vp) int64, -1 = padding
+    vp: int  # padded local vertex count (same for all partitions)
+    # --- local adjacency tiles ---------------------------------------------
+    tiles_rc: np.ndarray  # (P, T, 2) int32 (row_block, col_block), -1 = pad
+    n_tiles: np.ndarray  # (P,) int32 valid tile count
+    # edge -> (partition, tile, i, j) fill map for local edges
+    le_edge_id: np.ndarray  # (Lp_total,) int64 template edge ids
+    le_part: np.ndarray  # (Lp_total,) int32
+    le_flat: np.ndarray  # (Lp_total,) int64 flat index into (T*B*B) per part
+    # --- boundary ----------------------------------------------------------
+    num_boundary: int  # padded to B multiple
+    # remote (cut) edges: src published at a boundary slot, consumed by dst's
+    # partition through boundary tiles.
+    bslot_of_src: np.ndarray  # (num_boundary,) int64 global vertex publishing
+    out_slot: np.ndarray  # (P, Omax) int32 boundary slot per published vertex
+    out_local: np.ndarray  # (P, Omax) int32 local index of published vertex
+    n_out: np.ndarray  # (P,) int32
+    btiles_rc: np.ndarray  # (P, Tb, 2) int32 (boundary_block, col_block)
+    n_btiles: np.ndarray  # (P,) int32
+    re_edge_id: np.ndarray  # (Rp_total,) int64 template edge ids (cut edges)
+    re_part: np.ndarray  # (Rp_total,) int32 destination partition
+    re_flat: np.ndarray  # (Rp_total,) int64 flat index into (Tb*B*B) per part
+
+    @property
+    def t_max(self) -> int:
+        return self.tiles_rc.shape[1]
+
+    @property
+    def tb_max(self) -> int:
+        return self.btiles_rc.shape[1]
+
+    @property
+    def o_max(self) -> int:
+        return self.out_slot.shape[1]
+
+    # ------------------------------------------------------------------ fill
+    # Parallel edges between the same (src, dst) land in the same tile slot;
+    # they must be COMBINED with the semiring add (min for tropical / sum for
+    # arithmetic), never overwritten — the zero value selects the op.
+    def fill_local(self, weights: np.ndarray, zero: float = INF) -> np.ndarray:
+        """Edge weights (E,) -> local tile values (P, T, B, B)."""
+        B = self.block_size
+        vals = np.full((self.n_parts, self.t_max * B * B), zero, np.float32)
+        op = np.minimum if zero == INF else np.add
+        op.at(vals, (self.le_part, self.le_flat), weights[self.le_edge_id])
+        return vals.reshape(self.n_parts, self.t_max, B, B)
+
+    def fill_boundary(self, weights: np.ndarray, zero: float = INF) -> np.ndarray:
+        """Edge weights (E,) -> boundary tile values (P, Tb, B, B)."""
+        B = self.block_size
+        vals = np.full((self.n_parts, self.tb_max * B * B), zero, np.float32)
+        op = np.minimum if zero == INF else np.add
+        op.at(vals, (self.re_part, self.re_flat), weights[self.re_edge_id])
+        return vals.reshape(self.n_parts, self.tb_max, B, B)
+
+    # ------------------------------------------------------------- vertex io
+    def scatter_vertex(self, values: np.ndarray, pad: float) -> np.ndarray:
+        """Global (V,) vertex values -> padded per-partition (P, Vp)."""
+        out = np.full((self.n_parts, self.vp), pad, np.float32)
+        out[self.part_of, self.local_of] = values
+        return out
+
+    def gather_vertex(self, padded: np.ndarray) -> np.ndarray:
+        """Padded per-partition (P, Vp) -> global (V,) vertex values."""
+        return np.asarray(padded)[self.part_of, self.local_of]
+
+
+def build_blocked(
+    template: GraphTemplate,
+    assign: np.ndarray,
+    block_size: int = 128,
+    *,
+    vertex_order: Optional[np.ndarray] = None,
+) -> BlockedGraph:
+    """Compute the static blocked structure from template + partitioning.
+
+    ``vertex_order``: optional (V,) permutation controlling local numbering
+    within each partition (bin-major subgraph order from gofs.layout slots in
+    here; default = ascending global id).
+    """
+    B = block_size
+    V = template.num_vertices
+    P = int(assign.max()) + 1 if len(assign) else 1
+    src, dst = template.src, template.dst
+
+    # --- local numbering, grouped by partition in the given order ----------
+    order = vertex_order if vertex_order is not None else np.arange(V)
+    part_of = assign.astype(np.int32)
+    local_of = np.zeros(V, np.int32)
+    counts = np.zeros(P, np.int64)
+    globals_per_part: List[List[int]] = [[] for _ in range(P)]
+    for v in order:
+        p = part_of[v]
+        local_of[v] = counts[p]
+        counts[p] += 1
+        globals_per_part[p].append(int(v))
+    vp = int(-(-max(1, counts.max()) // B) * B)
+    global_of = np.full((P, vp), -1, np.int64)
+    for p in range(P):
+        g = globals_per_part[p]
+        global_of[p, : len(g)] = g
+
+    # --- local edges -> tiles ----------------------------------------------
+    local_mask = part_of[src] == part_of[dst]
+    le = np.nonzero(local_mask)[0]
+    le_p = part_of[src[le]]
+    li, lj = local_of[src[le]], local_of[dst[le]]  # row = src, col = dst
+    rb, cb = li // B, lj // B
+    ri, cj = li % B, lj % B
+    # unique tiles ordered (part, col_block, row_block): col-major order is
+    # what the Pallas kernel's sequential-grid output accumulation needs.
+    nvb = vp // B
+    tile_key = (le_p.astype(np.int64) * nvb + cb) * nvb + rb
+    uniq, tile_idx = np.unique(tile_key, return_inverse=True)
+    t_part = uniq // (nvb * nvb)
+    t_cb = (uniq // nvb) % nvb
+    t_rb = uniq % nvb
+    n_tiles = np.bincount(t_part.astype(np.int64), minlength=P).astype(np.int32)
+    t_max = int(max(1, n_tiles.max()))
+    tiles_rc = np.full((P, t_max, 2), -1, np.int32)
+    # index of each unique tile within its partition
+    tile_local = np.zeros(len(uniq), np.int64)
+    c = np.zeros(P, np.int64)
+    for i in range(len(uniq)):
+        p = int(t_part[i])
+        tile_local[i] = c[p]
+        tiles_rc[p, c[p]] = (t_rb[i], t_cb[i])
+        c[p] += 1
+    le_flat = tile_local[tile_idx] * B * B + ri.astype(np.int64) * B + cj
+    le_edge_id = le.astype(np.int64)
+    le_part = le_p.astype(np.int32)
+
+    # --- boundary slots ------------------------------------------------------
+    cut = np.nonzero(~local_mask)[0]
+    # publishers: unique cut-edge sources (each owned by exactly one part)
+    pub = np.unique(src[cut]) if len(cut) else np.array([], np.int64)
+    nb = int(-(-max(1, len(pub)) // B) * B)
+    bslot = np.full(nb, -1, np.int64)
+    bslot[: len(pub)] = pub
+    slot_of_vertex = {int(v): s for s, v in enumerate(pub)}
+
+    # per-partition publish maps
+    n_out = np.zeros(P, np.int32)
+    outs: List[List[Tuple[int, int]]] = [[] for _ in range(P)]
+    for s, v in enumerate(pub):
+        p = int(part_of[v])
+        outs[p].append((s, int(local_of[v])))
+    for p in range(P):
+        n_out[p] = len(outs[p])
+    o_max = int(max(1, n_out.max()))
+    out_slot = np.zeros((P, o_max), np.int32)
+    out_local = np.zeros((P, o_max), np.int32)
+    for p in range(P):
+        for i, (s, l) in enumerate(outs[p]):
+            out_slot[p, i] = s
+            out_local[p, i] = l
+
+    # --- boundary tiles: (boundary block) x (local dst block) ---------------
+    if len(cut):
+        re_p = part_of[dst[cut]]
+        bi = np.array([slot_of_vertex[int(v)] for v in src[cut]], np.int64)
+        bj = local_of[dst[cut]].astype(np.int64)
+        brb, bcb = bi // B, bj // B
+        bri, bcj = bi % B, bj % B
+        nbb = nb // B
+        bkey = (re_p.astype(np.int64) * nvb + bcb) * nbb + brb
+        buniq, btile_idx = np.unique(bkey, return_inverse=True)
+        bt_part = buniq // (nbb * nvb)
+        bt_cb = (buniq // nbb) % nvb
+        bt_rb = buniq % nbb
+        n_btiles = np.bincount(bt_part.astype(np.int64), minlength=P).astype(np.int32)
+        tb_max = int(max(1, n_btiles.max()))
+        btiles_rc = np.full((P, tb_max, 2), -1, np.int32)
+        btile_local = np.zeros(len(buniq), np.int64)
+        c = np.zeros(P, np.int64)
+        for i in range(len(buniq)):
+            p = int(bt_part[i])
+            btile_local[i] = c[p]
+            btiles_rc[p, c[p]] = (bt_rb[i], bt_cb[i])
+            c[p] += 1
+        re_flat = btile_local[btile_idx] * B * B + bri * B + bcj
+        re_edge_id = cut.astype(np.int64)
+        re_part = re_p.astype(np.int32)
+    else:
+        n_btiles = np.zeros(P, np.int32)
+        tb_max = 1
+        btiles_rc = np.full((P, 1, 2), -1, np.int32)
+        re_flat = np.array([], np.int64)
+        re_edge_id = np.array([], np.int64)
+        re_part = np.array([], np.int32)
+
+    return BlockedGraph(
+        block_size=B,
+        n_parts=P,
+        part_of=part_of,
+        local_of=local_of,
+        global_of=global_of,
+        vp=vp,
+        tiles_rc=tiles_rc,
+        n_tiles=n_tiles,
+        le_edge_id=le_edge_id,
+        le_part=le_part,
+        le_flat=le_flat,
+        num_boundary=nb,
+        bslot_of_src=bslot,
+        out_slot=out_slot,
+        out_local=out_local,
+        n_out=n_out,
+        btiles_rc=btiles_rc,
+        n_btiles=n_btiles,
+        re_edge_id=re_edge_id,
+        re_part=re_part,
+        re_flat=re_flat,
+    )

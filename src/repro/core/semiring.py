@@ -1,0 +1,90 @@
+"""Semirings for blocked graph linear algebra.
+
+The paper's sub-graph-centric ``Compute`` runs irregular shared-memory
+algorithms (Dijkstra, DFS) inside each subgraph.  The TPU adaptation
+(DESIGN.md §2) re-expresses those traversals as iterated *semiring SpMV*
+over dense adjacency tiles:
+
+* SSSP / temporal traversal  ->  (min, +)  with identity +inf
+* reachability / frontier    ->  (or, and) realized as (min, +) on 0/inf
+* connected components       ->  (min, min-label propagate)
+* PageRank / centrality      ->  (+, x)    with identity 0
+
+``idempotent`` marks semirings where applying the same relaxation twice is
+harmless — those support the paper's subgraph-centric *local convergence*
+inside one superstep (Gopher's key trade: more local work per message).
+Non-idempotent semirings (PageRank) take exactly one SpMV per superstep.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Semiring:
+    name: str
+    zero: float  # identity of ``add`` (annihilator of ``mul``)
+    one: float  # identity of ``mul``
+    idempotent: bool
+
+    # y = add-reduce_i mul(x_i, w_i)
+    def mul(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def add_reduce(self, x: jax.Array, axis: int) -> jax.Array:
+        raise NotImplementedError
+
+    def add(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def scatter_add(self, y: jax.Array, idx: jax.Array, vals: jax.Array) -> jax.Array:
+        """y[idx] <- add(y[idx], vals) with duplicate indices combined."""
+        raise NotImplementedError
+
+    def full(self, shape, dtype=jnp.float32) -> jax.Array:
+        return jnp.full(shape, self.zero, dtype)
+
+
+class _MinPlus(Semiring):
+    def mul(self, x, w):
+        return x + w
+
+    def add_reduce(self, x, axis):
+        return jnp.min(x, axis=axis)
+
+    def add(self, a, b):
+        return jnp.minimum(a, b)
+
+    def scatter_add(self, y, idx, vals):
+        return y.at[idx].min(vals)
+
+
+class _PlusMul(Semiring):
+    def mul(self, x, w):
+        return x * w
+
+    def add_reduce(self, x, axis):
+        return jnp.sum(x, axis=axis)
+
+    def add(self, a, b):
+        return a + b
+
+    def scatter_add(self, y, idx, vals):
+        return y.at[idx].add(vals)
+
+
+INF = float(np.inf)
+
+MIN_PLUS = _MinPlus("min_plus", zero=INF, one=0.0, idempotent=True)
+PLUS_MUL = _PlusMul("plus_mul", zero=0.0, one=1.0, idempotent=False)
+
+# Label propagation (connected components, reachability) IS min-plus with
+# 0/inf edge weights: label + 0 flows, label + inf is blocked.  No separate
+# semiring needed.
+
+SEMIRINGS = {s.name: s for s in (MIN_PLUS, PLUS_MUL)}

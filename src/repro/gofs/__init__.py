@@ -1,0 +1,13 @@
+"""GoFS — Graph-oriented File System (paper §V).
+
+Distributed slice-based storage for time-series graph collections:
+partitioned by topology, subgraphs bin-packed into slices (§V-D), instances
+temporally packed (§V-C), attributes projected into separate slices (§V-B),
+LRU slice caching (§V-E).  ``GoFSStore`` implements the iBSP engine's
+``InstanceProvider`` protocol — Gopher-on-GoFS, as co-designed in the paper.
+"""
+from repro.gofs.cache import SliceCache
+from repro.gofs.layout import deploy_collection
+from repro.gofs.store import GoFSStore
+
+__all__ = ["SliceCache", "deploy_collection", "GoFSStore"]

@@ -1,0 +1,47 @@
+"""LRU slice cache (paper §V-E).
+
+Slots hold whole deserialized slices; eviction is least-recently-used.
+``slots=0`` disables caching (the paper's c0 configuration), ``slots=14``
+fits one slice per attribute (c14).  Hit/miss counters feed the layout
+micro-benchmarks; the cache is transparent to the GoFS API user.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+
+class SliceCache:
+    def __init__(self, slots: int = 14):
+        self.slots = slots
+        self._data: "OrderedDict[str, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str, loader: Callable[[], Any]) -> Any:
+        if self.slots <= 0:
+            self.misses += 1
+            return loader()
+        if key in self._data:
+            self.hits += 1
+            self._data.move_to_end(key)
+            return self._data[key]
+        self.misses += 1
+        val = loader()
+        self._data[key] = val
+        if len(self._data) > self.slots:
+            self._data.popitem(last=False)
+        return val
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "resident": len(self._data),
+        }

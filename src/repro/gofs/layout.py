@@ -1,0 +1,163 @@
+"""GoFS on-disk layout: deployment-time packing (paper §V-A..D).
+
+Directory structure (one collection)::
+
+    <root>/collection.json                     global metadata slice
+    <root>/part_<p>/template_<b>.npz           topology slice per bin
+    <root>/part_<p>/meta.json                  partition metadata slice
+    <root>/part_<p>/attr_<kind>_<name>_b<b>_t<k>.npz
+                                               attribute slice: one attribute
+                                               x one subgraph bin x one time
+                                               pack of ``instances_per_slice``
+
+Deployment-time knobs (fixed at write time, as the paper requires):
+``bins_per_partition`` (s20/s40 §V-D) and ``instances_per_slice`` (i1/i20
+§V-C).  Constant attributes are stored once in the template slice and never
+per instance; default-valued attributes are stored per instance only when
+the instance actually overrides them (§V-B value inheritance).
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import GraphConfig
+from repro.core.graph import TimeSeriesGraph
+from repro.core.partition import (
+    bin_pack_subgraphs,
+    discover_subgraphs,
+    partition_graph,
+)
+from repro.core.subgraph import SubgraphTopology, build_subgraphs
+from repro.gofs.slices import write_array_slice, write_json_slice
+
+
+def attr_slice_name(kind: str, attr: str, b: int, pack: int) -> str:
+    return f"attr_{kind}_{attr}_b{b}_t{pack}"
+
+
+def deploy_collection(
+    tsg: TimeSeriesGraph,
+    cfg: GraphConfig,
+    root: str,
+    *,
+    assign: Optional[np.ndarray] = None,
+) -> Dict:
+    """Partition, bin-pack, time-pack, and write the collection to disk.
+
+    Returns the global metadata dict (also written to collection.json).
+    """
+    tmpl = tsg.template
+    if assign is None:
+        assign = partition_graph(tmpl, cfg.num_partitions, seed=cfg.seed)
+    sg_ids = discover_subgraphs(tmpl, assign)
+    subgraphs = build_subgraphs(tmpl, assign, sg_ids)
+    n_inst = len(tsg)
+    ipack = max(1, cfg.instances_per_slice)
+    n_packs = -(-n_inst // ipack)
+
+    # group subgraphs per partition, bin-pack by vertex count (§V-D)
+    by_part: Dict[int, List[int]] = {}
+    for g, topo in subgraphs.items():
+        by_part.setdefault(topo.pid, []).append(g)
+    global_meta = {
+        "name": tmpl.name,
+        "num_vertices": int(tmpl.num_vertices),
+        "num_edges": int(tmpl.num_edges),
+        "num_instances": n_inst,
+        "num_partitions": int(cfg.num_partitions),
+        "instances_per_slice": ipack,
+        "bins_per_partition": int(cfg.bins_per_partition),
+        "timestamps": [float(g.timestamp) for g in tsg.instances],
+        "durations": [float(g.duration) for g in tsg.instances],
+        "vertex_attrs": [
+            {"name": a.name, "dtype": a.dtype, "default": a.default,
+             "constant": a.constant} for a in tmpl.vertex_attrs
+        ],
+        "edge_attrs": [
+            {"name": a.name, "dtype": a.dtype, "default": a.default,
+             "constant": a.constant} for a in tmpl.edge_attrs
+        ],
+        "partitions": {},
+    }
+
+    for p in range(cfg.num_partitions):
+        gids = sorted(by_part.get(p, []))
+        sizes = np.array([subgraphs[g].num_vertices for g in gids], np.int64)
+        ids = np.array(gids, np.int64)
+        n_bins = min(cfg.bins_per_partition, max(1, len(gids)))
+        bins = bin_pack_subgraphs(sizes, ids, n_bins) if len(gids) else []
+        pdir = os.path.join(root, f"part_{p}")
+        part_meta = {"pid": p, "bins": [], "n_bins": len(bins)}
+
+        for b, bin_gids in enumerate(bins):
+            # ---- template slice: topology of this bin's subgraphs --------
+            tarrs: Dict[str, np.ndarray] = {}
+            bin_meta = {"subgraphs": [], "bin": b}
+            for g in bin_gids.tolist():
+                topo = subgraphs[g]
+                tarrs[f"sg{g}_vertices"] = topo.vertices
+                tarrs[f"sg{g}_lsrc"] = topo.local_src
+                tarrs[f"sg{g}_ldst"] = topo.local_dst
+                tarrs[f"sg{g}_leid"] = topo.local_edge_id
+                tarrs[f"sg{g}_rsrc"] = topo.remote_src
+                tarrs[f"sg{g}_rdstv"] = topo.remote_dst_vertex
+                tarrs[f"sg{g}_rdstg"] = topo.remote_dst_sgid
+                tarrs[f"sg{g}_reid"] = topo.remote_edge_id
+                bin_meta["subgraphs"].append(
+                    {"sgid": int(g), "n_vertices": int(topo.num_vertices),
+                     "n_local_edges": int(topo.num_local_edges),
+                     "n_remote_edges": int(len(topo.remote_src))}
+                )
+            write_array_slice(os.path.join(pdir, f"template_{b}"), tarrs)
+            part_meta["bins"].append(bin_meta)
+
+            # ---- attribute slices: kind x attr x time pack ---------------
+            # concatenated vertex / edge index spaces for the whole bin
+            v_cat = np.concatenate(
+                [subgraphs[g].vertices for g in bin_gids.tolist()]
+            ) if len(bin_gids) else np.array([], np.int64)
+            le_cat = np.concatenate(
+                [subgraphs[g].local_edge_id for g in bin_gids.tolist()]
+            ) if len(bin_gids) else np.array([], np.int64)
+            re_cat = np.concatenate(
+                [subgraphs[g].remote_edge_id for g in bin_gids.tolist()]
+            ) if len(bin_gids) else np.array([], np.int64)
+
+            for a in tmpl.vertex_attrs:
+                if a.constant is not None:
+                    continue  # stored once in template metadata (§V-B)
+                for k in range(n_packs):
+                    t0, t1 = k * ipack, min((k + 1) * ipack, n_inst)
+                    vals = np.stack([
+                        tsg.vertex_values(t, a.name)[v_cat] for t in range(t0, t1)
+                    ])
+                    write_array_slice(
+                        os.path.join(pdir, attr_slice_name("v", a.name, b, k)),
+                        {"vals": vals},
+                    )
+            for a in tmpl.edge_attrs:
+                if a.constant is not None:
+                    continue
+                for k in range(n_packs):
+                    t0, t1 = k * ipack, min((k + 1) * ipack, n_inst)
+                    lvals = np.stack([
+                        tsg.edge_values(t, a.name)[le_cat] for t in range(t0, t1)
+                    ])
+                    rvals = np.stack([
+                        tsg.edge_values(t, a.name)[re_cat] for t in range(t0, t1)
+                    ])
+                    write_array_slice(
+                        os.path.join(pdir, attr_slice_name("e", a.name, b, k)),
+                        {"local": lvals, "remote": rvals},
+                    )
+        write_json_slice(os.path.join(pdir, "meta.json"), part_meta)
+        global_meta["partitions"][str(p)] = {
+            "n_subgraphs": len(gids),
+            "n_bins": len(bins),
+        }
+
+    write_json_slice(os.path.join(root, "collection.json"), global_meta)
+    return global_meta

@@ -1,0 +1,201 @@
+"""GoFS access API (paper §V-B): subgraph-centric iterators over a deployed
+collection, with temporal filtering, attribute projection, value
+inheritance, bin-major ordering, and transparent LRU slice caching.
+
+``GoFSStore`` implements ``repro.core.ibsp.InstanceProvider`` so the Gopher
+engine runs directly on GoFS.  The API only touches slices of the local
+deployment root — network movement belongs to the Gopher layer, exactly the
+paper's separation.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import AttributeDef
+from repro.core.ibsp import InstanceProvider, SubgraphInstance
+from repro.core.subgraph import SubgraphTopology
+from repro.gofs.cache import SliceCache
+from repro.gofs.layout import attr_slice_name
+from repro.gofs.slices import ReadStats, read_array_slice, read_json_slice
+
+
+class GoFSStore(InstanceProvider):
+    def __init__(
+        self,
+        root: str,
+        *,
+        cache_slots: int = 14,
+        vertex_projection: Optional[Sequence[str]] = None,
+        edge_projection: Optional[Sequence[str]] = None,
+        time_range: Optional[Tuple[float, float]] = None,
+    ):
+        self.root = root
+        self.stats = ReadStats()
+        self.cache = SliceCache(cache_slots)
+        self.meta = read_json_slice(os.path.join(root, "collection.json"),
+                                    self.stats)
+        self.ipack = int(self.meta["instances_per_slice"])
+        self._v_attrs = {a["name"]: AttributeDef(**a)
+                         for a in self.meta["vertex_attrs"]}
+        self._e_attrs = {a["name"]: AttributeDef(**a)
+                         for a in self.meta["edge_attrs"]}
+        self.vertex_projection = tuple(
+            vertex_projection if vertex_projection is not None
+            else self._v_attrs
+        )
+        self.edge_projection = tuple(
+            edge_projection if edge_projection is not None else self._e_attrs
+        )
+        # temporal filter (§V-B): restrict visible instances to a time range
+        ts = np.asarray(self.meta["timestamps"], np.float64)
+        dur = np.asarray(self.meta["durations"], np.float64)
+        if time_range is not None:
+            lo, hi = time_range
+            sel = np.nonzero((ts < hi) & (ts + dur > lo))[0]
+        else:
+            sel = np.arange(len(ts))
+        self._t_map: List[int] = [int(i) for i in sel]
+        self.timestamps = ts
+
+        # partition metadata + bin-major subgraph order (§V-D)
+        self._part_meta: Dict[int, Any] = {}
+        self._sg_home: Dict[int, Tuple[int, int]] = {}  # sgid -> (pid, bin)
+        self._order: List[int] = []
+        for p in range(int(self.meta["num_partitions"])):
+            pm = read_json_slice(
+                os.path.join(root, f"part_{p}", "meta.json"), self.stats
+            )
+            self._part_meta[p] = pm
+            for b, bin_meta in enumerate(pm["bins"]):
+                for sg in bin_meta["subgraphs"]:
+                    g = int(sg["sgid"])
+                    self._sg_home[g] = (p, b)
+                    self._order.append(g)
+        self._topo_cache: Dict[int, SubgraphTopology] = {}
+        self._bin_offsets: Dict[Tuple[int, int], Dict[str, Dict[int, Tuple[int, int]]]] = {}
+
+    # ---------------- InstanceProvider ------------------------------------
+    def subgraph_ids(self) -> Sequence[int]:
+        """Bin-major partition order — the paper's balanced iterator."""
+        return list(self._order)
+
+    def num_timesteps(self) -> int:
+        return len(self._t_map)
+
+    def get_instance(self, t_idx: int, sgid: int) -> SubgraphInstance:
+        t_real = self._t_map[t_idx]
+        topo = self.get_topology(sgid)
+        p, b = self._sg_home[sgid]
+        offs = self._offsets(p, b)
+        k, r = divmod(t_real, self.ipack)
+
+        vv: Dict[str, np.ndarray] = {}
+        for name in self.vertex_projection:
+            a = self._v_attrs[name]
+            if a.constant is not None:
+                vv[name] = np.full(topo.num_vertices, a.constant,
+                                   np.dtype(a.dtype))
+                continue
+            sl = self._load(p, attr_slice_name("v", name, b, k))
+            o0, o1 = offs["v"][sgid]
+            vv[name] = sl["vals"][r, o0:o1]
+        lev: Dict[str, np.ndarray] = {}
+        rev: Dict[str, np.ndarray] = {}
+        for name in self.edge_projection:
+            a = self._e_attrs[name]
+            if a.constant is not None:
+                lev[name] = np.full(topo.num_local_edges, a.constant,
+                                    np.dtype(a.dtype))
+                rev[name] = np.full(len(topo.remote_src), a.constant,
+                                    np.dtype(a.dtype))
+                continue
+            sl = self._load(p, attr_slice_name("e", name, b, k))
+            lo0, lo1 = offs["le"][sgid]
+            ro0, ro1 = offs["re"][sgid]
+            lev[name] = sl["local"][r, lo0:lo1]
+            rev[name] = sl["remote"][r, ro0:ro1]
+        return SubgraphInstance(
+            topology=topo,
+            timestep=t_idx,
+            timestamp=float(self.timestamps[t_real]),
+            vertex_values=vv,
+            local_edge_values=lev,
+            remote_edge_values=rev,
+        )
+
+    # ---------------- topology / template access --------------------------
+    def get_topology(self, sgid: int) -> SubgraphTopology:
+        if sgid in self._topo_cache:
+            return self._topo_cache[sgid]
+        p, b = self._sg_home[sgid]
+        sl = self._load(p, f"template_{b}")
+        for sg in self._part_meta[p]["bins"][b]["subgraphs"]:
+            g = int(sg["sgid"])
+            if g in self._topo_cache:
+                continue
+            verts = sl[f"sg{g}_vertices"]
+            topo = SubgraphTopology(
+                sgid=g, pid=p,
+                vertices=verts,
+                local_src=sl[f"sg{g}_lsrc"],
+                local_dst=sl[f"sg{g}_ldst"],
+                local_edge_id=sl[f"sg{g}_leid"],
+                remote_src=sl[f"sg{g}_rsrc"],
+                remote_dst_vertex=sl[f"sg{g}_rdstv"],
+                remote_dst_sgid=sl[f"sg{g}_rdstg"],
+                remote_edge_id=sl[f"sg{g}_reid"],
+                global_to_local={int(v): i for i, v in enumerate(verts)},
+            )
+            self._topo_cache[g] = topo
+        return self._topo_cache[sgid]
+
+    def iter_subgraphs(self, pid: Optional[int] = None) -> Iterator[SubgraphTopology]:
+        """Space iterator: subgraphs in bin-major order (§V-D)."""
+        for g in self._order:
+            if pid is None or self._sg_home[g][0] == pid:
+                yield self.get_topology(g)
+
+    def iter_instances(self, sgid: int) -> Iterator[SubgraphInstance]:
+        """Time iterator: a subgraph's instances in time order (§V-B)."""
+        for t in range(self.num_timesteps()):
+            yield self.get_instance(t, sgid)
+
+    # ---------------- internals -------------------------------------------
+    def _load(self, pid: int, slice_name: str) -> Dict[str, np.ndarray]:
+        path = os.path.join(self.root, f"part_{pid}", slice_name)
+        return self.cache.get(
+            f"{pid}/{slice_name}", lambda: read_array_slice(path, self.stats)
+        )
+
+    def _offsets(self, p: int, b: int):
+        """Start/end offsets of each subgraph inside the bin's concatenated
+        vertex/edge value arrays."""
+        key = (p, b)
+        if key in self._bin_offsets:
+            return self._bin_offsets[key]
+        offs = {"v": {}, "le": {}, "re": {}}
+        ov = ole = ore = 0
+        for sg in self._part_meta[p]["bins"][b]["subgraphs"]:
+            g = int(sg["sgid"])
+            nv, nle, nre = (int(sg["n_vertices"]), int(sg["n_local_edges"]),
+                            int(sg["n_remote_edges"]))
+            offs["v"][g] = (ov, ov + nv)
+            offs["le"][g] = (ole, ole + nle)
+            offs["re"][g] = (ore, ore + nre)
+            ov += nv
+            ole += nle
+            ore += nre
+        self._bin_offsets[key] = offs
+        return offs
+
+    # ---------------- accounting -------------------------------------------
+    def reset_stats(self) -> None:
+        self.stats.reset()
+        self.cache.hits = 0
+        self.cache.misses = 0
+
+    def snapshot_stats(self) -> Dict[str, float]:
+        return {**self.stats.snapshot(), **self.cache.stats()}

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three files: ``kernel.py`` (pl.pallas_call + BlockSpec
+VMEM tiling), ``ops.py`` (jit'd dispatch wrapper), ``ref.py`` (pure-jnp
+oracle).  All kernels are validated in interpret mode against their oracle
+by ``tests/test_kernels.py`` shape/dtype sweeps.
+
+* ``semiring_spmm``     — blocked min-plus / plus-mul SpMV: the paper's
+  subgraph-centric Compute hot-spot, TPU-adapted (DESIGN.md §2).
+* ``flash_attention``   — tiled online-softmax prefill attention.
+* ``decode_attention``  — single-token GQA attention over long KV caches.
+"""
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.semiring_spmm.ops import spmv_blocked
+
+__all__ = ["decode_attention", "flash_attention", "spmv_blocked"]

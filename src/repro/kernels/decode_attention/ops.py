@@ -1,0 +1,36 @@
+"""Dispatch wrapper for single-token GQA decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_ref
+
+
+def decode_attention(
+    q: jax.Array,  # (B, H, d)
+    k: jax.Array,  # (B, S, K, d)
+    v: jax.Array,  # (B, S, K, d)
+    lengths: jax.Array,  # (B,)
+    *,
+    window: int = 0,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+    bk: int = 512,
+) -> jax.Array:
+    B, H, d = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    if not use_pallas:
+        return decode_ref(q, k, v, lengths, window=window)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qg = q.reshape(B, K, G, d).reshape(B * K, G, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * K, S, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * K, S, d)
+    lens = jnp.repeat(lengths, K)
+    o = decode_attention_pallas(
+        qg, kt, vt, lens, window=window, bk=bk, interpret=interpret
+    )
+    return o.reshape(B, K, G, d).reshape(B, H, d)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_ref(
+    q: jax.Array,  # (B, H, d) one new token per sequence
+    k: jax.Array,  # (B, S, K, d) cache
+    v: jax.Array,  # (B, S, K, d)
+    lengths: jax.Array,  # (B,) valid cache entries
+    *,
+    window: int = 0,  # sliding window over absolute positions; 0 = unbounded
+) -> jax.Array:
+    B, H, d = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qg = q.reshape(B, K, G, d)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    pos = jnp.arange(S)[None]  # (1, S)
+    ok = pos < lengths[:, None]
+    if window:
+        ok &= pos > (lengths[:, None] - 1 - window)
+    logits = jnp.where(ok[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v)
+    return out.reshape(B, H, d).astype(q.dtype)

@@ -1,0 +1,51 @@
+"""Dispatch wrapper: (B, S, H/K, d) GQA layout -> flash attention.
+
+GQA is handled by reshaping queries into (B*K, G*Sq, d) groups? No — K/V
+heads are broadcast: we expand KV to the query head count once (cheap next
+to the O(S²) attention work at prefill shapes) and flatten (B, H) into the
+grid dimension.  On-TPU this is the Pallas path; off-TPU (or ``use_pallas=
+False``) it falls back to the chunked-softmax jnp path in
+``repro.models.attention`` — the same math, XLA-fused.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def _expand_kv(k: jax.Array, H: int) -> jax.Array:
+    B, S, K, d = k.shape
+    return jnp.repeat(k, H // K, axis=2)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, d)
+    k: jax.Array,  # (B, Skv, K, d)
+    v: jax.Array,  # (B, Skv, K, d)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+    bq: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    B, Sq, H, d = q.shape
+    kf, vf = _expand_kv(k, H), _expand_kv(v, H)
+    if not use_pallas:
+        return mha_ref(q, kf, vf, causal=causal, q_offset=q_offset,
+                       window=window)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, d)
+    kt = kf.transpose(0, 2, 1, 3).reshape(B * H, kf.shape[1], d)
+    vt = vf.transpose(0, 2, 1, 3).reshape(B * H, vf.shape[1], d)
+    o = flash_attention_pallas(
+        qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=interpret,
+    )
+    return o.reshape(B, H, Sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for tiled causal (flash) attention.
+
+Materializes the full (Sq, Skv) logits — fine at test scale; the chunked
+online-softmax path in ``repro.models.attention`` is the production jnp
+path and is itself validated against this oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_ref(
+    q: jax.Array,  # (B, Sq, H, d)
+    k: jax.Array,  # (B, Skv, H, d)   (GQA pre-expanded by ops.py)
+    v: jax.Array,  # (B, Skv, H, d)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,  # absolute position of q[0] (decode: cache length)
+    window: int = 0,  # sliding window; 0 = unbounded
+) -> jax.Array:
+    B, Sq, H, d = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+        if window:
+            ok &= kpos > qpos - window
+    logits = jnp.where(ok[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.semiring_spmm.ops import spmv_blocked
+
+__all__ = ["spmv_blocked"]

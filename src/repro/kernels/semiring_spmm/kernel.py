@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: blocked semiring SpMV (the paper's compute hot-spot,
+TPU-adapted per DESIGN.md §2).
+
+One grid step processes one (B x B) adjacency tile resident in VMEM.  Tiles
+are pre-sorted by destination (column) block — ``repro.core.blocked``
+guarantees this — so the sequential TPU grid revisits each output block in a
+contiguous run and the kernel can initialize it on first touch and combine
+in place afterwards (classic scalar-prefetch block-sparse pattern).
+
+Padding tiles (cols == -1 in the caller) are redirected to a dummy output
+block at index ``n_out_blocks`` which is sliced off afterwards; they sort
+last, preserving the contiguous-runs invariant.
+
+* plus_mul  — the (1,B)x(B,B) product runs on the MXU.
+* min_plus  — broadcast-add + min-reduce on the VPU (no MXU analogue of a
+  tropical matmul; B=128 keeps lanes full).
+
+VMEM footprint per step: tile (B*B*4) + x block (B*4) + y block (B*4)
+≈ 64 KiB at B=128 — far under the ~16 MiB/core VMEM budget, so the implicit
+pipeline can run multi-buffered with room to spare.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmv_kernel(rows, cols, tile_ref, x_ref, y_ref, *, sr_name: str, zero: float):
+    t = pl.program_id(0)
+    first = jnp.logical_or(t == 0, cols[t] != cols[jnp.maximum(t - 1, 0)])
+
+    @pl.when(first)
+    def _():
+        y_ref[...] = jnp.full_like(y_ref, zero)
+
+    xb = x_ref[0]  # (B,)
+    w = tile_ref[0]  # (B, B)
+    if sr_name == "plus_mul":
+        part = jnp.dot(xb, w, preferred_element_type=jnp.float32)
+        y_ref[0, :] = y_ref[0, :] + part
+    else:  # min_plus
+        part = jnp.min(xb[:, None] + w, axis=0)
+        y_ref[0, :] = jnp.minimum(y_ref[0, :], part)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sr_name", "n_out_blocks", "interpret")
+)
+def spmv_blocked_pallas(
+    tiles: jax.Array,  # (T, B, B) float32, padding tiles filled with sr zero
+    rows: jax.Array,  # (T,) int32, -1 = padding
+    cols: jax.Array,  # (T,) int32, sorted ascending among valid, -1 = padding
+    x: jax.Array,  # (nvb * B,) float32
+    *,
+    sr_name: str,
+    n_out_blocks: int,
+    interpret: bool = True,
+) -> jax.Array:
+    T, B, _ = tiles.shape
+    nvb = x.shape[0] // B
+    zero = 0.0 if sr_name == "plus_mul" else float(jnp.inf)
+
+    rows_c = jnp.maximum(rows, 0)  # padding reads block 0, contributes zero
+    cols_c = jnp.where(cols < 0, n_out_blocks, cols)  # padding -> dummy block
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, B, B), lambda t, r, c: (t, 0, 0)),
+            pl.BlockSpec((1, B), lambda t, r, c: (r[t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda t, r, c: (c[t], 0)),
+    )
+    kernel = functools.partial(_spmv_kernel, sr_name=sr_name, zero=zero)
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out_blocks + 1, B), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),  # sequential grid: accumulation
+        ),
+    )(rows_c, cols_c, tiles, x.reshape(nvb, B))
+    y = y[:n_out_blocks]
+    # blocks never touched by a valid tile hold uninitialized memory
+    touched = jnp.zeros((n_out_blocks + 1,), jnp.bool_).at[cols_c].set(True)
+    return jnp.where(touched[:n_out_blocks, None], y, zero).reshape(-1)

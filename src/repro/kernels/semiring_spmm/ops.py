@@ -1,0 +1,37 @@
+"""jit'd dispatch wrapper for the blocked semiring SpMV.
+
+``spmv_blocked(... , use_pallas=...)`` picks the Pallas kernel on TPU (or in
+interpret mode when forced) and the pure-jnp oracle otherwise.  Both paths
+take identical arguments and produce identical results — the oracle is the
+reference the kernel sweep tests assert against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import Semiring
+from repro.kernels.semiring_spmm.kernel import spmv_blocked_pallas
+from repro.kernels.semiring_spmm.ref import spmv_blocked_ref
+
+
+def spmv_blocked(
+    tiles: jax.Array,  # (T, B, B)
+    rows: jax.Array,  # (T,)
+    cols: jax.Array,  # (T,)
+    x: jax.Array,  # (nvb * B,)
+    sr: Semiring,
+    *,
+    n_out_blocks: int | None = None,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    nob = n_out_blocks if n_out_blocks is not None else x.shape[0] // tiles.shape[1]
+    if use_pallas:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return spmv_blocked_pallas(
+            tiles, rows, cols, x,
+            sr_name=sr.name, n_out_blocks=nob, interpret=interpret,
+        )
+    return spmv_blocked_ref(tiles, rows, cols, x, sr, n_out_blocks=nob)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the blocked semiring SpMV.
+
+y[cb*B + j] = add-reduce over tiles t with col(t)==cb, over i of
+              mul(x[row(t)*B + i], tiles[t, i, j])
+
+Padding tiles carry (rows, cols) == -1 and values == semiring zero; they are
+masked out explicitly so the oracle is safe for any fill value.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import Semiring
+
+
+def spmv_blocked_ref(
+    tiles: jax.Array,  # (T, B, B) float32, padded with sr.zero
+    rows: jax.Array,  # (T,) int32 source block index, -1 = padding
+    cols: jax.Array,  # (T,) int32 destination block index, -1 = padding
+    x: jax.Array,  # (n_vblocks * B,) float32
+    sr: Semiring,
+    n_out_blocks: int | None = None,
+) -> jax.Array:
+    T, B, _ = tiles.shape
+    nvb = x.shape[0] // B
+    nob = n_out_blocks if n_out_blocks is not None else nvb
+    xb = x.reshape(nvb, B)[jnp.maximum(rows, 0)]  # (T, B)
+    prod = sr.mul(xb[:, :, None], tiles)  # (T, B, B)
+    part = sr.add_reduce(prod, 1)  # (T, B)
+    part = jnp.where((cols >= 0)[:, None], part,
+                     jnp.asarray(sr.zero, prod.dtype))
+    y = sr.full((nob, B), prod.dtype)
+    y = sr.scatter_add(y, jnp.maximum(cols, 0), part)
+    return y.reshape(-1)

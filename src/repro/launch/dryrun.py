@@ -1,0 +1,470 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, extract memory/cost/collective analysis.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) so
+the XLA_FLAGS above land before jax initializes devices — hence they are
+the first statements in the file, before any other import.
+
+Per cell this emits a JSON record with:
+  * memory_analysis     — bytes per device (proves it fits)
+  * cost_analysis       — HLO FLOPs / bytes (per device)
+  * collective bytes    — parsed from optimized HLO, by kind and mesh axis
+  * two-point scan fit  — per-layer body costs recovered from compiles at
+    L and L/2 (cost_analysis counts while-loop bodies once)
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out results.jsonl
+  python -m repro.launch.dryrun --graph       # GoFFish SSSP workload cell
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _fit_points(cfg):
+    """Two small UNROLLED configs for the scan-cost fit.
+
+    cost_analysis counts while-loop bodies once regardless of trip count, so
+    costs are CONSTANT in depth when layers are scanned — differencing full
+    and half depth recovers nothing.  Instead we compile at 2 and 4 scan
+    units with the layer scans fully unrolled; the per-unit body cost is
+    (c4 - c2)/2 and totals extrapolate as outside + body * units(full).
+    """
+    return (
+        cfg.with_units(2).with_overrides(scan_unroll=True),
+        cfg.with_units(4).with_overrides(scan_unroll=True),
+    )
+
+
+def _jsonable(d: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+    if not d:
+        return {}
+    out = {}
+    for k, v in d.items():
+        try:
+            out[k] = float(v)
+        except (TypeError, ValueError):
+            pass
+    return out
+
+
+def compile_cell(
+    arch_id: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    seq_shard_kv: bool = True,
+    fit: bool = True,
+    remat: Optional[str] = None,
+    donate: bool = True,
+    flash_decode: bool = False,  # §Perf: TP flash decoding
+    cast_params: bool = False,  # §Perf: bf16-before-gather FSDP
+    params_dtype: str = "float32",  # §Perf: bf16 live weights (dist. opt)
+    serve_replicated_weights: bool = False,  # §Perf: no FSDP at serve
+    no_sp: bool = False,  # §Perf: classic TP (replicated activations)
+) -> Dict[str, Any]:
+    """Lower+compile one cell; returns the roofline-input record."""
+    from repro.configs import cell_applicable, get_config, shape_by_name
+    from repro.dist.collectives import collective_bytes_by_kind
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import cell_shardings, input_specs, runtime_for
+    from repro.models.model import decode_step, prefill
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_step import make_train_step
+
+    cfg = get_config(arch_id)
+    if remat is not None:
+        cfg = cfg.with_overrides(remat=remat)
+    shape = shape_by_name(shape_name)
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    runtime = runtime_for(mesh)
+    import dataclasses as _dc
+
+    if flash_decode:
+        runtime = _dc.replace(runtime, flash_decode=True)
+    if no_sp:
+        runtime = _dc.replace(runtime, sp=False)
+    oc = OptConfig(state_dtype="bfloat16")
+
+    def one_compile(cfg_c) -> Dict[str, Any]:
+        t0 = time.time()
+        with mesh:
+            if shape.is_train:
+                step = make_train_step(cfg_c, runtime, oc,
+                                       cast_params_once=cast_params)
+                p, o, b = input_specs(cfg_c, shape, oc,
+                                      params_dtype=jnp.dtype(params_dtype))
+                p_sh, o_sh, b_sh = cell_shardings(cfg_c, shape, mesh)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(p_sh, o_sh, b_sh),
+                    donate_argnums=(0, 1) if donate else (),
+                )
+                lowered = jitted.lower(p, o, b)
+            elif shape.kind == "prefill":
+                fn = lambda params, batch: prefill(params, batch, cfg_c, runtime)
+                p, b = input_specs(cfg_c, shape,
+                                   params_dtype=jnp.dtype(params_dtype))
+                p_sh, b_sh = cell_shardings(
+                    cfg_c, shape, mesh, seq_shard_kv=seq_shard_kv,
+                    serve_replicated_weights=serve_replicated_weights,
+                )
+                jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+                lowered = jitted.lower(p, b)
+            else:  # decode
+                fn = lambda params, batch: decode_step(params, batch, cfg_c, runtime)
+                p, b = input_specs(cfg_c, shape,
+                                   params_dtype=jnp.dtype(params_dtype))
+                p_sh, b_sh = cell_shardings(
+                    cfg_c, shape, mesh, seq_shard_kv=seq_shard_kv,
+                    serve_replicated_weights=serve_replicated_weights,
+                )
+                jitted = jax.jit(
+                    fn, in_shardings=(p_sh, b_sh),
+                    donate_argnums=(1,) if donate else (),
+                )
+                lowered = jitted.lower(p, b)
+            compiled = lowered.compile()
+        ca = _jsonable(compiled.cost_analysis())
+        ma = compiled.memory_analysis()
+        mem = {}
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            mem[f] = getattr(ma, f, None)
+        hlo = compiled.as_text()
+        coll = collective_bytes_by_kind(hlo)
+        return {
+            "flops": ca.get("flops", 0.0),
+            "bytes": ca.get("bytes accessed", 0.0),
+            "cost_analysis": ca,
+            "memory": mem,
+            "collectives": coll,
+            "compile_seconds": time.time() - t0,
+            "hlo_lines": hlo.count("\n"),
+        }
+
+    rec: Dict[str, Any] = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_devices": 512 if multi_pod else 256,
+        "seq_shard_kv": seq_shard_kv,
+        "remat": cfg.remat,
+        "flash_decode": flash_decode,
+        "cast_params": cast_params,
+        "params_dtype": params_dtype,
+    }
+    rec["full"] = one_compile(cfg)
+    if fit:
+        cfg2, cfg4 = _fit_points(cfg)
+        rec["u2"] = one_compile(cfg2)
+        rec["u4"] = one_compile(cfg4)
+        U = cfg.scan_units()
+        fit_out = {"units": U}
+        for key in ("flops", "bytes"):
+            body = (rec["u4"][key] - rec["u2"][key]) / 2.0
+            outside = rec["u2"][key] - 2.0 * body
+            fit_out[key] = {
+                "per_unit": body, "outside": outside,
+                "total": outside + body * U,
+            }
+        kinds = set(rec["u4"]["collectives"]) | set(rec["u2"]["collectives"])
+        coll_fit = {}
+        for k in kinds:
+            c4 = rec["u4"]["collectives"].get(k, 0)
+            c2 = rec["u2"]["collectives"].get(k, 0)
+            body = (c4 - c2) / 2.0
+            outside = c2 - 2.0 * body
+            coll_fit[k] = {
+                "per_unit": body, "outside": outside,
+                "total": outside + body * U,
+            }
+        fit_out["collectives"] = coll_fit
+        rec["fit"] = fit_out
+    return rec
+
+
+def compile_graph_cell(*, multi_pod: bool = False,
+                       tile_dtype: str = "float32",
+                       spmd: bool = False) -> Dict[str, Any]:
+    """The paper's own workload as the 11th architecture: one temporal-SSSP
+    superstep (local min-plus sweep + boundary exchange) on the full-size TR
+    spec, partitions sharded over the whole mesh."""
+    from repro.configs import get_graph_config
+    from repro.dist.collectives import collective_bytes_by_kind
+    from repro.launch.mesh import make_production_mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = 512 if multi_pod else 256
+    gc = get_graph_config("full")
+    B = gc.block_size
+    P_parts = n_dev  # one partition per device
+    V = gc.num_vertices
+    vp = -(-V // P_parts // B) * B
+    E_local = int(V * gc.avg_degree * 0.7) // P_parts
+    # tile count assumption: ~32 edges/tile occupancy after subgraph-ordered
+    # numbering (documented in EXPERIMENTS.md §Dry-run)
+    T = max(1, E_local // 32)
+    NB = -(-int(V * 0.05) // B) * B  # ~5% boundary vertices
+    Tb = max(1, T // 8)
+    O = NB // P_parts * 4
+
+    import numpy as np
+
+    from repro.core.semiring import MIN_PLUS
+    from repro.core.superstep import Comm, DeviceGraph
+    from repro.core import superstep as ss
+
+    axes = mesh.axis_names  # partitions over every axis
+    part_axes = tuple(axes)
+
+    tdt = jnp.dtype(tile_dtype)
+
+    def sds(shape, dt=None):
+        return jax.ShapeDtypeStruct(shape, dt if dt is not None else tdt)
+
+    dg_abs = DeviceGraph(
+        block_size=B, num_boundary=NB,
+        rows=sds((P_parts, T), jnp.int32), cols=sds((P_parts, T), jnp.int32),
+        tiles=sds((P_parts, T, B, B)),
+        brows=sds((P_parts, Tb), jnp.int32), bcols=sds((P_parts, Tb), jnp.int32),
+        btiles=sds((P_parts, Tb, B, B)),
+        out_slot=sds((P_parts, O), jnp.int32),
+        out_local=sds((P_parts, O), jnp.int32),
+        out_mask=sds((P_parts, O), jnp.bool_),
+        vmask=sds((P_parts, vp), jnp.bool_),
+    )
+    x_abs = sds((P_parts, vp))
+
+    if spmd:
+        # production lowering: explicit shard_map, boundary = one pmin
+        superstep_fn = ss.make_spmd_superstep(mesh, MIN_PLUS)(NB)
+    else:
+        comm = Comm(axis_name=None)  # stacked baseline: XLA auto-shards
+
+        def superstep_fn(x, rows, cols, tiles, brows, bcols, btiles,
+                         out_slot, out_local, out_mask, vmask):
+            dg = DeviceGraph(
+                block_size=B, num_boundary=NB, rows=rows, cols=cols,
+                tiles=tiles, brows=brows, bcols=bcols, btiles=btiles,
+                out_slot=out_slot, out_local=out_local, out_mask=out_mask,
+                vmask=vmask,
+            )
+            x = ss._local_sweep(x, dg, MIN_PLUS, False)
+            boundary = ss._publish(x, dg, MIN_PLUS, comm)
+            return ss._consume(x, boundary, dg, MIN_PLUS, False)
+
+    spec = NamedSharding(mesh, P(part_axes))
+
+    def shard_like(x):
+        return NamedSharding(mesh, P(part_axes, *([None] * (len(x.shape) - 1))))
+
+    args = (x_abs, dg_abs.rows, dg_abs.cols, dg_abs.tiles, dg_abs.brows,
+            dg_abs.bcols, dg_abs.btiles, dg_abs.out_slot, dg_abs.out_local,
+            dg_abs.out_mask, dg_abs.vmask)
+    shardings = tuple(shard_like(a) for a in args)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(superstep_fn, in_shardings=shardings).lower(*args)
+        compiled = lowered.compile()
+    ca = _jsonable(compiled.cost_analysis())
+    ma = compiled.memory_analysis()
+    return {
+        "arch": "goffish-sssp-superstep",
+        "shape": (f"TR-full V={V} E/part={E_local} T={T} B={B} "
+                  f"dtype={tile_dtype} {'spmd' if spmd else 'jit'}"),
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_devices": n_dev,
+        "full": {
+            "flops": ca.get("flops", 0.0),
+            "bytes": ca.get("bytes accessed", 0.0),
+            "cost_analysis": ca,
+            "memory": {
+                f: getattr(ma, f, None)
+                for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes")
+            },
+            "collectives": collective_bytes_by_kind(compiled.as_text()),
+            "compile_seconds": time.time() - t0,
+        },
+    }
+
+
+def compile_graph_temporal_cell(*, multi_pod: bool = False) -> Dict[str, Any]:
+    """Independent-pattern cell: 16 PageRank instances in flight over the
+    `data` axis x 256 partitions over `model` (paper §IV-B temporal
+    concurrency on the mesh)."""
+    from repro.configs import get_graph_config
+    from repro.core.temporal import make_temporal_pagerank
+    from repro.dist.collectives import collective_bytes_by_kind
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = 512 if multi_pod else 256
+    gc = get_graph_config("full")
+    B = gc.block_size
+    P_parts = 256
+    V = gc.num_vertices
+    vp = -(-V // P_parts // B) * B
+    E_local = int(V * gc.avg_degree * 0.7) // P_parts
+    T = max(1, E_local // 32)
+    NB = -(-int(V * 0.05) // B) * B
+    Tb = max(1, T // 8)
+    O = NB // P_parts * 4
+    I = 32 if multi_pod else 16  # instances in flight over data(+pod)
+
+    def sds(shape, dt=jnp.float32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    fn = make_temporal_pagerank(
+        mesh, block_size=B, num_boundary=NB, num_vertices=V, iters=30,
+        data_axis=data_axes if len(data_axes) > 1 else data_axes[0],
+        model_axes=("model",),
+    )
+    args = (
+        sds((I, P_parts, T, B, B)), sds((I, P_parts, Tb, B, B)),
+        sds((P_parts, T), jnp.int32), sds((P_parts, T), jnp.int32),
+        sds((P_parts, Tb), jnp.int32), sds((P_parts, Tb), jnp.int32),
+        sds((P_parts, O), jnp.int32), sds((P_parts, O), jnp.int32),
+        sds((P_parts, O), jnp.bool_), sds((P_parts, vp), jnp.bool_),
+    )
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        compiled = lowered.compile()
+    ca = _jsonable(compiled.cost_analysis())
+    ma = compiled.memory_analysis()
+    return {
+        "arch": "goffish-pagerank-temporal",
+        "shape": f"TR-full I={I} P={P_parts} T={T} B={B} iters=30",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_devices": n_dev,
+        "full": {
+            "flops": ca.get("flops", 0.0),
+            "bytes": ca.get("bytes accessed", 0.0),
+            "cost_analysis": ca,
+            "memory": {
+                f: getattr(ma, f, None)
+                for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes")
+            },
+            "collectives": collective_bytes_by_kind(compiled.as_text()),
+            "compile_seconds": time.time() - t0,
+        },
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--graph", action="store_true")
+    ap.add_argument("--graph-temporal", action="store_true")
+    ap.add_argument("--graph-dtype", default="float32")
+    ap.add_argument("--graph-spmd", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-fit", action="store_true")
+    ap.add_argument("--no-seq-shard-kv", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--flash-decode", action="store_true")
+    ap.add_argument("--cast-params", action="store_true")
+    ap.add_argument("--params-dtype", default="float32")
+    ap.add_argument("--serve-replicated-weights", action="store_true")
+    ap.add_argument("--no-sp", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, LM_SHAPES
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in LM_SHAPES:
+                cells.append((a, s.name))
+    elif args.arch:
+        shapes = [args.shape] if args.shape else [s.name for s in LM_SHAPES]
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    out_f = open(args.out, "a") if args.out else None
+    n_fail = 0
+    for multi_pod in meshes:
+        if args.graph_temporal:
+            rec = compile_graph_temporal_cell(multi_pod=multi_pod)
+            line = json.dumps(rec)
+            print(f"[{rec['mesh']}] {rec['arch']}: ok", flush=True)
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+        if args.graph:
+            rec = compile_graph_cell(multi_pod=multi_pod,
+                                     tile_dtype=args.graph_dtype,
+                                     spmd=args.graph_spmd)
+            line = json.dumps(rec)
+            print(line if not out_f else rec["arch"] + " ok")
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+        for arch, shape in cells:
+            try:
+                rec = compile_cell(
+                    arch, shape, multi_pod=multi_pod,
+                    seq_shard_kv=not args.no_seq_shard_kv,
+                    fit=not args.no_fit, remat=args.remat,
+                    flash_decode=args.flash_decode,
+                    cast_params=args.cast_params,
+                    params_dtype=args.params_dtype,
+                    serve_replicated_weights=args.serve_replicated_weights,
+                    no_sp=args.no_sp,
+                )
+                status = rec.get("skipped", "ok")
+            except Exception as e:  # noqa: BLE001 — record and continue
+                rec = {
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if multi_pod else "16x16",
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:],
+                }
+                status = "ERROR"
+                n_fail += 1
+            line = json.dumps(rec)
+            mesh_name = "2x16x16" if multi_pod else "16x16"
+            print(f"[{mesh_name}] {arch} x {shape}: {status}", flush=True)
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+            elif "error" in rec:
+                print(rec["traceback"], file=sys.stderr)
+    if out_f:
+        out_f.close()
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

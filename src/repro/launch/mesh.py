@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run must set
+XLA_FLAGS before anything initializes devices.
+
+Mesh shapes:
+  single pod : (16, 16)      axes (data, model)      = 256 chips (v5e pod)
+  multi-pod  : (2, 16, 16)   axes (pod, data, model) = 512 chips
+
+``pod`` composes with ``data`` for data parallelism: the only cross-pod
+(DCI) collective in steady state is the gradient all-reduce, optionally
+int8-compressed (repro.dist.compression).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over host devices for CPU tests (needs
+    XLA_FLAGS=--xla_force_host_platform_device_count >= data*model)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

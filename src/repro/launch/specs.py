@@ -1,0 +1,246 @@
+"""Abstract input/state specs for every (arch x shape) dry-run cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct, no
+allocation) for the step function selected by the shape kind:
+
+* train_*   -> train_step(params, opt_state, batch)
+* prefill_* -> prefill(params, {tokens, cache, [patches|frames]})
+* decode_*  -> decode_step(params, {tokens, pos, cache})
+
+``cell_shardings`` maps every leaf onto the production mesh: params/opt via
+the logical-axis rules, batches over the DP axes, KV caches over
+(data=batch, model=sequence) — sequence-parallel KV is what lets a ~1.5 TB
+32k-decode cache (mistral-large) fit 256 chips.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist.sharding import Runtime, default_rules, shardings_for_schema
+from repro.models import abstract_params, model_schema
+from repro.models.model import init_serve_cache
+from repro.train.optimizer import OptConfig
+
+Params = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def runtime_for(mesh: Optional[Mesh]) -> Runtime:
+    if mesh is None:
+        from repro.dist.sharding import CPU_RUNTIME
+
+        return CPU_RUNTIME
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return Runtime(mesh=mesh, dp_axes=dp, tp_axis="model")
+
+
+def abstract_opt_state(params: Params, oc: OptConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(oc.state_dtype)
+    mom = jax.tree.map(lambda p: _sds(p.shape, dt), params)
+    return {"mu": mom, "nu": mom, "step": _sds((), jnp.int32)}
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        out["patches"] = _sds((B, cfg.num_image_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        out["frames"] = _sds((B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def serve_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Prefill: prompt of seq_len fills a cache of exactly seq_len.  Decode:
+    one new token against a cache of seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_serve_cache(cfg, B, S))
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((B, S), jnp.int32), "cache": cache}
+        if cfg.family == "vlm":
+            out["patches"] = _sds(
+                (B, cfg.num_image_patches, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "audio":
+            out["frames"] = _sds((B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        return out
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((B,), jnp.int32),
+        "cache": cache,
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, oc: OptConfig = OptConfig(),
+                *, params_dtype=jnp.float32):
+    """(params, opt_state, batch) for train; (params, batch) for serving.
+
+    ``params_dtype=bf16`` models the distributed-optimizer configuration
+    (bf16 live weights, f32 masters inside the optimizer state) — all
+    forward/backward collectives move bf16 by construction (§Perf)."""
+    params = abstract_params(cfg, params_dtype)
+    if shape.is_train:
+        return params, abstract_opt_state(params, oc), batch_specs(cfg, shape)
+    return params, serve_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def _dp(mesh: Mesh):
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            n *= int(mesh.shape[a])
+    return n
+
+
+def _cache_leaf_spec(
+    path: Tuple[str, ...], name: str, x, mesh: Mesh, B: int, seq_shard: bool
+) -> P:
+    """Sharding for one cache leaf by its (path, name) and fixed layout.
+
+    Layouts (leading dims are layer stacks of any depth):
+      k/v   (..., B, S, K, hd)   batch @ -4, seq @ -3
+      pos   (..., B, S)          batch @ -2, seq @ -1
+      len   (..., B)             batch @ -1
+      conv  (..., B, W-1, di)    batch @ -3, channels @ -1
+      ssm   (..., B, di, N)      batch @ -3, channels @ -2
+      mlstm c (..., B, H, hd, hd)  batch @ -4
+      mlstm n (..., B, H, hd)      batch @ -3
+      mlstm m (..., B, H)          batch @ -2
+      slstm h/c/n/m (..., B, d)    batch @ -2, d @ -1
+    """
+    dp = _dp(mesh)
+    dpn = _dp_size(mesh)
+    ntp = mesh.shape["model"]
+    axes: list = [None] * x.ndim
+    in_slstm = "slstm" in path
+    in_mlstm = "mlstm" in path
+
+    def set_batch(i: int):
+        if B > 1 and B % dpn == 0 and x.shape[i] == B:
+            axes[i] = dp
+
+    def set_model(i: int):
+        if x.shape[i] % ntp == 0:
+            axes[i] = "model"
+
+    if name in ("k", "v"):
+        set_batch(x.ndim - 4)
+        if seq_shard:
+            set_model(x.ndim - 3)
+    elif name == "pos":
+        set_batch(x.ndim - 2)
+        if seq_shard:
+            set_model(x.ndim - 1)
+    elif name == "len":
+        set_batch(x.ndim - 1)
+    elif name == "conv":
+        set_batch(x.ndim - 3)
+        set_model(x.ndim - 1)
+    elif name == "ssm":
+        set_batch(x.ndim - 3)
+        set_model(x.ndim - 2)
+    elif in_slstm:  # h / c / n / m: (..., B, d)
+        set_batch(x.ndim - 2)
+        set_model(x.ndim - 1)
+    elif in_mlstm:
+        if name == "c":
+            set_batch(x.ndim - 4)
+        elif name == "n":
+            set_batch(x.ndim - 3)
+        elif name == "m":
+            set_batch(x.ndim - 2)
+    return P(*axes)
+
+
+def _cache_spec_tree(cache_abs: Any, mesh: Mesh, B: int, seq_shard: bool) -> Any:
+    def walk(tree, path: Tuple[str, ...]):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, tuple):  # whisper cross-KV (k, v)
+            names = ("k", "v")
+            return tuple(
+                _cache_leaf_spec(path, names[i], v, mesh, B, seq_shard)
+                for i, v in enumerate(tree)
+            )
+        return _cache_leaf_spec(path[:-1], path[-1], tree, mesh, B, seq_shard)
+
+    specs = walk(cache_abs, ())
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def cell_shardings(
+    cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *, seq_shard_kv: bool = True,
+    serve_replicated_weights: bool = False,
+):
+    """NamedSharding trees matching ``input_specs`` for this cell.
+
+    ``serve_replicated_weights``: serving has no optimizer state, so the
+    FSDP ("embed" over data) sharding only forces per-step weight gathers —
+    replicating weights over the data axis removes them (§Perf; pair with
+    bf16 weights for the memory headroom)."""
+    rules = default_rules()
+    if serve_replicated_weights and not shape.is_train:
+        rules = {**rules, "embed": None}
+    schema = model_schema(cfg)
+    p_sh = shardings_for_schema(schema, rules, mesh)
+    dp = _dp(mesh)
+    if shape.is_train:
+        o_sh = {
+            "mu": p_sh, "nu": p_sh,
+            "step": NamedSharding(mesh, P()),
+        }
+        b = {
+            "tokens": NamedSharding(mesh, P(dp, None)),
+            "labels": NamedSharding(mesh, P(dp, None)),
+        }
+        if cfg.family == "vlm":
+            b["patches"] = NamedSharding(mesh, P(dp, None, None))
+        if cfg.family == "audio":
+            b["frames"] = NamedSharding(mesh, P(dp, None, None))
+        return p_sh, o_sh, b
+
+    cache_abs = jax.eval_shape(
+        lambda: init_serve_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    c_sh = _cache_spec_tree(cache_abs, mesh, shape.global_batch, seq_shard_kv)
+    bspec = P(dp, None) if shape.global_batch % _dp_size(mesh) == 0 \
+        and shape.global_batch > 1 else P(None, None)
+    if shape.kind == "prefill":
+        b = {
+            "tokens": NamedSharding(mesh, bspec),
+            "cache": c_sh,
+        }
+        if cfg.family == "vlm":
+            b["patches"] = NamedSharding(mesh, P(*bspec, None))
+        if cfg.family == "audio":
+            b["frames"] = NamedSharding(mesh, P(*bspec, None))
+        return p_sh, b
+    b = {
+        "tokens": NamedSharding(mesh, bspec),
+        "pos": NamedSharding(mesh, P(bspec[0])),
+        "cache": c_sh,
+    }
+    return p_sh, b

@@ -1,0 +1,22 @@
+"""Model zoo: one functional API over all assigned architecture families."""
+from repro.models.model import (
+    abstract_params,
+    decode_step,
+    forward_train,
+    init_model_params,
+    init_serve_cache,
+    logical_axes,
+    model_schema,
+    prefill,
+)
+
+__all__ = [
+    "abstract_params",
+    "decode_step",
+    "forward_train",
+    "init_model_params",
+    "init_serve_cache",
+    "logical_axes",
+    "model_schema",
+    "prefill",
+]

@@ -1,0 +1,139 @@
+"""Hymba-style hybrid layer: attention heads and Mamba/SSM heads run in
+PARALLEL on the same layer input; per-path RMS normalization + learnable
+mixing, then a shared MLP.  128 learnable meta tokens are prepended to the
+sequence at the model level (always attendable via ``prefix_len`` even under
+sliding-window masking).  First/middle/last layers use global attention, the
+rest sliding-window — expressed as a per-layer window array so the layer
+stack stays scan-homogeneous.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    ParamDef,
+    apply_mlp,
+    apply_norm,
+    mlp_schema,
+    norm_schema,
+    stacked,
+)
+
+Params = Any
+
+GLOBAL_WINDOW = 2**30  # "unbounded" window sentinel for global-attention layers
+
+
+def hymba_layer_schema(cfg) -> Dict:
+    return {
+        "ln1": norm_schema(cfg),
+        "attn": attn.attn_schema(cfg),
+        "ssm": ssm_mod.ssm_schema(cfg),
+        "attn_scale": ParamDef((cfg.d_model,), ("embed",), "ones"),
+        "ssm_scale": ParamDef((cfg.d_model,), ("embed",), "ones"),
+        "ln2": norm_schema(cfg),
+        "mlp": mlp_schema(cfg),
+    }
+
+
+def hymba_schema(cfg) -> Dict:
+    return {
+        "embed": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"), "embed"),
+        "meta": ParamDef((cfg.meta_tokens, cfg.d_model), (None, "embed"), "embed"),
+        "layers": stacked(hymba_layer_schema(cfg), cfg.num_layers),
+        "ln_f": norm_schema(cfg),
+        "head": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed")),
+    }
+
+
+def window_per_layer(cfg) -> jnp.ndarray:
+    """Global attention on first / middle / last layer, sliding elsewhere."""
+    L = cfg.num_layers
+    w = jnp.full((L,), cfg.sliding_window or GLOBAL_WINDOW, jnp.int32)
+    for g in {0, L // 2, L - 1}:
+        w = w.at[g].set(GLOBAL_WINDOW)
+    return w
+
+
+def _rms_mix(p: Params, a: jax.Array, s: jax.Array, cfg) -> jax.Array:
+    def nrm(v, scale):
+        ms = jnp.mean(jnp.square(v.astype(jnp.float32)), -1, keepdims=True)
+        return v.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6) * scale
+
+    out = 0.5 * (nrm(a, p["attn_scale"].astype(jnp.float32))
+                 + nrm(s, p["ssm_scale"].astype(jnp.float32)))
+    return out.astype(a.dtype)
+
+
+def apply_hymba_layer(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    runtime,
+    *,
+    positions: jax.Array,
+    window: jax.Array,
+    prefix_len: int,
+    layer_cache=None,  # {"kv": attn cache, "conv":..., "ssm":...} or None
+) -> Tuple[jax.Array, Any]:
+    x = runtime.activation(x)
+    h = apply_norm(p["ln1"], x, cfg)
+    kv_cache = None if layer_cache is None else layer_cache["kv"]
+    a, new_kv = attn.apply_attention(
+        p["attn"], h, cfg, positions=positions, causal=True,
+        window=window, prefix_len=prefix_len, layer_cache=kv_cache,
+        runtime=runtime,
+    )
+    ssm_state = (
+        None if layer_cache is None
+        else {"conv": layer_cache["conv"], "ssm": layer_cache["ssm"]}
+    )
+    s, new_ssm = ssm_mod.ssm_apply(p["ssm"], h, cfg, state=ssm_state)
+    x = x + _rms_mix(p, a, s, cfg)
+    h = apply_norm(p["ln2"], x, cfg)
+    x = runtime.activation(x + apply_mlp(p["mlp"], h, cfg))
+    new_cache = None
+    if layer_cache is not None:
+        new_cache = {"kv": new_kv, "conv": new_ssm["conv"], "ssm": new_ssm["ssm"]}
+    return x, new_cache
+
+
+def apply_hymba_stack(
+    layers: Params,
+    x: jax.Array,
+    cfg,
+    runtime,
+    *,
+    positions: jax.Array,
+    mode: str = "train",
+    cache=None,
+) -> Tuple[jax.Array, Any]:
+    windows = window_per_layer(cfg)
+    prefix = cfg.meta_tokens
+
+    def body(xc, xs):
+        lp, w, lcache = xs
+        fn = lambda pp, xx, lc: apply_hymba_layer(
+            pp, xx, cfg, runtime, positions=positions, window=w,
+            prefix_len=prefix, layer_cache=lc,
+        )
+        if mode == "train" and cfg.remat != "none":
+            fn = jax.checkpoint(fn)
+        y, c = fn(lp, xc, lcache)
+        return y, c
+
+    x, new_cache = jax.lax.scan(body, x, (layers, windows, cache),
+                                unroll=cfg.scan_unroll)
+    return x, new_cache
+
+
+def init_hymba_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    L = cfg.num_layers
+    kv = attn.init_kv_cache(cfg, batch, max_len + cfg.meta_tokens, L, dtype)
+    ssm_state = ssm_mod.init_ssm_state(cfg, batch, L, dtype=dtype)
+    return {"kv": kv, "conv": ssm_state["conv"], "ssm": ssm_state["ssm"]}

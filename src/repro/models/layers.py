@@ -1,0 +1,186 @@
+"""Parameter schemas + common layers (norms, MLPs, RoPE, positions).
+
+Everything is functional pure-JAX: a module is (schema, apply).  The schema
+is the single source of truth for parameter shapes, init, and *logical* axis
+names; ``repro.dist.sharding`` maps logical axes onto mesh axes.  Layer
+stacks store parameters with a leading ``layers`` axis and run under
+``lax.scan`` so HLO size is O(1) in depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict of arrays
+Schema = Any  # nested dict of ParamDef
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | embed | deep
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key: jax.Array, d: ParamDef, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape) * 0.02 * d.scale).astype(dtype)
+    # fan-in scaled normal
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    std = d.scale / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, d.shape) * std).astype(dtype)
+
+
+def init_params(key: jax.Array, schema: Schema, dtype=jnp.float32) -> Params:
+    """Deterministic init: each leaf key is folded from its path."""
+
+    def go(key, node, path):
+        if isinstance(node, ParamDef):
+            k = key
+            for p in path:
+                k = jax.random.fold_in(k, hash(p) % (2**31))
+            return _init_leaf(k, node, dtype)
+        return {name: go(key, child, path + (name,)) for name, child in node.items()}
+
+    return go(key, schema, ())
+
+
+def schema_axes(schema: Schema) -> Params:
+    """Tree of logical-axis tuples mirroring the param tree."""
+    if isinstance(schema, ParamDef):
+        return schema.axes
+    return {k: schema_axes(v) for k, v in schema.items()}
+
+
+def schema_shapes(schema: Schema, dtype=jnp.float32) -> Params:
+    if isinstance(schema, ParamDef):
+        return jax.ShapeDtypeStruct(schema.shape, dtype)
+    return {k: schema_shapes(v, dtype) for k, v in schema.items()}
+
+
+def stacked(schema: Schema, n: int) -> Schema:
+    """Prepend a ``layers`` axis of size n to every leaf (for lax.scan)."""
+    if isinstance(schema, ParamDef):
+        return dataclasses.replace(
+            schema, shape=(n,) + schema.shape, axes=("layers",) + schema.axes
+        )
+    return {k: stacked(v, n) for k, v in schema.items()}
+
+
+def init_stacked(key: jax.Array, schema: Schema, n: int, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_params(k, schema, dtype))(keys)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def norm_schema(cfg) -> Schema:
+    d = cfg.d_model
+    sch = {"scale": ParamDef((d,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        sch["bias"] = ParamDef((d,), ("embed",), "zeros")
+    return sch
+
+
+def apply_norm(p: Params, x: jax.Array, cfg) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x, -1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), -1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x), -1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def _gated(act_name: str) -> bool:
+    return act_name in ("swiglu", "geglu")
+
+
+def _act(act_name: str, x: jax.Array) -> jax.Array:
+    if act_name in ("swiglu", "silu"):
+        return jax.nn.silu(x)
+    if act_name in ("geglu", "gelu"):
+        return jax.nn.gelu(x)
+    if act_name == "relu":
+        return jax.nn.relu(x)
+    if act_name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(act_name)
+
+
+def mlp_schema(cfg, d_ff: Optional[int] = None) -> Schema:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    wi_cols = 2 * f if _gated(cfg.mlp_activation) else f
+    return {
+        "wi": ParamDef((d, wi_cols), ("embed", "ffn")),
+        "wo": ParamDef((f, d), ("ffn", "embed"), scale=1.0),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array, cfg) -> jax.Array:
+    h = x @ p["wi"].astype(x.dtype)
+    if _gated(cfg.mlp_activation):
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = _act(cfg.mlp_activation, gate) * up
+    else:
+        h = _act(cfg.mlp_activation, h)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding (with partial-dim rotation, GLM-style)
+# --------------------------------------------------------------------------
+
+def rope_frequencies(cfg) -> jax.Array:
+    rot = int(cfg.head_dim * cfg.rope_fraction)
+    rot -= rot % 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: (..., S)."""
+    if cfg.pos_embed != "rope":
+        return x
+    freqs = rope_frequencies(cfg)  # (rot/2,)
+    rot = 2 * freqs.shape[0]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    sin = jnp.sin(angles)[..., :, None, :]  # (..., S, 1, rot/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    y1 = (x1 * cos - x2 * sin).astype(x.dtype)
+    y2 = (x2 * cos + x1 * sin).astype(x.dtype)
+    return jnp.concatenate([y1, y2, xp], axis=-1)
+
+
+def sinusoidal_positions(max_len: int, d: int) -> jax.Array:
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((max_len, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle[:, : (d + 1) // 2]))
+    return pe

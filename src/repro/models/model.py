@@ -1,0 +1,252 @@
+"""Family dispatcher: one API over dense / moe / vlm / audio / hybrid / ssm.
+
+Public surface:
+  model_schema(cfg)                  -> param schema (single source of truth)
+  init_model_params(key, cfg, dtype) -> concrete params
+  abstract_params(cfg, dtype)        -> ShapeDtypeStruct tree (dry-run)
+  forward_train(params, batch, cfg, runtime) -> (loss, metrics)
+  prefill(params, batch, cfg, runtime)       -> (logits_last, cache)
+  decode_step(params, batch, cfg, runtime)   -> (logits, new_cache)
+  init_serve_cache(cfg, batch, max_len)      -> family-appropriate cache
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import CPU_RUNTIME, Runtime, embed_lookup, lm_head_loss, lm_head_logits
+from repro.models import encdec, hybrid, transformer, xlstm
+from repro.models.layers import apply_norm, init_params, schema_axes, schema_shapes
+
+Params = Any
+
+
+def model_schema(cfg) -> Any:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.decoder_schema(cfg)
+    if cfg.family == "audio":
+        return encdec.encdec_schema(cfg)
+    if cfg.family == "hybrid":
+        return hybrid.hymba_schema(cfg)
+    if cfg.family == "ssm":
+        return xlstm.xlstm_schema(cfg)
+    raise ValueError(cfg.family)
+
+
+def init_model_params(key: jax.Array, cfg, dtype=jnp.float32) -> Params:
+    return init_params(key, model_schema(cfg), dtype)
+
+
+def abstract_params(cfg, dtype=jnp.float32) -> Params:
+    return schema_shapes(model_schema(cfg), dtype)
+
+
+def logical_axes(cfg) -> Params:
+    return schema_axes(model_schema(cfg))
+
+
+def _head_weight(params: Params, cfg) -> jax.Array:
+    return params["embed"] if cfg.tie_embeddings else params["head"]
+
+
+def _positions(B: int, S: int, offset: int = 0) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(S)[None] + offset, (B, S))
+
+
+# --------------------------------------------------------------------------
+# Training forward
+# --------------------------------------------------------------------------
+
+def forward_train(
+    params: Params, batch: Dict[str, jax.Array], cfg, runtime: Runtime = CPU_RUNTIME
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    dt = jnp.dtype(cfg.dtype)
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S_txt = tokens.shape
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe"):
+        x = embed_lookup(params["embed"], tokens, runtime).astype(dt)
+        pos = _positions(B, S_txt)
+        x, _, aux = transformer.apply_stack(
+            params["groups"], x, cfg, runtime, positions=pos, mode="train"
+        )
+        strip = 0
+
+    elif cfg.family == "vlm":
+        patches = batch["patches"].astype(dt)  # (B, P, d) stub SigLIP output
+        P_img = patches.shape[1]
+        xt = embed_lookup(params["embed"], tokens, runtime).astype(dt)
+        xt = xt * jnp.sqrt(cfg.d_model).astype(dt)  # gemma embedding scale
+        x = jnp.concatenate([patches, xt], axis=1)
+        pos = _positions(B, x.shape[1])
+        x, _, aux = transformer.apply_stack(
+            params["groups"], x, cfg, runtime, positions=pos, mode="train",
+            prefix_len=P_img,
+        )
+        strip = P_img
+
+    elif cfg.family == "audio":
+        frames = batch["frames"].astype(dt)
+        enc_out = encdec.encode(params, frames, cfg, runtime)
+        cross_kv = encdec.cross_kv_all_layers(params, enc_out, cfg)
+        pos = _positions(B, S_txt)
+        x = encdec.decoder_embed(params, tokens, pos, cfg, runtime).astype(dt)
+        x, _, aux = encdec.decode_stack(
+            params, x, cfg, runtime, positions=pos, cross_kv=cross_kv, mode="train"
+        )
+        strip = 0
+
+    elif cfg.family == "hybrid":
+        xt = embed_lookup(params["embed"], tokens, runtime).astype(dt)
+        M = cfg.meta_tokens
+        meta = jnp.broadcast_to(params["meta"].astype(dt)[None], (B, M, cfg.d_model))
+        x = jnp.concatenate([meta, xt], axis=1)
+        pos = _positions(B, x.shape[1])
+        x, _ = hybrid.apply_hymba_stack(
+            params["layers"], x, cfg, runtime, positions=pos, mode="train"
+        )
+        strip = M
+
+    elif cfg.family == "ssm":
+        x = embed_lookup(params["embed"], tokens, runtime).astype(dt)
+        x, _ = xlstm.apply_xlstm_stack(
+            params["supers"], x, cfg, runtime, mode="train"
+        )
+        strip = 0
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["ln_f"], x[:, strip:], cfg)
+    loss_ce = lm_head_loss(x, _head_weight(params, cfg), labels, runtime,
+                           valid_vocab=cfg.vocab_size)
+    loss = loss_ce + cfg.moe.aux_loss_weight * aux
+    return loss, {"loss": loss, "ce": loss_ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# --------------------------------------------------------------------------
+
+def init_serve_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.family in ("dense", "moe"):
+        return transformer.init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "vlm":
+        return transformer.init_cache(cfg, batch, max_len + cfg.num_image_patches, dtype)
+    if cfg.family == "audio":
+        return encdec.init_encdec_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "hybrid":
+        return hybrid.init_hymba_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "ssm":
+        return xlstm.init_xlstm_state(cfg, batch)
+    raise ValueError(cfg.family)
+
+
+def prefill(
+    params: Params, batch: Dict[str, Any], cfg, runtime: Runtime = CPU_RUNTIME
+) -> Tuple[jax.Array, Any]:
+    """Fill the cache from a prompt.  batch: tokens (B, S) [+ patches/frames],
+    cache (pre-initialized).  Returns (last-token logits, cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    cache = batch["cache"]
+    B, S_txt = tokens.shape
+
+    if cfg.family in ("dense", "moe"):
+        x = embed_lookup(params["embed"], tokens, runtime).astype(dt)
+        pos = _positions(B, S_txt)
+        x, cache, _ = transformer.apply_stack(
+            params["groups"], x, cfg, runtime, positions=pos, mode="prefill",
+            cache=cache,
+        )
+    elif cfg.family == "vlm":
+        patches = batch["patches"].astype(dt)
+        P_img = patches.shape[1]
+        xt = embed_lookup(params["embed"], tokens, runtime).astype(dt)
+        xt = xt * jnp.sqrt(cfg.d_model).astype(dt)
+        x = jnp.concatenate([patches, xt], axis=1)
+        pos = _positions(B, x.shape[1])
+        x, cache, _ = transformer.apply_stack(
+            params["groups"], x, cfg, runtime, positions=pos, mode="prefill",
+            cache=cache, prefix_len=P_img,
+        )
+    elif cfg.family == "audio":
+        enc_out = encdec.encode(params, batch["frames"].astype(dt), cfg, runtime)
+        cross_kv = encdec.cross_kv_all_layers(params, enc_out, cfg)
+        cross_kv = jax.tree.map(lambda a: a.astype(jnp.bfloat16), cross_kv)
+        pos = _positions(B, S_txt)
+        x = encdec.decoder_embed(params, tokens, pos, cfg, runtime).astype(dt)
+        x, self_cache, _ = encdec.decode_stack(
+            params, x, cfg, runtime, positions=pos, cross_kv=cross_kv,
+            mode="prefill", cache=batch["cache"]["self"],
+        )
+        cache = {"self": self_cache, "cross": cross_kv}
+    elif cfg.family == "hybrid":
+        xt = embed_lookup(params["embed"], tokens, runtime).astype(dt)
+        M = cfg.meta_tokens
+        meta = jnp.broadcast_to(params["meta"].astype(dt)[None], (B, M, cfg.d_model))
+        x = jnp.concatenate([meta, xt], axis=1)
+        pos = _positions(B, x.shape[1])
+        x, cache = hybrid.apply_hymba_stack(
+            params["layers"], x, cfg, runtime, positions=pos, mode="prefill",
+            cache=cache,
+        )
+    elif cfg.family == "ssm":
+        x = embed_lookup(params["embed"], tokens, runtime).astype(dt)
+        x, cache = xlstm.apply_xlstm_stack(
+            params["supers"], x, cfg, runtime, mode="prefill", state=cache
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    x_last = apply_norm(params["ln_f"], x[:, -1:], cfg)
+    logits = lm_head_logits(x_last, _head_weight(params, cfg), runtime,
+                             valid_vocab=cfg.vocab_size)
+    return logits, cache
+
+
+def decode_step(
+    params: Params, batch: Dict[str, Any], cfg, runtime: Runtime = CPU_RUNTIME
+) -> Tuple[jax.Array, Any]:
+    """One new token against the cache.  batch: tokens (B,1), pos (B,), cache."""
+    dt = jnp.dtype(cfg.dtype)
+    tokens, cache = batch["tokens"], batch["cache"]
+    B = tokens.shape[0]
+    pos = batch["pos"][:, None]  # (B,1) absolute position of the new token
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x = embed_lookup(params["embed"], tokens, runtime).astype(dt)
+        if cfg.family == "vlm":
+            x = x * jnp.sqrt(cfg.d_model).astype(dt)
+        prefix = cfg.num_image_patches if cfg.family == "vlm" else 0
+        x, cache, _ = transformer.apply_stack(
+            params["groups"], x, cfg, runtime, positions=pos, mode="decode",
+            cache=cache, prefix_len=prefix,
+        )
+    elif cfg.family == "audio":
+        x = encdec.decoder_embed(params, tokens, pos, cfg, runtime).astype(dt)
+        x, self_cache, _ = encdec.decode_stack(
+            params, x, cfg, runtime, positions=pos, cross_kv=cache["cross"],
+            mode="decode", cache=cache["self"],
+        )
+        cache = {"self": self_cache, "cross": cache["cross"]}
+    elif cfg.family == "hybrid":
+        x = embed_lookup(params["embed"], tokens, runtime).astype(dt)
+        x, cache = hybrid.apply_hymba_stack(
+            params["layers"], x, cfg, runtime, positions=pos, mode="decode",
+            cache=cache,
+        )
+    elif cfg.family == "ssm":
+        x = embed_lookup(params["embed"], tokens, runtime).astype(dt)
+        x, cache = xlstm.apply_xlstm_stack(
+            params["supers"], x, cfg, runtime, mode="decode", state=cache
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = lm_head_logits(x, _head_weight(params, cfg), runtime,
+                             valid_vocab=cfg.vocab_size)
+    return logits, cache

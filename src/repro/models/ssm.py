@@ -1,0 +1,154 @@
+"""Mamba-style selective SSM block (used by hymba's parallel SSM heads).
+
+Training/prefill uses a chunked linear-recurrence: within a chunk the
+recurrence h_t = Ā_t h_{t-1} + B̄_t x_t is evaluated with an associative scan
+(parallel on TPU); chunks are chained with a sequential ``lax.scan`` carrying
+the (B, d_inner, N) state.  This bounds the materialized scan elements to
+O(chunk · d_inner · N) instead of O(S · d_inner · N).
+
+Decode is a single recurrent step against carried (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef
+
+Params = Any
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def ssm_schema(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    n = cfg.ssm.state_dim
+    r = _dt_rank(cfg)
+    w = cfg.ssm.conv_width
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((w, di), (None, "ssm_inner"), scale=0.5),
+        "conv_b": ParamDef((di,), ("ssm_inner",), "zeros"),
+        "x_proj": ParamDef((di, r + 2 * n), ("ssm_inner", None)),
+        "dt_proj": ParamDef((r, di), (None, "ssm_inner")),
+        "dt_bias": ParamDef((di,), ("ssm_inner",), "zeros"),
+        "a_log": ParamDef((di, n), ("ssm_inner", "state"), "ones"),
+        "d_skip": ParamDef((di,), ("ssm_inner",), "ones"),
+        "out_proj": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _ssm_coeffs(p: Params, xz: jax.Array, cfg):
+    """xz: (B, S, di) post-conv activations -> (dA (B,S,di,N), dBx, C)."""
+    n = cfg.ssm.state_dim
+    r = _dt_rank(cfg)
+    proj = xz @ p["x_proj"].astype(xz.dtype)  # (B,S,r+2n)
+    dt_r, bmat, cmat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_r @ p["dt_proj"].astype(xz.dtype)
+        + p["dt_bias"].astype(xz.dtype)
+    ).astype(jnp.float32)  # (B,S,di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, N), negative
+    dA = jnp.exp(dt[..., None] * a)  # (B,S,di,N)
+    dBx = (dt * xz.astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[..., None, :]
+    return dA, dBx, cmat.astype(jnp.float32)
+
+
+def _conv1d_causal(p: Params, x: jax.Array, conv_state: Optional[jax.Array]):
+    """Depthwise causal conv.  x: (B,S,di).  Returns (y, new_conv_state)."""
+    w = p["conv_w"].astype(x.dtype)  # (W, di)
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, di)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    y = y + p["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(W - 1) :] if W > 1 else pad[:, :0]
+    return y, new_state
+
+
+def _scan_chunked(p: Params, xi: jax.Array, cfg, h0, chunk: int):
+    """Chunked selective scan: per chunk, compute coefficients, run the
+    associative recurrence, and contract the state against C IN PLACE —
+    the (B, chunk, di, N) tensors never exist for more than one chunk
+    (memory O(B·chunk·di·N) instead of O(B·S·di·N)).
+
+    xi: (B, S, di) post-conv activations.  h0: (B, di, N) fp32.
+    Returns (y (B, S, di) fp32, h_last).
+    """
+    B, S, di = xi.shape
+    N = cfg.ssm.state_dim
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        xi = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // chunk
+    xc = xi.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3)  # (nc,B,c,di)
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, xk):
+        dA, dBx, cmat = _ssm_coeffs(p, xk, cfg)  # (B,c,di,N) / (B,c,N)
+        accA, accB = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        hs = accA * h[:, None] + accB  # (B, c, di, N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cmat)
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(chunk_step, h0, xc)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nc * chunk, di)[:, :S]
+    return y, h_last
+
+
+def ssm_apply(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,  # conv_state, ssm_state
+    chunk: int = 128,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, d = x.shape
+    di = cfg.ssm.expand * d
+    dt_ = x.dtype
+    xz = x @ p["in_proj"].astype(dt_)  # (B,S,2di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xi, new_conv = _conv1d_causal(p, xi, conv_state)
+    xi = jax.nn.silu(xi)
+    h0 = (
+        state["ssm"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, di, cfg.ssm.state_dim), jnp.float32)
+    )
+    if S == 1 and state is not None:  # decode fast path
+        dA, dBx, cmat = _ssm_coeffs(p, xi, cfg)
+        h_last = dA[:, 0] * h0 + dBx[:, 0]
+        y = jnp.einsum("bsdn,bsn->bsd", h_last[:, None], cmat)
+    else:
+        y, h_last = _scan_chunked(p, xi, cfg, h0, chunk)
+    y = y + xi.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(dt_)) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt_)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype), "ssm": h_last}
+    return out, new_state
+
+
+def init_ssm_state(cfg, batch: int, n_layers: int, d_model: Optional[int] = None,
+                   dtype=jnp.bfloat16):
+    d = d_model or cfg.d_model
+    di = cfg.ssm.expand * d
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm.conv_width - 1, di), dtype),
+        "ssm": jnp.zeros((n_layers, batch, di, cfg.ssm.state_dim), jnp.float32),
+    }

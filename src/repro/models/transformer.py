@@ -1,0 +1,229 @@
+"""Decoder-only transformer stack (dense / MoE / VLM backbone).
+
+Layers are stored stacked (leading ``layers`` axis) and executed under
+``lax.scan`` so HLO size and compile time are O(1) in depth.  MoE archs with
+``moe_every > 1`` scan over *groups* of (moe_every-1 dense + 1 MoE) layers so
+the scan body stays homogeneous.  Remat policy wraps the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    ParamDef,
+    apply_mlp,
+    apply_norm,
+    init_params,
+    init_stacked,
+    mlp_schema,
+    norm_schema,
+    stacked,
+)
+
+Params = Any
+
+
+def layer_schema(cfg, *, kind: str = "dense", cross: bool = False) -> Dict:
+    sch = {
+        "ln1": norm_schema(cfg),
+        "attn": attn.attn_schema(cfg),
+        "ln2": norm_schema(cfg),
+    }
+    if kind == "moe":
+        sch["moe"] = moe_mod.moe_schema(cfg)
+    else:
+        sch["mlp"] = mlp_schema(cfg)
+    if cross:
+        sch["ln_x"] = norm_schema(cfg)
+        sch["xattn"] = attn.attn_schema(cfg, cross=True)
+    return sch
+
+
+def _group_structure(cfg) -> Tuple[int, int, bool]:
+    """(n_groups, dense_per_group, has_moe)."""
+    if cfg.is_moe:
+        ge = cfg.moe.moe_every
+        assert cfg.num_layers % ge == 0
+        return cfg.num_layers // ge, ge - 1, True
+    return cfg.num_layers, 1, False
+
+
+def group_schema(cfg, *, cross: bool = False) -> Dict:
+    n_groups, n_dense, has_moe = _group_structure(cfg)
+    if not has_moe:
+        return {"dense": layer_schema(cfg, kind="dense", cross=cross)}
+    sch = {"moe": layer_schema(cfg, kind="moe", cross=cross)}
+    if n_dense:
+        sch["dense"] = stacked(layer_schema(cfg, kind="dense", cross=cross), n_dense)
+    return sch
+
+
+def decoder_schema(cfg, *, cross: bool = False) -> Dict:
+    n_groups, _, _ = _group_structure(cfg)
+    sch = {
+        "embed": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"), "embed"),
+        "groups": stacked(group_schema(cfg, cross=cross), n_groups),
+        "ln_f": norm_schema(cfg),
+    }
+    if not cfg.tie_embeddings:
+        sch["head"] = ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"))
+    if cfg.meta_tokens:
+        sch["meta"] = ParamDef((cfg.meta_tokens, cfg.d_model), (None, "embed"), "embed")
+    return sch
+
+
+def apply_layer(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    runtime,
+    *,
+    kind: str,
+    positions: jax.Array,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,
+    prefix_len: int | jax.Array = 0,
+    layer_cache=None,
+    cross_kv=None,
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """One transformer layer.  Returns (x, new_cache, aux)."""
+    x = runtime.activation(x)
+    h = apply_norm(p["ln1"], x, cfg)
+    # Pin the POST-norm bf16 output to the residual sharding so the SP->TP
+    # boundary gathers bf16 h, not the f32 norm intermediate (2x bytes);
+    # replicating positions (tiny) lets every device build its attention-
+    # mask slice locally instead of all-gathering O(B*H*S*chunk) pred masks.
+    # NOTE (§Perf, refuted): a full explicit SP->TP all-gather of h here
+    # REGRESSES 2x on GQA models — XLA's choice (gather the small K/V
+    # heads) moves fewer bytes than replicating h, and the replicate
+    # constraint adds a gradient all-reduce on the way back.
+    h = runtime.activation(h)
+    if runtime.mesh is not None:
+        positions = runtime.shard(positions, runtime.batch_axes, None)
+    a, new_cache = attn.apply_attention(
+        p["attn"], h, cfg,
+        positions=positions, causal=causal, window=window,
+        prefix_len=prefix_len, softcap=cfg.attn_logit_softcap,
+        layer_cache=layer_cache,
+        rope=(cfg.pos_embed == "rope"),
+        runtime=runtime,
+    )
+    x = x + a
+    if cross_kv is not None:
+        hx = apply_norm(p["ln_x"], x, cfg)
+        cx, _ = attn.apply_attention(
+            p["xattn"], hx, cfg, positions=positions, cross_kv=cross_kv,
+            rope=False,
+        )
+        x = x + cx
+    h = runtime.activation(apply_norm(p["ln2"], x, cfg))
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "moe":
+        m, aux = moe_mod.moe_apply(p["moe"], h, cfg, runtime)
+    else:
+        m = apply_mlp(p["mlp"], h, cfg)
+    x = runtime.activation(x + m)
+    return x, new_cache, aux
+
+
+def _remat(fn, cfg, mode: str):
+    if mode != "train" or cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def apply_stack(
+    groups: Params,
+    x: jax.Array,
+    cfg,
+    runtime,
+    *,
+    positions: jax.Array,
+    mode: str = "train",
+    causal: bool = True,
+    prefix_len: int | jax.Array = 0,
+    cache=None,  # stacked over groups (and dense-sublayers)
+    cross_kv=None,  # stacked (n_groups[, n_dense], B, Se, H, hd) k/v pair
+    window_flags: Optional[jax.Array] = None,  # per-group window override
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """Scan the group stack.  Returns (x, new_cache, aux_sum)."""
+    n_groups, n_dense, has_moe = _group_structure(cfg)
+    window = jnp.array(cfg.sliding_window, jnp.int32) if cfg.sliding_window else None
+
+    def one_layer(pl, xc, kind, lcache, lcross):
+        return apply_layer(
+            pl, xc, cfg, runtime, kind=kind, positions=positions,
+            causal=causal, window=window, prefix_len=prefix_len,
+            layer_cache=lcache, cross_kv=lcross,
+        )
+
+    use_cache = cache is not None
+    use_cross = cross_kv is not None
+    key = "moe" if has_moe else "dense"
+
+    def sub(tree, name):
+        return None if tree is None else tree[name]
+
+    def group_fn(x, gp, gcache, gcross):
+        aux = jnp.zeros((), jnp.float32)
+        new_cache = {}
+        if has_moe and n_dense:
+            def dense_fn(xc, dxs):
+                dp, dcache, dcross = dxs
+                y, c, a = one_layer(dp, xc, "dense", dcache, dcross)
+                return y, (c, a)
+            dxs = tuple(
+                t for t in (gp["dense"], sub(gcache, "dense"), sub(gcross, "dense"))
+            )
+            x, (dc, da) = jax.lax.scan(
+                _remat(dense_fn, cfg, mode), x, dxs
+            )
+            new_cache["dense"] = dc
+            aux += jnp.sum(da)
+        fn = _remat(
+            lambda pp, xx, lc, lx: one_layer(pp, xx, key, lc, lx), cfg, mode
+        )
+        x, c, a = fn(gp[key], x, sub(gcache, key), sub(gcross, key))
+        new_cache[key] = c
+        aux += a
+        return x, new_cache, aux
+
+    def scan_body(x, xs_):
+        gp = xs_[0]
+        gcache = xs_[1] if use_cache else None
+        gcross = xs_[-1] if use_cross else None
+        x, new_cache, aux = group_fn(x, gp, gcache, gcross)
+        ys = (aux,) + ((new_cache,) if use_cache else ())
+        return x, ys
+
+    xs = (groups,) + ((cache,) if use_cache else ()) + ((cross_kv,) if use_cross else ())
+    x, ys = jax.lax.scan(scan_body, x, xs, unroll=cfg.scan_unroll)
+    new_cache = ys[1] if use_cache else None
+    return x, new_cache, jnp.sum(ys[0])
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """KV cache stacked to mirror the group structure."""
+    n_groups, n_dense, has_moe = _group_structure(cfg)
+
+    def one(n_layers_axis):
+        return attn.init_kv_cache(cfg, batch, max_len, n_layers_axis, dtype)
+
+    if not has_moe:
+        return {"dense": one(n_groups)}
+    cache = {"moe": one(n_groups)}
+    if n_dense:
+        c = attn.init_kv_cache(cfg, batch, max_len, n_groups * n_dense, dtype)
+        cache["dense"] = jax.tree.map(
+            lambda a: a.reshape((n_groups, n_dense) + a.shape[1:]), c
+        )
+    return cache

@@ -1,0 +1,341 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential) with exponential gating + stabilizers.
+
+mLSTM training/prefill uses the stabilized *chunkwise* form (GLA-style):
+intra-chunk quadratic attention with cumulative log-gate decays, inter-chunk
+(hd × hd) recurrent matrix state — O(S·c) work, O(hd²) state.  Decode is the
+O(1) recurrent step.  sLSTM is inherently sequential (``lax.scan`` over time,
+recurrent input precomputed in parallel outside the scan).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, apply_norm
+
+Params = Any
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_schema(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d  # projection factor 2
+    h = cfg.num_heads
+    hd = di // h
+    w = cfg.ssm.conv_width
+    return {
+        "up": ParamDef((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((w, di), (None, "ssm_inner"), scale=0.5),
+        "conv_b": ParamDef((di,), ("ssm_inner",), "zeros"),
+        # head count (4) is below the TP degree; shard the per-head output
+        # dim instead ("ssm_head" -> model), heads replicated.
+        "wq": ParamDef((h, hd, hd), (None, None, "ssm_head")),
+        "wk": ParamDef((h, hd, hd), (None, None, "ssm_head")),
+        "wv": ParamDef((h, hd, hd), (None, None, "ssm_head")),
+        "w_gates": ParamDef((di, 2 * h), ("ssm_inner", None), scale=0.1),
+        "b_gates": ParamDef((2 * h,), (None,), "zeros"),
+        "gn_scale": ParamDef((di,), ("ssm_inner",), "ones"),
+        "down": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(w, b, x, state):
+    W = w.shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (x.shape[0], W - 1, x.shape[2]), x.dtype
+    )
+    xp = jnp.concatenate([pad.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    return y + b.astype(x.dtype), xp[:, -(W - 1):]
+
+
+def _mlstm_chunk(q, k, v, ig, fg, state, chunk: int):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B, H, S, hd); ig,fg: (B, H, S) raw gate pre-activations (fp32).
+    state: dict(c (B,H,hd,hd), n (B,H,hd), m (B,H)) or None.
+    Returns (out (B,H,S,hd), new_state).
+    """
+    B, H, S, hd = q.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        ig = jnp.pad(ig, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        fg = jnp.pad(fg, ((0, 0), (0, 0), (0, pad)))
+    S_p = S + pad
+    nc = S_p // c
+
+    def to_chunks(x):
+        return x.reshape(x.shape[:2] + (nc, c) + x.shape[3:]).transpose(
+            (2, 0, 1, 3) + tuple(range(4, x.ndim + 1))
+        )
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)  # (nc,B,H,c,hd)
+    igc, fgc = to_chunks(ig), to_chunks(fg)  # (nc,B,H,c)
+
+    if state is None:
+        c0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def step(carry, xs):
+        C, N, M = carry
+        qb, kb, vb, ib, fb = xs  # (B,H,c,hd) / (B,H,c)
+        logf = jax.nn.log_sigmoid(fb)  # (B,H,c)
+        F = jnp.cumsum(logf, axis=-1)  # inclusive cumsum of log forget
+        # per-query stabilizer: m_i = max(F_i + M, cummax_{j<=i}(i_j + F_i - F_j))
+        b_j = ib - F  # (B,H,c)
+        cummax_b = jax.lax.associative_scan(jnp.maximum, b_j, axis=-1)
+        m_i = jnp.maximum(F + M[..., None], F + cummax_b)  # (B,H,c)
+        # inter-chunk contribution (q carries the 1/sqrt(hd) scale, as intra)
+        w_prev = jnp.exp(F + M[..., None] - m_i)  # (B,H,c)
+        inter = jnp.einsum("bhcd,bhde->bhce", qb, C) * (w_prev * scale)[..., None]
+        n_inter = jnp.einsum("bhcd,bhd->bhc", qb, N) * w_prev * scale
+        # intra-chunk: D_ij = exp(F_i - F_j + i_j - m_i), j <= i
+        Dlog = F[..., :, None] - F[..., None, :] + ib[..., None, :] - m_i[..., :, None]
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        D = jnp.where(mask, jnp.exp(Dlog), 0.0)  # (B,H,c,c)
+        Sij = jnp.einsum("bhid,bhjd->bhij", qb, kb) * scale * D
+        intra = jnp.einsum("bhij,bhjd->bhid", Sij, vb)
+        n_intra = jnp.einsum("bhij->bhi", Sij * 0.0) + jnp.einsum(
+            "bhid,bhjd,bhij->bhi", qb, kb, D
+        ) * scale
+        h_num = inter + intra
+        n_tot = n_inter + n_intra
+        denom = jnp.maximum(jnp.abs(n_tot), jnp.exp(-m_i))
+        out = h_num / denom[..., None]
+        # new state at chunk end
+        F_end = F[..., -1:]
+        m_state = jnp.maximum(
+            F_end[..., 0] + M, jnp.max(ib + F_end - F, axis=-1)
+        )  # (B,H)
+        w_c = jnp.exp(F_end[..., 0] + M - m_state)
+        w_j = jnp.exp(F_end - F + ib - m_state[..., None])  # (B,H,c)
+        C_new = C * w_c[..., None, None] + jnp.einsum(
+            "bhjd,bhje,bhj->bhde", kb, vb, w_j
+        )
+        N_new = N * w_c[..., None] + jnp.einsum("bhjd,bhj->bhd", kb, w_j)
+        return (C_new, N_new, m_state), out
+
+    (Cf, Nf, Mf), outs = jax.lax.scan(step, (c0, n0, m0), (qc, kc, vc, igc, fgc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, S_p, hd)[:, :, :S]
+    return out, {"c": Cf, "n": Nf, "m": Mf}
+
+
+def mlstm_apply(
+    p: Params, x: jax.Array, cfg, *, state=None, chunk: int = 256
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, d = x.shape
+    di = cfg.ssm.expand * d
+    H = cfg.num_heads
+    hd = di // H
+    dt = x.dtype
+    up = x @ p["up"].astype(dt)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(p["conv_w"], p["conv_b"], xm, conv_state)
+    xc = jax.nn.silu(xc)
+    xch = xc.reshape(B, S, H, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    xmh = xm.reshape(B, S, H, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    q = jnp.einsum("bhsd,hde->bhse", xch, p["wq"].astype(jnp.float32))
+    k = jnp.einsum("bhsd,hde->bhse", xch, p["wk"].astype(jnp.float32))
+    v = jnp.einsum("bhsd,hde->bhse", xmh, p["wv"].astype(jnp.float32))
+    gates = xc @ p["w_gates"].astype(dt) + p["b_gates"].astype(dt)
+    ig, fg = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B,S,H)
+    ig = ig.transpose(0, 2, 1)
+    fg = fg.transpose(0, 2, 1) + 3.0  # bias toward remembering
+    ssm_state = (
+        {k_: state[k_] for k_ in ("c", "n", "m")} if state is not None else None
+    )
+    h, new_ssm = _mlstm_chunk(q, k, v, ig, fg, ssm_state, chunk)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, di)
+    # per-head group norm
+    hh = h.reshape(B, S, H, hd)
+    ms = jnp.mean(jnp.square(hh), -1, keepdims=True)
+    hh = hh * jax.lax.rsqrt(ms + 1e-6)
+    h = hh.reshape(B, S, di) * p["gn_scale"].astype(jnp.float32)
+    h = h.astype(dt) * jax.nn.silu(z)
+    out = h @ p["down"].astype(dt)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype), **new_ssm}
+    return out, new_state
+
+
+def init_mlstm_state(cfg, batch: int):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    H = cfg.num_heads
+    hd = di // H
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, di), jnp.bfloat16),
+        "c": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_schema(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    f = -(-int(d * 4 / 3) // 64) * 64  # gated FFN pf=4/3, 64-aligned (TP)
+    return {
+        "w_in": ParamDef((d, 4 * d), ("embed", None)),
+        "b_in": ParamDef((4 * d,), (None,), "zeros"),
+        "r": ParamDef((h, hd, 4 * hd), (None, None, "ssm_head"), scale=0.5),
+        "gn_scale": ParamDef((d,), ("embed",), "ones"),
+        "ffn_wi": ParamDef((d, 2 * f), ("embed", "ffn")),
+        "ffn_wo": ParamDef((f, d), ("ffn", "embed")),
+    }
+
+
+def slstm_apply(
+    p: Params, x: jax.Array, cfg, *, state=None
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B, S, d).  state: dict(h, c, n, m) each (B, d)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    dt = x.dtype
+    zx = (x @ p["w_in"].astype(dt) + p["b_in"].astype(dt)).astype(jnp.float32)
+    if state is None:
+        h0 = jnp.zeros((B, d), jnp.float32)
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        m0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        h0, c0, n0, m0 = (state[k].astype(jnp.float32) for k in ("h", "c", "n", "m"))
+    r = p["r"].astype(jnp.float32)
+
+    def step(carry, zx_t):
+        h, cc, n, m = carry  # (B, d)
+        hh = h.reshape(B, H, hd)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r)  # (B, H, 4*hd)
+        # per-head recurrence feeds the 4 gates: regroup (H, 4, hd) -> (4, d)
+        rec4 = rec.reshape(B, H, 4, hd).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+        zz = zx_t + rec4
+        zt, it, ft, ot = jnp.split(zz, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(jax.nn.log_sigmoid(ft) + m - m_new)
+        c_new = f_p * cc + i_p * zt
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    zx_seq = zx.reshape(B, S, 4 * d).transpose(1, 0, 2)  # (S, B, 4d)
+    (hf, cf, nf, mf), hs = jax.lax.scan(step, (h0, c0, n0, m0), zx_seq)
+    hs = hs.transpose(1, 0, 2)  # (B, S, d)
+    # group norm per head
+    hh = hs.reshape(B, S, H, hd)
+    msq = jnp.mean(jnp.square(hh), -1, keepdims=True)
+    hs = (hh * jax.lax.rsqrt(msq + 1e-6)).reshape(B, S, d)
+    hs = (hs * p["gn_scale"].astype(jnp.float32)).astype(dt)
+    # gated FFN (pf 4/3)
+    u = hs @ p["ffn_wi"].astype(dt)
+    g, uu = jnp.split(u, 2, axis=-1)
+    out = (jax.nn.gelu(g) * uu) @ p["ffn_wo"].astype(dt)
+    new_state = None
+    if state is not None:
+        new_state = {"h": hf, "c": cf, "n": nf, "m": mf}
+    return out, new_state
+
+
+def init_slstm_state(cfg, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": jnp.ones((batch, d), jnp.float32), "m": z}
+
+
+# --------------------------------------------------------------------------
+# Full xLSTM stack: superblocks of (m_per mLSTM + 1 sLSTM), scanned
+# --------------------------------------------------------------------------
+
+def _super_structure(cfg) -> Tuple[int, int]:
+    """(n_super, mlstm_per_super).  48L @ 7:1 -> 6 superblocks of 7m+1s."""
+    every = cfg.xlstm_slstm_every or cfg.num_layers + 1
+    n_super = max(1, cfg.num_layers // every)
+    m_per = cfg.num_layers // n_super - 1
+    return n_super, m_per
+
+
+def xlstm_schema(cfg) -> Dict:
+    from repro.models.layers import ParamDef, norm_schema, stacked
+
+    n_super, m_per = _super_structure(cfg)
+    mblock = {"ln": norm_schema(cfg), "core": mlstm_schema(cfg)}
+    sblock = {"ln": norm_schema(cfg), "core": slstm_schema(cfg)}
+    return {
+        "embed": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"), "embed"),
+        "supers": stacked(
+            {"mlstm": stacked(mblock, m_per), "slstm": sblock}, n_super
+        ),
+        "ln_f": norm_schema(cfg),
+        "head": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed")),
+    }
+
+
+def apply_xlstm_stack(
+    supers: Params, x: jax.Array, cfg, runtime, *, mode: str = "train", state=None
+) -> Tuple[jax.Array, Optional[Params]]:
+    """state: {"mlstm": stacked (n_super, m_per, ...), "slstm": (n_super, ...)}"""
+
+    def mblock_fn(xc, xs):
+        mp, mstate = xs
+        h = apply_norm(mp["ln"], xc, cfg)
+        y, new_state = mlstm_apply(mp["core"], h, cfg, state=mstate)
+        return xc + y, new_state
+
+    def sblock_fn(xc, sp, sstate):
+        h = apply_norm(sp["ln"], xc, cfg)
+        y, new_state = slstm_apply(sp["core"], h, cfg, state=sstate)
+        return xc + y, new_state
+
+    def super_fn(xc, xs):
+        gp, gstate = xs
+        mstate = None if gstate is None else gstate["mlstm"]
+        remat = mode == "train" and cfg.remat != "none"
+        mfn = jax.checkpoint(mblock_fn) if remat else mblock_fn
+        # unroll: m_per <= 7 blocks; keeps cost_analysis exact for the
+        # dry-run two-point fit (nested scan bodies are counted once)
+        xc, new_m = jax.lax.scan(mfn, xc, (gp["mlstm"], mstate), unroll=True)
+        sfn = jax.checkpoint(sblock_fn) if remat else sblock_fn
+        xc, new_s = sfn(xc, gp["slstm"], None if gstate is None else gstate["slstm"])
+        if gstate is None:
+            return xc, None
+        return xc, {"mlstm": new_m, "slstm": new_s}
+
+    x, new_state = jax.lax.scan(super_fn, x, (supers, state),
+                                unroll=cfg.scan_unroll)
+    return x, new_state
+
+
+def init_xlstm_state(cfg, batch: int):
+    n_super, m_per = _super_structure(cfg)
+
+    def rep(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), tree)
+
+    return {
+        "mlstm": rep(rep(init_mlstm_state(cfg, batch), m_per), n_super),
+        "slstm": rep(init_slstm_state(cfg, batch), n_super),
+    }

@@ -1,0 +1,92 @@
+"""AdamW with global-norm clipping, cosine schedule, and configurable
+optimizer-state dtype (bf16 moments for 100B+ archs — halves HBM at ~zero
+quality cost at these scales).  Pure-JAX (no optax dependency)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"  # moments dtype ("bfloat16" for 100B+)
+
+
+def lr_at(step: jax.Array, oc: OptConfig) -> jax.Array:
+    warm = oc.lr * (step + 1) / max(oc.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - oc.warmup_steps) / max(oc.total_steps - oc.warmup_steps, 1), 0, 1
+    )
+    cos = oc.lr * (oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Params, oc: OptConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(oc.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def _is_matrix(p: jax.Array) -> bool:
+    return p.ndim >= 2
+
+
+def adamw_update(
+    params: Params, grads: Params, state: Dict[str, Any], oc: OptConfig
+) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (params, state, metrics)."""
+    step = state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(step, oc)
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** (step.astype(jnp.float32) + 1)
+    bc2 = 1 - b2 ** (step.astype(jnp.float32) + 1)
+    sdt = jnp.dtype(oc.state_dtype)
+
+    def upd(p, g, m, n):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        n32 = b2 * n.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / bc1
+        nhat = n32 / bc2
+        delta = mhat / (jnp.sqrt(nhat) + oc.eps)
+        if _is_matrix(p):  # decoupled weight decay on matrices only
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m32.astype(sdt), n32.astype(sdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_n = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_m, flat_n)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_n = treedef.unflatten([o[2] for o in out])
+    new_state = {"mu": new_m, "nu": new_n, "step": step + 1}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

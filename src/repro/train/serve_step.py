@@ -1,0 +1,75 @@
+"""Serving steps: jit'd prefill + single-token decode, and a host-side
+generate loop (greedy / temperature sampling) for the examples."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import CPU_RUNTIME, Runtime
+from repro.models import decode_step, init_serve_cache, prefill
+
+Params = Any
+
+
+def make_prefill_step(cfg, runtime: Runtime = CPU_RUNTIME):
+    def fn(params, batch):
+        return prefill(params, batch, cfg, runtime)
+
+    return jax.jit(fn)
+
+
+def make_decode_step(cfg, runtime: Runtime = CPU_RUNTIME):
+    def fn(params, batch):
+        logits, cache = decode_step(params, batch, cfg, runtime)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    # donate the cache: decode must be in-place at production sizes
+    return jax.jit(fn, donate_argnums=())
+
+
+def generate(
+    params: Params,
+    prompt_tokens: jax.Array,  # (B, S)
+    cfg,
+    runtime: Runtime = CPU_RUNTIME,
+    *,
+    max_new_tokens: int = 16,
+    max_len: Optional[int] = None,
+    extra_inputs: Optional[Dict[str, jax.Array]] = None,
+    temperature: float = 0.0,
+    rng: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Greedy/temperature generation.  Returns (B, max_new_tokens)."""
+    B, S = prompt_tokens.shape
+    max_len = max_len or (S + max_new_tokens + 8)
+    cache = init_serve_cache(cfg, B, max_len)
+    batch = {"tokens": prompt_tokens, "cache": cache, **(extra_inputs or {})}
+    pf = make_prefill_step(cfg, runtime)
+    dc = make_decode_step(cfg, runtime)
+    logits, cache = pf(params, batch)
+    offset = cfg.meta_tokens + (cfg.num_image_patches if cfg.family == "vlm" else 0)
+
+    def sample(lg, key):
+        if temperature <= 0.0:
+            return jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+        return jax.random.categorical(key, lg[:, -1] / temperature).astype(jnp.int32)
+
+    rng = rng if rng is not None else jax.random.key(0)
+    toks = []
+    tok = sample(logits, rng)
+    toks.append(tok)
+    for i in range(max_new_tokens - 1):
+        rng, k = jax.random.split(rng)
+        pos = jnp.full((B,), S + i + offset, jnp.int32)
+        nxt, logits, cache = dc(
+            params, {"tokens": tok[:, None], "pos": pos, "cache": cache}
+        )
+        if temperature <= 0.0:
+            tok = nxt
+        else:
+            tok = sample(logits, k)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,127 @@
+"""Train-step factory: value_and_grad over the model forward, optional
+gradient accumulation (microbatching), optional cross-pod gradient
+compression, NaN-guarded optimizer update (bad steps are skipped, not
+applied — the fault-tolerance contract is "a poisoned batch never corrupts
+the weights")."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import CPU_RUNTIME, Runtime
+from repro.models import forward_train
+from repro.train.optimizer import OptConfig, adamw_update, global_norm
+
+Params = Any
+
+
+def _split_batch(batch: Dict[str, jax.Array], k: int) -> Dict[str, jax.Array]:
+    return {n: x.reshape((k, x.shape[0] // k) + x.shape[1:]) for n, x in batch.items()}
+
+
+def make_train_step(
+    cfg,
+    runtime: Runtime = CPU_RUNTIME,
+    oc: OptConfig = OptConfig(),
+    *,
+    accum_steps: int = 1,
+    compressor=None,  # repro.dist.compression.Compressor or None
+    cast_params_once: bool = False,  # §Perf: bf16-before-gather FSDP
+):
+    """Returns train_step(params, opt_state, [comp_state,] batch) -> ...
+
+    ``cast_params_once`` casts matrix parameters to the compute dtype ONCE
+    at step start, so XLA's per-layer FSDP all-gathers move bf16 instead of
+    the f32 masters (halves the dominant collective in large dense train
+    cells — EXPERIMENTS.md §Perf).  Vectors (norm scales etc.) stay f32.
+    The bf16 copies are PINNED to the same sharding as the masters with
+    with_sharding_constraint — without it XLA places the convert after its
+    all-gather and the bytes saving evaporates (§Perf, refuted-then-fixed).
+    """
+    cast_shardings = None
+    if cast_params_once and runtime.mesh is not None:
+        from repro.dist.sharding import shardings_for_schema
+        from repro.models import model_schema
+
+        cast_shardings = shardings_for_schema(
+            model_schema(cfg), runtime.rules, runtime.mesh
+        )
+
+    def loss_fn(params, mb):
+        if cast_params_once:
+            dt = jnp.dtype(cfg.dtype)
+
+            def cast(p, sh):
+                if p.ndim < 2:
+                    return p
+                c = p.astype(dt)
+                if sh is not None:
+                    c = jax.lax.with_sharding_constraint(c, sh)
+                return c
+
+            if cast_shardings is not None:
+                params = jax.tree.map(cast, params, cast_shardings)
+            else:
+                params = jax.tree.map(lambda p: cast(p, None), params)
+        loss, metrics = forward_train(params, mb, cfg, runtime)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if accum_steps == 1:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            return grads, metrics
+
+        mbs = _split_batch(batch, accum_steps)
+
+        def acc_fn(carry, mb):
+            g_acc, m_acc = carry
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            g_acc = jax.tree.map(jnp.add, g_acc, grads)
+            m_acc = jax.tree.map(jnp.add, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"loss": 0.0, "ce": 0.0, "aux": 0.0}
+        m0 = jax.tree.map(jnp.float32, m0)
+        (grads, metrics), _ = jax.lax.scan(
+            lambda c, mb: acc_fn(c, mb), (g0, m0), mbs
+        )
+        inv = 1.0 / accum_steps
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda m: m * inv, metrics)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch, comp_state=None):
+        grads, metrics = grads_of(params, batch)
+        extra = {}
+        if compressor is not None:
+            grads, comp_state, cm = compressor.apply(grads, comp_state, runtime)
+            extra.update(cm)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, oc)
+        # NaN guard: skip the update when the gradient norm is non-finite.
+        good = jnp.isfinite(om["grad_norm"])
+        new_params = jax.tree.map(
+            lambda n, o: jnp.where(good, n, o), new_params, params
+        )
+        new_opt = jax.tree.map(
+            lambda n, o: jnp.where(good, n, o), new_opt, opt_state
+        )
+        metrics = {**metrics, **om, **extra, "skipped": (~good).astype(jnp.float32)}
+        out = (new_params, new_opt, metrics)
+        return out + ((comp_state,) if compressor is not None else ())
+
+    return train_step
+
+
+def jit_train_step(cfg, runtime, oc, param_shardings=None, **kw):
+    """jit with donated params/opt-state and explicit shardings (dry-run and
+    production entry point)."""
+    step = make_train_step(cfg, runtime, oc, **kw)
+    return jax.jit(step, donate_argnums=(0, 1))

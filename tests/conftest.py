@@ -1,0 +1,39 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512."""
+import numpy as np
+import pytest
+
+from repro.configs.base import GraphConfig
+from repro.core.generator import generate_collection
+from repro.core.partition import discover_subgraphs, partition_graph
+from repro.core.subgraph import build_subgraphs
+
+
+TINY = GraphConfig(
+    name="tiny", num_vertices=300, avg_degree=3.0, num_instances=3,
+    num_partitions=3, block_size=32, instances_per_slice=2,
+    bins_per_partition=2, cache_slots=4, seed=11,
+)
+
+
+@pytest.fixture(scope="session")
+def tiny_collection():
+    return generate_collection(TINY, num_plates=6)
+
+
+@pytest.fixture(scope="session")
+def tiny_partitioned(tiny_collection):
+    tmpl = tiny_collection.template
+    assign = partition_graph(tmpl, TINY.num_partitions, seed=TINY.seed)
+    sg_ids = discover_subgraphs(tmpl, assign)
+    subs = build_subgraphs(tmpl, assign, sg_ids)
+    return tmpl, assign, sg_ids, subs
+
+
+@pytest.fixture(scope="session")
+def tiny_gofs(tiny_collection, tmp_path_factory):
+    from repro.gofs import deploy_collection
+
+    root = str(tmp_path_factory.mktemp("gofs"))
+    deploy_collection(tiny_collection, TINY, root)
+    return root

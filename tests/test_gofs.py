@@ -1,0 +1,187 @@
+"""GoFS storage: layout, projection, filtering, caching, provider parity."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.algorithms import sssp
+from repro.core.ibsp import InMemoryProvider
+from repro.gofs import GoFSStore, deploy_collection
+from repro.gofs.cache import SliceCache
+
+from tests.conftest import TINY
+
+
+def test_roundtrip_values(tiny_gofs, tiny_collection, tiny_partitioned):
+    tmpl, assign, sg_ids, subs = tiny_partitioned
+    store = GoFSStore(tiny_gofs, vertex_projection=("plate",),
+                      edge_projection=("latency",))
+    for g in store.subgraph_ids():
+        si = store.get_instance(1, g)
+        ref_v = tiny_collection.vertex_values(1, "plate")[subs[g].vertices]
+        ref_e = tiny_collection.edge_values(1, "latency")[subs[g].local_edge_id]
+        np.testing.assert_array_equal(si.vertex_values["plate"], ref_v)
+        np.testing.assert_array_equal(si.local_edge_values["latency"], ref_e)
+
+
+def test_topology_roundtrip(tiny_gofs, tiny_partitioned):
+    tmpl, assign, sg_ids, subs = tiny_partitioned
+    store = GoFSStore(tiny_gofs)
+    for g in store.subgraph_ids():
+        topo = store.get_topology(g)
+        np.testing.assert_array_equal(topo.vertices, subs[g].vertices)
+        np.testing.assert_array_equal(topo.local_edge_id, subs[g].local_edge_id)
+        np.testing.assert_array_equal(topo.remote_edge_id, subs[g].remote_edge_id)
+
+
+def test_bin_major_iteration_order(tiny_gofs):
+    """Subgraph iterator follows bin-major order within each partition."""
+    store = GoFSStore(tiny_gofs)
+    order = store.subgraph_ids()
+    homes = [store._sg_home[g] for g in order]
+    # (pid, bin) must be non-decreasing lexicographically
+    assert homes == sorted(homes)
+
+
+def test_constant_attr_not_on_disk(tiny_gofs):
+    """Constant attributes live in the template schema, not attribute
+    slices (paper §V-B)."""
+    for p in os.listdir(tiny_gofs):
+        if p.startswith("part_"):
+            for f in os.listdir(os.path.join(tiny_gofs, p)):
+                assert "mtu" not in f and "ip_class" not in f
+    store = GoFSStore(tiny_gofs, edge_projection=("mtu",))
+    si = store.get_instance(0, store.subgraph_ids()[0])
+    assert np.all(si.local_edge_values["mtu"] == 1500)
+
+
+def test_projection_reads_fewer_slices(tiny_gofs):
+    s_all = GoFSStore(tiny_gofs, cache_slots=0)
+    s_one = GoFSStore(tiny_gofs, cache_slots=0, vertex_projection=("plate",),
+                      edge_projection=("latency",))
+    g = s_all.subgraph_ids()[0]
+    s_all.reset_stats()
+    s_one.reset_stats()
+    s_all.get_instance(0, g)
+    s_one.get_instance(0, g)
+    assert s_one.stats.slices_read < s_all.stats.slices_read
+
+
+def test_time_filter_restricts(tiny_gofs):
+    full = GoFSStore(tiny_gofs)
+    n = full.num_timesteps()
+    t1 = full.timestamps[1]
+    part = GoFSStore(tiny_gofs, time_range=(t1, 1e18))
+    assert part.num_timesteps() == n - 1
+    g = full.subgraph_ids()[0]
+    a = part.get_instance(0, g)  # first visible = global instance 1
+    b = full.get_instance(1, g)
+    for k in a.vertex_values:
+        np.testing.assert_array_equal(a.vertex_values[k], b.vertex_values[k])
+
+
+def test_cache_lru_eviction():
+    c = SliceCache(slots=2)
+    loads = []
+    for key in ["a", "b", "a", "c", "b"]:
+        c.get(key, lambda k=key: loads.append(k))
+    # a,b -> miss; a hit; c miss (evicts b); b miss again
+    assert loads == ["a", "b", "c", "b"]
+    assert c.hits == 1 and c.misses == 4
+
+
+def test_caching_reduces_reads(tiny_gofs):
+    cold = GoFSStore(tiny_gofs, cache_slots=0, vertex_projection=(),
+                     edge_projection=("latency",))
+    warm = GoFSStore(tiny_gofs, cache_slots=14, vertex_projection=(),
+                     edge_projection=("latency",))
+    g = cold.subgraph_ids()[0]
+    cold.reset_stats()
+    warm.reset_stats()
+    for t in range(cold.num_timesteps()):
+        cold.get_instance(t, g)
+        warm.get_instance(t, g)
+    assert warm.stats.slices_read < cold.stats.slices_read
+
+
+def test_temporal_packing_amortizes(tiny_collection, tmp_path):
+    """i2 packing + cache reads fewer slices than i1 for a time scan."""
+    import dataclasses
+
+    cfg1 = dataclasses.replace(TINY, instances_per_slice=1)
+    cfg2 = dataclasses.replace(TINY, instances_per_slice=2)
+    r1, r2 = str(tmp_path / "i1"), str(tmp_path / "i2")
+    deploy_collection(tiny_collection, cfg1, r1)
+    deploy_collection(tiny_collection, cfg2, r2)
+    outs = []
+    for root in (r1, r2):
+        st = GoFSStore(root, cache_slots=14, vertex_projection=(),
+                       edge_projection=("latency",))
+        st.reset_stats()
+        for g in st.subgraph_ids():
+            for t in range(st.num_timesteps()):
+                st.get_instance(t, g)
+        outs.append(st.stats.slices_read)
+    assert outs[1] < outs[0]
+
+
+def test_gofs_provider_matches_inmemory(tiny_gofs, tiny_collection,
+                                        tiny_partitioned):
+    tmpl, assign, sg_ids, subs = tiny_partitioned
+    store = GoFSStore(tiny_gofs, vertex_projection=(),
+                      edge_projection=("latency", "active"))
+    mem = InMemoryProvider(tiny_collection, subs, vertex_attrs=(),
+                           edge_attrs=("latency", "active"))
+    a, _ = sssp.run_host(store, 0)
+    b, _ = sssp.run_host(mem, 0)
+    assert set(a) == set(b)
+    for g in a:
+        np.testing.assert_allclose(a[g], b[g], equal_nan=True)
+
+
+# ---------------------------------------------------------------------------
+# Property: deploy -> read is the identity for ANY layout configuration
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    ipack=st.integers(1, 4),
+    bins=st.integers(1, 5),
+    slots=st.sampled_from([0, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gofs_roundtrip_any_layout(tmp_path_factory, ipack, bins, slots, seed):
+    import dataclasses
+
+    from repro.core.generator import generate_collection
+    from repro.core.partition import discover_subgraphs, partition_graph
+    from repro.core.subgraph import build_subgraphs
+
+    cfg = dataclasses.replace(
+        TINY, num_vertices=150, num_instances=3, seed=seed % 1000,
+        instances_per_slice=ipack, bins_per_partition=bins,
+    )
+    tsg = generate_collection(cfg, num_plates=3)
+    root = str(tmp_path_factory.mktemp(f"g{ipack}{bins}{slots}"))
+    deploy_collection(tsg, cfg, root)
+    store = GoFSStore(root, cache_slots=slots,
+                      vertex_projection=("plate",),
+                      edge_projection=("latency",))
+    assign = partition_graph(tsg.template, cfg.num_partitions, seed=cfg.seed)
+    sg_ids = discover_subgraphs(tsg.template, assign)
+    subs = build_subgraphs(tsg.template, assign, sg_ids)
+    assert sorted(store.subgraph_ids()) == sorted(subs)
+    for g in store.subgraph_ids():
+        for t in range(store.num_timesteps()):
+            si = store.get_instance(t, g)
+            np.testing.assert_array_equal(
+                si.vertex_values["plate"],
+                tsg.vertex_values(t, "plate")[subs[g].vertices],
+            )
+            np.testing.assert_array_equal(
+                si.local_edge_values["latency"],
+                tsg.edge_values(t, "latency")[subs[g].local_edge_id],
+            )

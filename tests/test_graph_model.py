@@ -1,0 +1,131 @@
+"""Time-series graph model, partitioning, subgraph discovery (paper §III-IV)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import AttributeDef, GraphInstance, GraphTemplate, TimeSeriesGraph
+from repro.core.partition import (
+    bin_pack_subgraphs, build_partitions, discover_subgraphs, edge_cut,
+    partition_graph,
+)
+from repro.core.subgraph import build_subgraphs
+
+
+def _random_template(rng, V, E):
+    src = rng.integers(0, V, E)
+    dst = rng.integers(0, V, E)
+    keep = src != dst
+    return GraphTemplate(num_vertices=V, src=src[keep].astype(np.int64),
+                         dst=dst[keep].astype(np.int64))
+
+
+def test_partition_covers_all_vertices(tiny_partitioned):
+    tmpl, assign, sg_ids, subs = tiny_partitioned
+    assert assign.shape == (tmpl.num_vertices,)
+    assert assign.min() >= 0 and assign.max() < 3
+
+
+def test_partition_is_disjoint_and_complete(tiny_partitioned):
+    tmpl, assign, sg_ids, subs = tiny_partitioned
+    parts = build_partitions(tmpl, assign, sg_ids)
+    all_vs = np.concatenate([p.vertices for p in parts])
+    assert len(all_vs) == tmpl.num_vertices
+    assert len(np.unique(all_vs)) == tmpl.num_vertices  # disjoint
+    # every edge is local xor remote exactly once
+    n_local = sum(len(p.local_src) for p in parts)
+    n_remote = sum(len(p.remote_src) for p in parts)
+    assert n_local + n_remote == tmpl.num_edges
+    assert n_remote == edge_cut(tmpl, assign)
+
+
+def test_subgraphs_are_connected_components_of_local_edges(tiny_partitioned):
+    tmpl, assign, sg_ids, subs = tiny_partitioned
+    # same subgraph -> same partition
+    for g, topo in subs.items():
+        assert len(set(assign[topo.vertices])) == 1
+    # local edges never cross subgraphs, remote edges always do
+    for g, topo in subs.items():
+        assert np.all(sg_ids[tmpl.src[topo.local_edge_id]] == g)
+        assert np.all(sg_ids[tmpl.dst[topo.local_edge_id]] == g)
+        assert np.all(sg_ids[tmpl.src[topo.remote_edge_id]] == g)
+        assert np.all(sg_ids[tmpl.dst[topo.remote_edge_id]] != g)
+
+
+def test_subgraph_edge_totals(tiny_partitioned):
+    tmpl, assign, sg_ids, subs = tiny_partitioned
+    n_local = sum(t.num_local_edges for t in subs.values())
+    n_remote = sum(len(t.remote_src) for t in subs.values())
+    assert n_local + n_remote == tmpl.num_edges
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(20, 120), st.data())
+def test_partition_subgraph_invariants_random(n_parts, V, data):
+    """Property: for any random digraph, partitioning + subgraph discovery
+    preserve the §IV-A definitions."""
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    tmpl = _random_template(rng, V, V * 3)
+    assign = partition_graph(tmpl, n_parts, seed=0)
+    sg_ids = discover_subgraphs(tmpl, assign)
+    # vertex in exactly one partition
+    assert assign.shape == (V,)
+    # subgraph-local connectivity: endpoints of a local edge share sg id
+    local = assign[tmpl.src] == assign[tmpl.dst]
+    assert np.all(
+        sg_ids[tmpl.src[local]] == sg_ids[tmpl.src[local]]
+    )
+    # union-find oracle on local edges only
+    parent = np.arange(V)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in zip(tmpl.src[local], tmpl.dst[local]):
+        ru, rv = find(int(u)), find(int(v))
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    roots = np.array([find(int(i)) for i in range(V)])
+    # same root <-> same subgraph id
+    _, ids_a = np.unique(roots, return_inverse=True)
+    _, ids_b = np.unique(sg_ids, return_inverse=True)
+    remap = {}
+    for a, b in zip(ids_a, ids_b):
+        assert remap.setdefault(a, b) == b
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 10), st.lists(st.integers(1, 500), min_size=1, max_size=60))
+def test_bin_packing_balances(n_bins, sizes):
+    sizes = np.asarray(sizes, np.int64)
+    ids = np.arange(len(sizes))
+    bins = bin_pack_subgraphs(sizes, ids, n_bins)
+    # every id appears exactly once
+    got = np.sort(np.concatenate([b for b in bins if len(b)]))
+    assert np.array_equal(got, ids)
+    # greedy largest-first bound: max load <= sum/bins + max item
+    loads = np.array([sizes[np.isin(ids, b)].sum() for b in bins])
+    assert loads.max() <= sizes.sum() / n_bins + sizes.max()
+
+
+def test_value_inheritance(tiny_collection):
+    tsg = tiny_collection
+    # constant attribute comes from schema, identical across instances
+    v0 = tsg.edge_values(0, "mtu")
+    v1 = tsg.edge_values(1, "mtu")
+    assert np.all(v0 == 1500) and np.all(v1 == 1500)
+    # instance-overridden attribute differs across instances
+    l0, l1 = tsg.vertex_values(0, "plate"), tsg.vertex_values(1, "plate")
+    assert not np.array_equal(l0, l1)
+
+
+def test_time_filter(tiny_collection):
+    tsg = tiny_collection
+    t0, t1 = tsg.time_range()
+    mid = (t0 + t1) / 2
+    idx = tsg.filter_time(mid, t1)
+    assert len(idx) >= 1
+    assert all(tsg.instances[i].t_end > mid for i in idx)

@@ -1,0 +1,234 @@
+"""Training substrate: optimizer, train step, NaN guard, accumulation,
+checkpoint/restart, data determinism, compression."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.dist.compression import Int8Compressor, TopKCompressor
+from repro.models import forward_train, init_model_params
+from repro.train import checkpoint as ckpt
+from repro.train.data import PackedShardDataset, SyntheticLMDataset, write_packed_shards
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, lr_at
+from repro.train.train_step import make_train_step
+
+CFG = get_config("glm4-9b").reduced()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_model_params(jax.random.key(0), CFG)
+
+
+def _batch(step=0, B=4, S=32):
+    d = SyntheticLMDataset(CFG.vocab_size, S, B, seed=0)
+    return {k: jnp.asarray(v) for k, v in d.batch_at(step).items()}
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def test_lr_schedule_shape():
+    oc = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(lr_at(jnp.asarray(s), oc)) for s in range(100)]
+    assert lrs[0] < lrs[9]  # warmup rises
+    assert abs(lrs[10] - 1e-3) < 1e-9  # peak at end of warmup
+    assert lrs[-1] < lrs[50] < lrs[11]  # cosine decays
+    assert lrs[-1] >= 1e-4 - 1e-9  # floor
+
+
+def test_adamw_reduces_loss(params):
+    oc = OptConfig(lr=1e-3, warmup_steps=1, total_steps=50)
+    state = init_opt_state(params, oc)
+    step = jax.jit(make_train_step(CFG, oc=oc))
+    batch = _batch()
+    losses = []
+    p = params
+    for i in range(8):
+        p, state, m = step(p, state, batch)  # same batch -> must overfit
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_grad_clip_bounds_update(params):
+    oc = OptConfig(lr=1.0, clip_norm=1e-6, warmup_steps=0, weight_decay=0.0)
+    state = init_opt_state(params, oc)
+    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 100.0, params)
+    new_p, _, m = adamw_update(params, grads, state, oc)
+    # clipped: per-leaf movement bounded by lr * (mhat/sqrt(nhat)+eps) ~ lr
+    delta = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(new_p), jax.tree.leaves(params)))
+    assert float(m["grad_norm"]) > 1.0
+    assert delta < 1.5  # no explosion despite grad 100
+
+
+def test_nan_guard_skips_update(params):
+    oc = OptConfig(lr=1e-3)
+    state = init_opt_state(params, oc)
+    step = jax.jit(make_train_step(CFG, oc=oc))
+    batch = _batch()
+    bad = dict(batch)
+    # poison by making tokens out of a valid-loss range impossible — instead
+    # inject NaN through labels=-1 everywhere + zero mask -> loss 0/0?  The
+    # robust poison: run one good step, then overwrite params with NaN grads
+    # via a NaN batch is impossible for int tokens; instead check the guard
+    # directly: a non-finite grad norm leaves params untouched.
+    p1, s1, m1 = step(params, state, batch)
+    nan_params = jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), params)
+    p2, s2, m2 = step(nan_params, state, batch)
+    assert int(m2["skipped"]) == 1
+    # params unchanged (still NaN inputs, but not *new* garbage)
+    assert bool(jnp.all(jnp.isnan(jax.tree.leaves(p2)[0])))
+
+
+def test_grad_accumulation_equivalence(params):
+    """accum_steps=2 over a 2x batch == single step over the same data.
+
+    Compared at the GRADIENT level: the first Adam step moves each weight by
+    ~sign(g)*lr, so fp-noise-level gradient differences near zero flip the
+    update by 2*lr — parameter-level comparison would only test noise.
+    """
+    cfg32 = CFG.with_overrides(dtype="float32")  # bf16 rounding would drown
+    params32 = init_model_params(jax.random.key(0), cfg32)
+    batch = _batch(B=8)
+
+    def grads_for(accum):
+        def loss_fn(p, mb):
+            return forward_train(p, mb, cfg32)[0]
+
+        if accum == 1:
+            return jax.grad(loss_fn)(params32, batch), float(
+                forward_train(params32, batch, cfg32)[0]
+            )
+        mbs = {k: v.reshape((accum, v.shape[0] // accum) + v.shape[1:])
+               for k, v in batch.items()}
+        g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params32)
+        tot = 0.0
+        for i in range(accum):
+            mb = {k: v[i] for k, v in mbs.items()}
+            g = jax.tree.map(jnp.add, g, jax.grad(loss_fn)(params32, mb))
+            tot += float(forward_train(params32, mb, cfg32)[0])
+        return jax.tree.map(lambda x: x / accum, g), tot / accum
+
+    g1, l1 = grads_for(1)
+    g2, l2 = grads_for(2)
+    gn = float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                            for x in jax.tree.leaves(g1))))
+    dn = float(jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in
+                            zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))))
+    assert dn / gn < 1e-4, (dn, gn)
+    assert abs(l1 - l2) < 5e-4
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path, params):
+    oc = OptConfig()
+    state = {"params": params, "opt": init_opt_state(params, oc)}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, state)
+    restored, step = ckpt.restore(d, state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path, params):
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4):
+        ckpt.save(d, s, {"p": params}, keep=2)
+    assert ckpt.list_steps(d) == [3, 4]
+    _, step = ckpt.restore(d, {"p": params})
+    assert step == 4
+
+
+def test_checkpoint_incomplete_dir_skipped(tmp_path, params):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"p": params})
+    # simulate a crash mid-save: dir without manifest
+    os.makedirs(os.path.join(d, "step_00000002"))
+    assert ckpt.list_steps(d) == [1]
+    _, step = ckpt.restore(d, {"p": params})
+    assert step == 1
+
+
+def test_async_checkpointer(tmp_path, params):
+    d = str(tmp_path / "ck")
+    ac = ckpt.AsyncCheckpointer(d, keep=2)
+    ac.save(5, {"p": params})
+    ac.wait()
+    assert ckpt.list_steps(d) == [5]
+
+
+def test_elastic_restore_same_logical_shapes(tmp_path, params):
+    """Checkpoints store full logical shapes: restoring into an identical
+    abstract tree works regardless of the writing mesh (resharding happens
+    at the jit boundary)."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, {"p": params})
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), {"p": params}
+    )
+    restored, _ = ckpt.restore(d, abstract)
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves({"p": params})):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synthetic_data_seekable():
+    d = SyntheticLMDataset(1000, 16, 4, seed=3)
+    a = d.batch_at(17)
+    b = d.batch_at(17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    it = d.iter_from(17)
+    c = next(it)
+    np.testing.assert_array_equal(a["tokens"], c["tokens"])
+
+
+def test_packed_shards_roundtrip(tmp_path):
+    tokens = np.arange(10_000, dtype=np.int32)
+    d = str(tmp_path / "shards")
+    write_packed_shards(d, tokens, shard_tokens=1024)
+    ds = PackedShardDataset(d, seq_len=16, global_batch=4)
+    b0 = ds.batch_at(0)
+    np.testing.assert_array_equal(b0["tokens"][0], np.arange(16))
+    np.testing.assert_array_equal(b0["labels"][0], np.arange(1, 17))
+    # deterministic + seekable
+    b5a, b5b = ds.batch_at(5), ds.batch_at(5)
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+def test_int8_error_feedback_unbiased(params):
+    comp = Int8Compressor()
+    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 0.3, params)
+    state = comp.init_state(grads)
+    acc = jax.tree.map(jnp.zeros_like, grads)
+    for _ in range(8):
+        g, state, m = comp.apply(grads, state)
+        acc = jax.tree.map(jnp.add, acc, g)
+    # error feedback: running mean converges to the true gradient
+    mean = jax.tree.leaves(jax.tree.map(lambda a: a / 8, acc))[0]
+    np.testing.assert_allclose(np.asarray(mean), 0.3, rtol=2e-2)
+
+
+def test_topk_keeps_largest(params):
+    comp = TopKCompressor(frac=0.1)
+    g = {"w": jnp.asarray(np.linspace(-1, 1, 100), jnp.float32)}
+    state = comp.init_state(g)
+    out, state, _ = comp.apply(g, state)
+    kept = np.asarray(out["w"]) != 0
+    assert kept.sum() <= 12
+    assert kept[0] and kept[-1]  # extremes kept
