@@ -16,6 +16,7 @@ def main() -> None:
         bench_roofline,
         bench_slices_read,
         bench_sssp_timesteps,
+        bench_temporal,
     )
 
     sections = {
@@ -23,6 +24,7 @@ def main() -> None:
         "sssp_timesteps": bench_sssp_timesteps.run,  # paper Fig. 7
         "slices_read": bench_slices_read.run,     # paper Fig. 8
         "engine": bench_engine.run,               # §II/IV superstep economy
+        "temporal": bench_temporal.run,           # batched staging + engine
         "kernels": bench_kernels.run,             # §V hot-spot kernels
         "roofline": bench_roofline.run,           # EXPERIMENTS §Roofline
     }

@@ -1,0 +1,36 @@
+"""Version compatibility shims (single import point, no jax state touched).
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (kwarg
+``check_rep``) to ``jax.shard_map`` (kwarg ``check_vma``); callers use the
+new-style signature and this shim translates for older jax.
+
+``pallas_compiler_params`` papers over the ``TPUCompilerParams`` ->
+``CompilerParams`` rename in ``jax.experimental.pallas.tpu``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def pallas_compiler_params(**kwargs):
+    """TPU pallas_call compiler_params across the class rename."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:  # older jax naming
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

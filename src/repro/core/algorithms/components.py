@@ -7,15 +7,50 @@ second independent-pattern application beside PageRank.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
-
 import numpy as np
 
-import jax.numpy as jnp
-
 from repro.core.blocked import BlockedGraph
-from repro.core.semiring import INF, MIN_PLUS
-from repro.core.superstep import Comm, bsp_fixpoint, device_graph
+from repro.core.semiring import INF
+
+
+def symmetrized_blocked(
+    bg: BlockedGraph, src: np.ndarray, dst: np.ndarray
+) -> BlockedGraph:
+    """Blocked structure over the doubled (undirected) edge list, same
+    partitioning — labels propagate both ways through min-plus."""
+    from repro.core.blocked import build_blocked
+    from repro.core.graph import GraphTemplate
+
+    tmpl2 = GraphTemplate(
+        num_vertices=len(bg.part_of),
+        src=np.concatenate([src, dst]),
+        dst=np.concatenate([dst, src]),
+    )
+    return build_blocked(tmpl2, bg.part_of, bg.block_size)
+
+
+def run_blocked_temporal(
+    bg: BlockedGraph,
+    src: np.ndarray,
+    dst: np.ndarray,
+    instance_active: np.ndarray,  # (I, E) 0/1 per instance
+    *,
+    mesh=None,
+    use_pallas: bool = False,
+) -> np.ndarray:
+    """Components of EVERY instance (independent pattern) through the
+    unified temporal engine.  Returns (I, V) int64 labels."""
+    from repro.core.engine import TemporalEngine, label_init, min_plus_program
+
+    bg2 = symmetrized_blocked(bg, src, dst)
+    w = np.where(instance_active > 0, 0.0, INF).astype(np.float32)
+    w2 = np.concatenate([w, w], axis=1)  # both orientations
+    eng = TemporalEngine(bg2, mesh=mesh, use_pallas=use_pallas)
+    prog = min_plus_program(
+        "components", init=label_init(), max_supersteps=256,
+    )
+    res = eng.run(prog, w2, pattern="independent")
+    return res.values.astype(np.int64)
 
 
 def run_blocked(
@@ -24,32 +59,16 @@ def run_blocked(
     dst: np.ndarray,
     active: np.ndarray,  # (E,) 0/1 — edges active in this instance
     *,
-    comm: Comm = Comm(),
+    mesh=None,
     use_pallas: bool = False,
 ) -> np.ndarray:
-    """Min-label propagation over UNDIRECTED active edges.  Returns (V,)
-    component labels (min vertex id in component)."""
-    V = len(bg.part_of)
-    # symmetrize: propagate labels both ways
-    w = np.where(active > 0, 0.0, INF).astype(np.float32)
-    # build a temporary blocked graph over the symmetrized edge set by
-    # filling both orientations: run on a doubled edge list
-    from repro.core.graph import GraphTemplate
-    from repro.core.blocked import build_blocked
-
-    tmpl2 = GraphTemplate(
-        num_vertices=V,
-        src=np.concatenate([src, dst]),
-        dst=np.concatenate([dst, src]),
+    """Min-label propagation over UNDIRECTED active edges of one instance.
+    Returns (V,) component labels (min vertex id in component)."""
+    labels = run_blocked_temporal(
+        bg, src, dst, np.asarray(active)[None], mesh=mesh,
+        use_pallas=use_pallas,
     )
-    bg2 = build_blocked(tmpl2, bg.part_of, bg.block_size)
-    w2 = np.concatenate([w, w])
-    dg = device_graph(bg2, bg2.fill_local(w2), bg2.fill_boundary(w2))
-    labels0 = np.arange(V, dtype=np.float32)
-    x0 = jnp.asarray(bg2.scatter_vertex(labels0, INF))
-    x, _ = bsp_fixpoint(x0, dg, MIN_PLUS, comm=comm, use_pallas=use_pallas,
-                        max_supersteps=256)
-    return bg2.gather_vertex(np.asarray(x)).astype(np.int64)
+    return labels[0]
 
 
 def oracle(

@@ -11,16 +11,13 @@ Host path: per-subgraph Bellman-Ford through the iBSP engine, merging via
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import numpy as np
 
-import jax.numpy as jnp
-
 from repro.core.blocked import BlockedGraph
 from repro.core.ibsp import ComputeContext, InstanceProvider, MergeContext, run_ibsp
-from repro.core.semiring import INF, MIN_PLUS
-from repro.core.superstep import Comm, bsp_fixpoint, device_graph
+from repro.core.semiring import INF
 
 LATENCY_ATTR = "latency"
 
@@ -153,32 +150,30 @@ def run_blocked(
     n_hops: int = 6,
     *,
     bins: np.ndarray = DEFAULT_BINS,
-    comm: Comm = Comm(),
+    mesh=None,
     use_pallas: bool = False,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Returns (composite histogram, per-instance histograms (I, nbins))."""
-    I = instance_latency.shape[0]
-    hists = []
-    x0 = jnp.asarray(bg.scatter_vertex(np.full(bg.part_of.shape, INF), INF))
-    p, l = int(bg.part_of[source_vertex]), int(bg.local_of[source_vertex])
-    x0 = x0.at[p, l].set(0.0)
-    ones = np.ones(instance_latency.shape[1], np.float32)
-    dgh = device_graph(bg, bg.fill_local(ones), bg.fill_boundary(ones))
-    for i in range(I):
-        hops, _ = bsp_fixpoint(
-            x0, dgh, MIN_PLUS, comm=comm, use_pallas=use_pallas,
-        )
-        dgl = device_graph(
-            bg, bg.fill_local(instance_latency[i]),
-            bg.fill_boundary(instance_latency[i]),
-        )
-        lat, _ = bsp_fixpoint(
-            x0, dgl, MIN_PLUS, comm=comm, use_pallas=use_pallas,
-        )
-        hv = bg.gather_vertex(np.asarray(hops))
-        lv = bg.gather_vertex(np.asarray(lat))
-        hists.append(histogram(lv[hv == n_hops], bins))
-    hists = np.stack(hists)
+    """Eventually-dependent pattern through the unified temporal engine:
+    per-instance min-latency fixpoints run temporally concurrent (instances
+    over the mesh ``data`` axis when a mesh is given), the hop-count
+    fixpoint runs ONCE (topology is instance-invariant), and the Merge
+    folds per-instance histograms into the composite on the host.
+
+    Returns (composite histogram, per-instance histograms (I, nbins))."""
+    from repro.core.engine import TemporalEngine, min_plus_program, source_init
+
+    I, E = instance_latency.shape
+    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas)
+    prog = min_plus_program("nhop", init=source_init(source_vertex))
+    # unweighted hop distance: one instance of all-ones weights
+    hops = eng.run(prog, np.ones((1, E), np.float32),
+                   pattern="independent").values[0]
+    # min-latency distance per instance, then host-side Merge (histograms)
+    lat = eng.run(prog, instance_latency, pattern="eventually")
+    mask = hops == n_hops
+    hists = np.stack([
+        histogram(lat.values[i][mask], bins) for i in range(I)
+    ])
     return hists.sum(0), hists
 
 

@@ -16,16 +16,13 @@ Two implementations share semantics:
 from __future__ import annotations
 
 import heapq
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blocked import BlockedGraph
 from repro.core.ibsp import ComputeContext, InstanceProvider, run_ibsp
-from repro.core.semiring import INF, MIN_PLUS
-from repro.core.superstep import Comm, DeviceGraph, bsp_fixpoint, device_graph
+from repro.core.semiring import INF
 
 WEIGHT_ATTR = "latency"
 
@@ -139,45 +136,26 @@ def run_blocked(
     instance_weights: np.ndarray,  # (I, E) per-instance edge latency
     source_vertex: int,
     *,
-    comm: Comm = Comm(),
     subgraph_centric: bool = True,
+    mesh=None,
     use_pallas: bool = False,
     max_supersteps: int = 64,
 ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
-    """Temporal SSSP over all instances (sequential pattern, lax.scan).
+    """Temporal SSSP over all instances (sequential pattern) through the
+    unified temporal engine: one batched staging pass, then a ``lax.scan``
+    carrying the distance vector across the instance axis.
 
     Returns (final distances (V,), stats per timestep).
     """
-    I = instance_weights.shape[0]
-    lt = np.stack([bg.fill_local(instance_weights[i]) for i in range(I)])
-    bt = np.stack([bg.fill_boundary(instance_weights[i]) for i in range(I)])
-    dg0 = device_graph(bg, lt[0], bt[0])
+    from repro.core.engine import TemporalEngine, min_plus_program, source_init
 
-    x0 = jnp.asarray(bg.scatter_vertex(np.full(bg.part_of.shape, INF), INF))
-    p = int(bg.part_of[source_vertex])
-    l = int(bg.local_of[source_vertex])
-    x0 = x0.at[p, l].set(0.0)
-
-    lt_j, bt_j = jnp.asarray(lt), jnp.asarray(bt)
-
-    def step(x, tb):
-        tiles, btiles = tb
-        dg = DeviceGraph(
-            block_size=dg0.block_size, num_boundary=dg0.num_boundary,
-            rows=dg0.rows, cols=dg0.cols, tiles=tiles,
-            brows=dg0.brows, bcols=dg0.bcols, btiles=btiles,
-            out_slot=dg0.out_slot, out_local=dg0.out_local,
-            out_mask=dg0.out_mask, vmask=dg0.vmask,
-        )
-        x, stats = bsp_fixpoint(
-            x, dg, MIN_PLUS, comm=comm, subgraph_centric=subgraph_centric,
-            use_pallas=use_pallas, max_supersteps=max_supersteps,
-        )
-        return x, (stats["supersteps"], stats["local_sweeps"])
-
-    x, (ss, lsw) = jax.lax.scan(step, x0, (lt_j, bt_j))
-    dist = bg.gather_vertex(np.asarray(x))
-    return dist, {"supersteps": np.asarray(ss), "local_sweeps": np.asarray(lsw)}
+    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas)
+    prog = min_plus_program(
+        "sssp", init=source_init(source_vertex),
+        subgraph_centric=subgraph_centric, max_supersteps=max_supersteps,
+    )
+    res = eng.run(prog, instance_weights, pattern="sequential")
+    return res.final, res.stats
 
 
 # --------------------------------------------------------------------------

@@ -18,12 +18,9 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-import jax.numpy as jnp
-
 from repro.core.blocked import BlockedGraph
-from repro.core.ibsp import ComputeContext, InstanceProvider, run_ibsp
-from repro.core.semiring import INF, MIN_PLUS
-from repro.core.superstep import Comm, bsp_fixpoint, device_graph
+from repro.core.ibsp import ComputeContext, InstanceProvider
+from repro.core.semiring import INF
 
 PLATE_ATTR = "plate"  # int vertex attribute: vehicle id seen (-1 = none)
 
@@ -132,25 +129,31 @@ def run_blocked(
     initial_vertex: int,
     *,
     search_depth: int = 4,
-    comm: Comm = Comm(),
+    mesh=None,
     use_pallas: bool = False,
 ) -> List[Tuple[int, int]]:
-    """Masked wavefront tracker.  Returns trace [(timestep, vertex)]."""
+    """Masked wavefront tracker through the unified temporal engine.
+
+    The sequential dependence is data-dependent on the host (the next
+    timestep's seed is the argmin sighting, a host-side decision), so each
+    timestep is one engine probe: a min-plus hop fixpoint from the last
+    sighting over the instance-invariant topology (tiles staged ONCE, the
+    jitted runner cached across timesteps).  Returns [(timestep, vertex)].
+    """
+    from repro.core.engine import TemporalEngine, min_plus_program, source_init
+
     I, V = instance_plates.shape
     E = len(bg.le_edge_id) + len(bg.re_edge_id)  # every edge local xor cut
-    w = np.ones(E, np.float32)
-    dg = device_graph(bg, bg.fill_local(w), bg.fill_boundary(w))
+    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas)
+    tiles, btiles = eng.stage(np.ones((1, E), np.float32), INF)
+    prog = min_plus_program("tracking_hops")
     trace: List[Tuple[int, int]] = []
     last = initial_vertex
     for t in range(I):
-        x0 = jnp.asarray(bg.scatter_vertex(np.full(V, INF, np.float32), INF))
-        p, l = int(bg.part_of[last]), int(bg.local_of[last])
-        x0 = x0.at[p, l].set(0.0)
-        hops, _ = bsp_fixpoint(
-            x0, dg, MIN_PLUS, comm=comm, subgraph_centric=True,
-            use_pallas=use_pallas,
-        )
-        hv = bg.gather_vertex(np.asarray(hops))
+        hv = eng.run(
+            prog, tiles=tiles, btiles=btiles,
+            x0=source_init(last)(bg), pattern="independent",
+        ).values[0]
         cand = np.nonzero(
             (hv <= search_depth) & (instance_plates[t] == plate)
         )[0]

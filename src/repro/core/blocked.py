@@ -99,6 +99,38 @@ class BlockedGraph:
         op.at(vals, (self.re_part, self.re_flat), weights[self.re_edge_id])
         return vals.reshape(self.n_parts, self.tb_max, B, B)
 
+    # ------------------------------------------------------- batched staging
+    # One flat scatter for ALL instances at once — replaces the per-instance
+    # fill_local + np.stack Python loop in the temporal drivers (the edge ->
+    # tile-slot map is instance-invariant, so the instance axis broadcasts).
+    def _fill_batch(
+        self, weights: np.ndarray, zero: float, part: np.ndarray,
+        flat: np.ndarray, edge_id: np.ndarray, t_count: int,
+    ) -> np.ndarray:
+        B = self.block_size
+        I = weights.shape[0]
+        per_inst = self.n_parts * t_count * B * B
+        vals = np.full(I * per_inst, zero, np.float32)
+        op = np.minimum if zero == INF else np.add
+        slot = part.astype(np.int64) * (t_count * B * B) + flat
+        idx = (np.arange(I, dtype=np.int64)[:, None] * per_inst + slot[None, :])
+        op.at(vals, idx.ravel(), weights[:, edge_id].ravel())
+        return vals.reshape(I, self.n_parts, t_count, B, B)
+
+    def fill_local_batch(self, weights: np.ndarray, zero: float = INF) -> np.ndarray:
+        """Instance edge weights (I, E) -> local tiles (I, P, T, B, B)."""
+        return self._fill_batch(
+            weights, zero, self.le_part, self.le_flat, self.le_edge_id,
+            self.t_max,
+        )
+
+    def fill_boundary_batch(self, weights: np.ndarray, zero: float = INF) -> np.ndarray:
+        """Instance edge weights (I, E) -> boundary tiles (I, P, Tb, B, B)."""
+        return self._fill_batch(
+            weights, zero, self.re_part, self.re_flat, self.re_edge_id,
+            self.tb_max,
+        )
+
     # ------------------------------------------------------------- vertex io
     def scatter_vertex(self, values: np.ndarray, pad: float) -> np.ndarray:
         """Global (V,) vertex values -> padded per-partition (P, Vp)."""

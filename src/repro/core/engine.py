@@ -1,0 +1,452 @@
+"""Unified temporal execution engine: one pattern-aware runner for every
+semiring analytic over a blocked graph collection (paper §IV-B on TPU).
+
+The paper's claim is that a single iBSP abstraction expresses *all*
+temporal graph analytics through three execution patterns; this module is
+the blocked-engine counterpart of ``repro.core.ibsp.run_ibsp``.  An
+algorithm is declared as a :class:`SemiringProgram` — a semiring plus
+either a *fixpoint* spec (idempotent relaxation to quiescence: SSSP,
+components, reachability, N-hop) or an *iterate* spec (a fixed-count
+superstep function: PageRank) — and the engine executes it under any
+pattern in any placement mode:
+
+========================  =================================================
+pattern                   execution
+========================  =================================================
+``sequential``            one ``lax.scan`` over the instance axis carrying
+                          the vertex state (incremental aggregation — the
+                          previous timestep's end state seeds the next)
+``independent``           every instance runs from the same initial state;
+                          on a mesh, instances shard over the ``data`` axis
+                          while partitions stay on ``model`` (both forms of
+                          the paper's parallelism at once)
+``eventually``            independent + a Merge reduction across instances
+                          (``merge="mean"`` on-device; ``None`` leaves the
+                          per-instance states for a host-side Merge)
+========================  =================================================
+
+Placement: ``mesh=None`` runs stacked on one device (tests, benches);
+with a mesh the engine lowers to ``shard_map`` — partitions one-per-device
+over ``model_axes``, and for the temporally concurrent patterns instances
+over ``data_axis``.  The boundary exchange stays a single dense
+psum/pmin per superstep either way (see ``repro.core.superstep``).
+
+Instance staging is batched: edge-attribute matrices (I, E) land in
+(I, P, T, B, B) tile tensors through ``BlockedGraph.fill_local_batch`` /
+``fill_boundary_batch`` (or straight from GoFS slices via
+``GoFSStore.load_blocked``) — no per-instance Python fill loops.
+
+Stats are reported in the same :class:`repro.core.ibsp.BSPStats` shape as
+the host engine so the two paths are directly comparable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import shard_map
+from repro.core.blocked import BlockedGraph
+from repro.core.ibsp import BSPStats
+from repro.core.semiring import INF, MIN_PLUS, PLUS_MUL, Semiring
+from repro.core.superstep import (
+    Comm,
+    DeviceGraph,
+    bsp_fixpoint,
+    pagerank_step,
+)
+
+PATTERNS = ("sequential", "independent", "eventually")
+
+
+# ---------------------------------------------------------------------------
+# Program declarations
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SemiringProgram:
+    """A blocked iBSP analytic: semiring + step semantics + init.
+
+    ``kind="fixpoint"`` iterates BSP supersteps to global quiescence
+    (requires an idempotent semiring).  ``kind="iterate"`` applies ``step``
+    exactly ``iters`` times — the fixed-count form keeps every instance's
+    loop in lockstep, which is what lets the mesh run instances
+    concurrently over the ``data`` axis.
+    """
+
+    name: str
+    semiring: Semiring
+    zero_fill: float  # tile value for absent edges (sr.zero of the fill op)
+    kind: str = "fixpoint"  # "fixpoint" | "iterate"
+    # fixpoint knobs
+    subgraph_centric: bool = True
+    max_supersteps: int = 64
+    max_local_sweeps: int = 1024
+    # iterate knobs
+    iters: int = 0
+    # step(x, dg, comm, use_pallas) -> x  (iterate kind only)
+    step: Optional[Callable] = None
+    # host-side initial state: init(bg) -> (P, Vp) float32
+    init: Optional[Callable[[BlockedGraph], np.ndarray]] = None
+
+    def __post_init__(self):
+        assert self.kind in ("fixpoint", "iterate"), self.kind
+        if self.kind == "fixpoint":
+            assert self.semiring.idempotent, \
+                "fixpoint programs need an idempotent semiring"
+        else:
+            assert self.step is not None and self.iters > 0
+
+
+def source_init(source_vertex: int, pad: float = INF):
+    """x0 = pad everywhere, 0 at the source (SSSP-style frontier seed)."""
+
+    def init(bg: BlockedGraph) -> np.ndarray:
+        x0 = bg.scatter_vertex(np.full(bg.part_of.shape, pad, np.float32), pad)
+        x0[bg.part_of[source_vertex], bg.local_of[source_vertex]] = 0.0
+        return x0
+
+    return init
+
+
+def label_init():
+    """x0 = own vertex id (label propagation / components seed)."""
+
+    def init(bg: BlockedGraph) -> np.ndarray:
+        V = len(bg.part_of)
+        return bg.scatter_vertex(np.arange(V, dtype=np.float32), INF)
+
+    return init
+
+
+def min_plus_program(
+    name: str = "min_plus_fixpoint",
+    *,
+    init: Optional[Callable] = None,
+    subgraph_centric: bool = True,
+    max_supersteps: int = 64,
+    max_local_sweeps: int = 1024,
+) -> SemiringProgram:
+    """Min-plus fixpoint (SSSP / reachability / label propagation)."""
+    return SemiringProgram(
+        name=name, semiring=MIN_PLUS, zero_fill=INF, kind="fixpoint",
+        subgraph_centric=subgraph_centric, max_supersteps=max_supersteps,
+        max_local_sweeps=max_local_sweeps, init=init,
+    )
+
+
+def pagerank_program(
+    num_vertices: int, *, damping: float = 0.85, iters: int = 30
+) -> SemiringProgram:
+    """Fixed-iteration plus-mul PageRank (independent pattern workload)."""
+
+    def step(x, dg, comm, use_pallas):
+        return pagerank_step(
+            x, dg, comm, damping=damping, num_vertices=num_vertices,
+            use_pallas=use_pallas,
+        )
+
+    def init(bg: BlockedGraph) -> np.ndarray:
+        valid = (bg.global_of >= 0)
+        return np.where(valid, 1.0 / num_vertices, 0.0).astype(np.float32)
+
+    return SemiringProgram(
+        name="pagerank", semiring=PLUS_MUL, zero_fill=0.0, kind="iterate",
+        iters=iters, step=step, init=init,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EngineResult:
+    """Gathered outputs + iBSP-comparable statistics."""
+
+    pattern: str
+    values: np.ndarray  # (I, V) per-instance vertex values (global order)
+    final: np.ndarray  # (V,) carried end state (sequential) or values[-1]
+    merged: Optional[np.ndarray]  # (V,) Merge output (eventually + on-device)
+    stats: Dict[str, np.ndarray]  # {"supersteps": (I,), "local_sweeps": (I,)}
+    _n_published: int = 0  # boundary vertices published per superstep
+    _n_parts: int = 0
+    _num_vertices: int = 0
+
+    def bsp_stats(self) -> BSPStats:
+        """The host engine's accounting shape (run_ibsp comparability):
+        compute_calls = partition activations, superstep_messages =
+        published boundary values, timestep_messages = carried vertex
+        states (sequential), merge_messages = instances folded."""
+        ss = int(np.sum(self.stats["supersteps"]))
+        I = len(self.stats["supersteps"])
+        return BSPStats(
+            supersteps=ss,
+            compute_calls=ss * self._n_parts,
+            superstep_messages=ss * self._n_published,
+            timestep_messages=(I - 1) * self._num_vertices
+            if self.pattern == "sequential" else 0,
+            merge_messages=I if self.pattern == "eventually" else 0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class TemporalEngine:
+    """Pattern-aware runner for semiring programs over one blocked graph.
+
+    Modes:
+
+    * ``mesh=None`` — stacked: all partitions on one device, instances
+      scanned (CPU tests and benchmarks).
+    * ``mesh=...`` — SPMD: partitions sharded one-per-device over
+      ``model_axes``; for ``independent``/``eventually`` the instance axis
+      additionally shards over ``data_axis`` (temporal parallelism).
+
+    Jitted runners are cached per (program, pattern, instance count), so
+    repeated calls (e.g. tracking's per-timestep probes) recompile nothing.
+    """
+
+    def __init__(
+        self,
+        bg: BlockedGraph,
+        *,
+        mesh=None,
+        data_axis: str = "data",
+        model_axes: Tuple[str, ...] = ("model",),
+        use_pallas: bool = False,
+    ):
+        self.bg = bg
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.model_axes = tuple(model_axes)
+        self.use_pallas = use_pallas
+        self.comm = Comm(axis_name=None if mesh is None else self.model_axes)
+        out_mask = np.arange(bg.o_max)[None, :] < bg.n_out[:, None]
+        self._struct = (
+            jnp.asarray(bg.tiles_rc[:, :, 0]), jnp.asarray(bg.tiles_rc[:, :, 1]),
+            jnp.asarray(bg.btiles_rc[:, :, 0]), jnp.asarray(bg.btiles_rc[:, :, 1]),
+            jnp.asarray(bg.out_slot), jnp.asarray(bg.out_local),
+            jnp.asarray(out_mask), jnp.asarray(bg.global_of >= 0),
+        )
+        self._runners: Dict[Any, Callable] = {}
+
+    # ------------------------------------------------------------ staging
+    def stage(
+        self, instance_weights: np.ndarray, zero_fill: float
+    ) -> Tuple[jax.Array, jax.Array]:
+        """(I, E) edge weights -> device tile tensors, batched scatter."""
+        w = np.asarray(instance_weights, np.float32)
+        if w.ndim == 1:
+            w = w[None]
+        return (
+            jnp.asarray(self.bg.fill_local_batch(w, zero=zero_fill)),
+            jnp.asarray(self.bg.fill_boundary_batch(w, zero=zero_fill)),
+        )
+
+    # ------------------------------------------------------- instance step
+    def _device_graph(self, tiles_l, btiles_l, struct) -> DeviceGraph:
+        rows, cols, brows, bcols, out_slot, out_local, out_mask, vmask = struct
+        return DeviceGraph(
+            block_size=self.bg.block_size, num_boundary=self.bg.num_boundary,
+            rows=rows, cols=cols, tiles=tiles_l,
+            brows=brows, bcols=bcols, btiles=btiles_l,
+            out_slot=out_slot, out_local=out_local,
+            out_mask=out_mask, vmask=vmask,
+        )
+
+    def _run_instance(self, program: SemiringProgram, x, tiles_l, btiles_l,
+                      struct):
+        """One instance's BSP on the local shard.  Returns (x, (ss, lsw))."""
+        dg = self._device_graph(tiles_l, btiles_l, struct)
+        if program.kind == "fixpoint":
+            x, st = bsp_fixpoint(
+                x, dg, program.semiring, comm=self.comm,
+                subgraph_centric=program.subgraph_centric,
+                max_supersteps=program.max_supersteps,
+                max_local_sweeps=program.max_local_sweeps,
+                use_pallas=self.use_pallas,
+            )
+            return x, (st["supersteps"], st["local_sweeps"])
+
+        def body(r, _):
+            return program.step(r, dg, self.comm, self.use_pallas), None
+
+        x, _ = jax.lax.scan(body, x, None, length=program.iters)
+        return x, (jnp.asarray(program.iters, jnp.int32),
+                   jnp.asarray(0, jnp.int32))
+
+    # ------------------------------------------------------------- runners
+    def _scan_instances(self, program: SemiringProgram, pattern: str,
+                        x0, tiles, btiles, struct):
+        """Scan the instance axis on the local shard.  Returns
+        (xs (I, P_l, Vp), final (P_l, Vp), ss (I,), lsw (I,))."""
+
+        def step(carry, tb):
+            tiles_l, btiles_l = tb
+            seed = carry if pattern == "sequential" else x0
+            x, (ss, lsw) = self._run_instance(
+                program, seed, tiles_l, btiles_l, struct
+            )
+            return x, (x, ss, lsw)
+
+        final, (xs, ss, lsw) = jax.lax.scan(step, x0, (tiles, btiles))
+        return xs, final, ss, lsw
+
+    def _make_stacked_runner(self, program: SemiringProgram, pattern: str,
+                             merge: Optional[str]):
+        def run(tiles, btiles, x0, *struct):
+            xs, final, ss, lsw = self._scan_instances(
+                program, pattern, x0, tiles, btiles, struct
+            )
+            if pattern == "eventually" and merge == "mean":
+                merged = jnp.mean(xs, axis=0)
+            else:
+                merged = jnp.zeros_like(final)
+            return xs, final, merged, ss, lsw
+
+        return jax.jit(run)
+
+    def _data_size(self) -> int:
+        axes = (self.data_axis,) if isinstance(self.data_axis, str) \
+            else tuple(self.data_axis)
+        n = 1
+        for a in axes:
+            n *= int(self.mesh.shape[a])
+        return n
+
+    def _make_mesh_runner(self, program: SemiringProgram, pattern: str,
+                          merge: Optional[str], n_instances: int):
+        from jax.sharding import PartitionSpec as P_
+
+        mesh = self.mesh
+        maxes = self.model_axes if len(self.model_axes) > 1 \
+            else self.model_axes[0]
+        daxis = self.data_axis
+        # temporal concurrency: shard the instance axis over data only when
+        # it divides — single-instance probes (tracking, nhop hops) and
+        # ragged collections fall back to replicated instances, which stays
+        # correct (every data group computes the same states; the Merge
+        # psum normalizes by the psum'd instance count).
+        temporal = pattern in ("independent", "eventually")
+        shard_instances = (temporal and n_instances % self._data_size() == 0
+                           and n_instances >= self._data_size())
+
+        def local_fn(tiles, btiles, x0, *struct):
+            xs, final, ss, lsw = self._scan_instances(
+                program, pattern, x0, tiles, btiles, struct
+            )
+            if pattern == "eventually" and merge == "mean":
+                # eventually-dependent Merge across ALL instances (data axis)
+                part = jnp.sum(xs, axis=0)
+                total = jax.lax.psum(part, daxis)
+                n = jax.lax.psum(
+                    jnp.asarray(xs.shape[0], jnp.float32), daxis
+                )
+                merged = total / n
+            else:
+                merged = jnp.zeros_like(final)
+            return xs, final, merged, ss, lsw
+
+        iaxis = daxis if shard_instances else None
+
+        def lead(extra_dims: int, *front):
+            return P_(*front, *([None] * extra_dims))
+
+        in_specs = (
+            lead(3, iaxis, maxes),  # tiles (I, P, T, B, B)
+            lead(3, iaxis, maxes),  # btiles
+            lead(1, maxes),         # x0 (P, Vp)
+        ) + tuple(lead(s.ndim - 1, maxes) for s in self._struct)
+        out_specs = (
+            lead(2, iaxis, maxes),  # xs (I, P, Vp)
+            lead(1, maxes),         # final
+            lead(1, maxes),         # merged (replicated over data)
+            P_(iaxis), P_(iaxis),   # ss, lsw (I,)
+        )
+        fn = shard_map(
+            local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+        return jax.jit(fn)
+
+    def _runner(self, program: SemiringProgram, pattern: str,
+                merge: Optional[str], n_instances: int):
+        key = (program, pattern, merge, n_instances)
+        if key not in self._runners:
+            if self.mesh is None:
+                self._runners[key] = self._make_stacked_runner(
+                    program, pattern, merge
+                )
+            else:
+                self._runners[key] = self._make_mesh_runner(
+                    program, pattern, merge, n_instances
+                )
+        return self._runners[key]
+
+    # ----------------------------------------------------------------- run
+    def run(
+        self,
+        program: SemiringProgram,
+        instance_weights: Optional[np.ndarray] = None,
+        *,
+        pattern: str,
+        x0: Optional[np.ndarray] = None,
+        tiles: Optional[jax.Array] = None,
+        btiles: Optional[jax.Array] = None,
+        merge: Optional[str] = None,
+    ) -> EngineResult:
+        """Execute ``program`` over the instance collection.
+
+        Provide either ``instance_weights`` (I, E) — staged through the
+        batched fill — or pre-staged ``tiles``/``btiles`` (I, P, T|Tb, B, B)
+        (e.g. from ``GoFSStore.load_blocked``).  ``x0`` overrides
+        ``program.init(bg)``.  ``merge="mean"`` computes the on-device
+        eventually-dependent Merge.
+        """
+        assert pattern in PATTERNS, pattern
+        assert merge is None or pattern == "eventually", \
+            "merge is the eventually-dependent Merge step; use pattern='eventually'"
+        if tiles is None or btiles is None:
+            assert instance_weights is not None, \
+                "need instance_weights or pre-staged tiles+btiles"
+            tiles, btiles = self.stage(instance_weights, program.zero_fill)
+        if x0 is None:
+            assert program.init is not None, "program has no init; pass x0"
+            x0 = program.init(self.bg)
+        x0 = jnp.asarray(x0, jnp.float32)
+
+        run_fn = self._runner(program, pattern, merge, int(tiles.shape[0]))
+        if self.mesh is not None:
+            with self.mesh:
+                xs, final, merged, ss, lsw = run_fn(
+                    tiles, btiles, x0, *self._struct
+                )
+        else:
+            xs, final, merged, ss, lsw = run_fn(
+                tiles, btiles, x0, *self._struct
+            )
+
+        bg = self.bg
+        xs = np.asarray(xs)
+        values = np.stack([bg.gather_vertex(xs[i]) for i in range(xs.shape[0])])
+        result = EngineResult(
+            pattern=pattern,
+            values=values,
+            final=bg.gather_vertex(np.asarray(final)),
+            merged=bg.gather_vertex(np.asarray(merged))
+            if (pattern == "eventually" and merge == "mean") else None,
+            stats={
+                "supersteps": np.asarray(ss),
+                "local_sweeps": np.asarray(lsw),
+            },
+            _n_published=int(bg.n_out.sum()),
+            _n_parts=bg.n_parts,
+            _num_vertices=len(bg.part_of),
+        )
+        return result

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.core.blocked import BlockedGraph
 from repro.core.semiring import MIN_PLUS, PLUS_MUL, Semiring
 from repro.kernels.semiring_spmm.ops import spmv_blocked
@@ -228,7 +229,7 @@ def make_spmd_superstep(mesh, sr: Semiring = MIN_PLUS, *,
 
             args = (x, rows, cols, tiles, brows, bcols, btiles,
                     out_slot, out_local, out_mask, vmask)
-            fn = jax.shard_map(
+            fn = shard_map(
                 local_fn, mesh=mesh,
                 in_specs=tuple(lead(a) for a in args),
                 out_specs=lead(x),

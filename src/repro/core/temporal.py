@@ -12,80 +12,48 @@ Each device holds I/|data| instances x P/|model| partitions; the spatial
 boundary exchange is a psum over ``model`` ONLY (instances never talk), and
 the eventually-dependent Merge is a final reduction over ``data``.
 
-PageRank (fixed iteration count) is the paper's independent-pattern
-workload; ``pagerank_temporal`` runs every instance's PageRank
-concurrently and optionally merges (mean rank across instances — the
-"PageRank stability over time" analysis the paper cites).
+This module provides the shape-polymorphic ``shard_map`` builder
+(``make_temporal_runner``) used by the dry-run to lower temporal cells from
+abstract shapes alone.  Concrete executions go through
+``repro.core.engine.TemporalEngine``, which generalizes the same lowering
+to every semiring program (SSSP, components, N-hop — not just PageRank)
+and adds batched instance staging; ``pagerank_temporal`` below is the
+engine-backed host wrapper kept for the paper's independent-pattern
+workload.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.core.blocked import BlockedGraph
-from repro.core.semiring import PLUS_MUL
-from repro.core.superstep import Comm, DeviceGraph, _consume, _publish, _spmv_only
+from repro.core.superstep import Comm, DeviceGraph, pagerank_step
 
 
-def _pagerank_iters_local(
-    tiles, btiles, struct: Dict[str, jax.Array], comm: Comm, *,
-    damping: float, num_vertices: int, iters: int, block_size: int,
-    num_boundary: int,
-):
-    """Fixed-iteration PageRank for ONE instance's local partition shard.
-
-    tiles: (P_l, T, B, B); struct holds rows/cols/brows/bcols/out_*/vmask.
-    Fixed iteration count keeps every instance's loop in lockstep, so the
-    model-axis collectives stay congruent under the data-axis sharding.
-    """
-    dg = DeviceGraph(
-        block_size=block_size, num_boundary=num_boundary,
-        rows=struct["rows"], cols=struct["cols"], tiles=tiles,
-        brows=struct["brows"], bcols=struct["bcols"], btiles=btiles,
-        out_slot=struct["out_slot"], out_local=struct["out_local"],
-        out_mask=struct["out_mask"], vmask=struct["vmask"],
-    )
-    r0 = jnp.where(dg.vmask, 1.0 / num_vertices, 0.0)
-    base = (1.0 - damping) / num_vertices
-
-    def body(r, _):
-        contrib = _spmv_only(r, dg, PLUS_MUL, False)
-        boundary = _publish(r, dg, PLUS_MUL, comm)
-        contrib = contrib + _consume(
-            jnp.zeros_like(r), boundary, dg, PLUS_MUL, False, combine=False
-        )
-        return jnp.where(dg.vmask, base + damping * contrib, 0.0), None
-
-    r, _ = jax.lax.scan(body, r0, None, length=iters)
-    return r
-
-
-def make_temporal_pagerank(
+def make_temporal_runner(
     mesh,
+    run_one: Callable[[jax.Array, jax.Array, Dict[str, jax.Array]], jax.Array],
     *,
-    block_size: int,
-    num_boundary: int,
-    num_vertices: int,
-    damping: float = 0.85,
-    iters: int = 30,
     data_axis: str = "data",
     model_axes: Tuple[str, ...] = ("model",),
     merge: bool = True,
 ):
-    """Build the jittable temporal-parallel PageRank.
+    """Lower a per-instance local program onto the temporal-parallel mesh.
 
-    Inputs (global shapes): tiles (I, P, T, B, B), btiles (I, P, Tb, B, B),
-    struct arrays (P, ...).  Returns ranks (I, P, Vp) and, when ``merge``,
-    the across-instance mean rank (P, Vp) — the eventually-dependent Merge
-    as one reduction over the data axis.
+    ``run_one(tiles_l (P_l, T, B, B), btiles_l, struct)`` computes one
+    instance's final vertex state (P_l, Vp) on the local partition shard
+    (collectives over ``model_axes`` only).  The returned jittable fn takes
+    the global (I, P, ...) tensors, shards instances over ``data_axis`` and
+    partitions over ``model_axes``, vmaps ``run_one`` over the local
+    instances, and (when ``merge``) folds the across-instance mean as one
+    reduction over the data axis — the eventually-dependent Merge.
     """
     from jax.sharding import PartitionSpec as P_
 
-    comm = Comm(axis_name=model_axes)
     maxes = model_axes if len(model_axes) > 1 else model_axes[0]
 
     def local_fn(tiles_l, btiles_l, rows, cols, brows, bcols,
@@ -95,25 +63,22 @@ def make_temporal_pagerank(
             "out_slot": out_slot, "out_local": out_local,
             "out_mask": out_mask, "vmask": vmask,
         }
-        run = functools.partial(
-            _pagerank_iters_local, struct=struct, comm=comm,
-            damping=damping, num_vertices=num_vertices, iters=iters,
-            block_size=block_size, num_boundary=num_boundary,
-        )
-        ranks = jax.vmap(run)(tiles_l, btiles_l)  # over local instances
+        states = jax.vmap(lambda t, b: run_one(t, b, struct))(
+            tiles_l, btiles_l
+        )  # over local instances
         if not merge:
-            return ranks, jnp.zeros_like(ranks[0])
+            return states, jnp.zeros_like(states[0])
         # eventually-dependent Merge: mean over ALL instances (data axis)
-        part = jnp.sum(ranks, axis=0)
+        part = jnp.sum(states, axis=0)
         total = jax.lax.psum(part, data_axis)
-        n_inst = jax.lax.psum(jnp.asarray(ranks.shape[0], jnp.float32),
+        n_inst = jax.lax.psum(jnp.asarray(states.shape[0], jnp.float32),
                               data_axis)
-        return ranks, total / n_inst
+        return states, total / n_inst
 
     def spec(*axes):
         return P_(*axes)
 
-    fn = jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(
@@ -130,7 +95,54 @@ def make_temporal_pagerank(
         ),
         check_vma=False,
     )
-    return fn
+
+
+def make_temporal_pagerank(
+    mesh,
+    *,
+    block_size: int,
+    num_boundary: int,
+    num_vertices: int,
+    damping: float = 0.85,
+    iters: int = 30,
+    data_axis: str = "data",
+    model_axes: Tuple[str, ...] = ("model",),
+    merge: bool = True,
+):
+    """Build the jittable temporal-parallel PageRank (the paper's
+    independent-pattern workload) on top of ``make_temporal_runner``.
+
+    Inputs (global shapes): tiles (I, P, T, B, B), btiles (I, P, Tb, B, B),
+    struct arrays (P, ...).  Returns ranks (I, P, Vp) and, when ``merge``,
+    the across-instance mean rank (P, Vp).  Fixed iteration count keeps
+    every instance's loop in lockstep, so the model-axis collectives stay
+    congruent under the data-axis sharding.
+    """
+    comm = Comm(axis_name=model_axes)
+
+    def run_one(tiles, btiles, struct):
+        dg = DeviceGraph(
+            block_size=block_size, num_boundary=num_boundary,
+            rows=struct["rows"], cols=struct["cols"], tiles=tiles,
+            brows=struct["brows"], bcols=struct["bcols"], btiles=btiles,
+            out_slot=struct["out_slot"], out_local=struct["out_local"],
+            out_mask=struct["out_mask"], vmask=struct["vmask"],
+        )
+        r0 = jnp.where(dg.vmask, 1.0 / num_vertices, 0.0)
+
+        def body(r, _):
+            r = pagerank_step(
+                r, dg, comm, damping=damping, num_vertices=num_vertices,
+            )
+            return r, None
+
+        r, _ = jax.lax.scan(body, r0, None, length=iters)
+        return r
+
+    return make_temporal_runner(
+        mesh, run_one, data_axis=data_axis, model_axes=model_axes,
+        merge=merge,
+    )
 
 
 def pagerank_temporal(
@@ -145,32 +157,18 @@ def pagerank_temporal(
     data_axis: str = "data",
     model_axes: Tuple[str, ...] = ("model",),
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Host wrapper: fill per-instance tiles, run all instances concurrently
-    on the mesh.  Returns (ranks (I, V), merged mean rank (V,))."""
-    from repro.core.algorithms.pagerank import edge_weights_for_instance
+    """Host wrapper: batched-stage per-instance tiles, run all instances
+    concurrently on the mesh through the TemporalEngine.
+    Returns (ranks (I, V), merged mean rank (V,))."""
+    from repro.core.algorithms.pagerank import edge_weights_for_instances
+    from repro.core.engine import TemporalEngine, pagerank_program
 
-    I = instance_active.shape[0]
-    lt, bt = [], []
-    for i in range(I):
-        w = edge_weights_for_instance(src, instance_active[i], num_vertices)
-        lt.append(bg.fill_local(w, zero=0.0))
-        bt.append(bg.fill_boundary(w, zero=0.0))
-    tiles = jnp.asarray(np.stack(lt))
-    btiles = jnp.asarray(np.stack(bt))
-    out_mask = np.arange(bg.o_max)[None, :] < bg.n_out[:, None]
-    fn = make_temporal_pagerank(
-        mesh, block_size=bg.block_size, num_boundary=bg.num_boundary,
-        num_vertices=num_vertices, damping=damping, iters=iters,
-        data_axis=data_axis, model_axes=model_axes,
+    w = edge_weights_for_instances(src, instance_active, num_vertices)
+    eng = TemporalEngine(
+        bg, mesh=mesh, data_axis=data_axis, model_axes=model_axes,
     )
-    with mesh:
-        ranks, merged = jax.jit(fn)(
-            tiles, btiles,
-            jnp.asarray(bg.tiles_rc[:, :, 0]), jnp.asarray(bg.tiles_rc[:, :, 1]),
-            jnp.asarray(bg.btiles_rc[:, :, 0]), jnp.asarray(bg.btiles_rc[:, :, 1]),
-            jnp.asarray(bg.out_slot), jnp.asarray(bg.out_local),
-            jnp.asarray(out_mask), jnp.asarray(bg.global_of >= 0),
-        )
-    ranks_v = np.stack([bg.gather_vertex(np.asarray(ranks[i])) for i in range(I)])
-    merged_v = bg.gather_vertex(np.asarray(merged))
-    return ranks_v, merged_v
+    res = eng.run(
+        pagerank_program(num_vertices, damping=damping, iters=iters),
+        w, pattern="eventually", merge="mean",
+    )
+    return res.values, res.merged

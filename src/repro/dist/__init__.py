@@ -1,0 +1,4 @@
+"""Distribution layer: logical-axis sharding rules, runtime mesh context,
+vocab-parallel embed/head helpers, gradient compression, and HLO collective
+accounting.  Everything degrades to a single-device no-op when no mesh is
+given (``CPU_RUNTIME``)."""

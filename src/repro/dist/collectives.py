@@ -1,0 +1,54 @@
+"""HLO collective accounting: parse optimized HLO text and total the output
+bytes moved per collective kind.  Used by the dry-run to report per-cell
+collective volume (the quantity the mesh/DCI budget reasons about)."""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+# "%x = f32[8,128]{1,0} all-reduce(" / "= (f32[2]{0}, f32[2]{0}) all-gather-start("
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>[^=]*?)\s*"
+    r"(?P<kind>" + "|".join(_KINDS) + r")(?P<variant>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        nb = _DTYPE_BYTES.get(dtype)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def collective_bytes_by_kind(hlo_text: str) -> Dict[str, float]:
+    """{kind: total output bytes} over all collective ops in the HLO.
+    Async pairs are counted once (at ``-start``; ``-done`` is skipped)."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        if m.group("variant") == "-done":
+            continue
+        b = _shape_bytes(m.group("shapes"))
+        if b:
+            out[m.group("kind")] = out.get(m.group("kind"), 0.0) + float(b)
+    return out

@@ -1,0 +1,62 @@
+"""Gradient compression for the cross-pod (DCI) all-reduce, with error
+feedback: the compression residual is carried in the compressor state and
+re-added before the next quantization, so the *running mean* of the
+compressed stream is unbiased even though each step is lossy.
+
+``apply(grads, state[, runtime]) -> (compressed_grads, new_state, metrics)``
+operates leaf-wise on any gradient pytree and is jit-safe (pure jnp).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+class Compressor:
+    """Base: error-feedback state is a residual tree shaped like the grads."""
+
+    def init_state(self, tree: Tree) -> Tree:
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+    def _roundtrip(self, t: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def apply(
+        self, grads: Tree, state: Tree, runtime=None
+    ) -> Tuple[Tree, Tree, Dict[str, jax.Array]]:
+        target = jax.tree.map(
+            lambda g, e: g.astype(jnp.float32) + e, grads, state
+        )
+        out = jax.tree.map(self._roundtrip, target)
+        new_state = jax.tree.map(jnp.subtract, target, out)
+        err_sq = sum(jnp.sum(jnp.square(e)) for e in jax.tree.leaves(new_state))
+        return out, new_state, {"comp_err_norm": jnp.sqrt(err_sq)}
+
+
+class Int8Compressor(Compressor):
+    """Symmetric per-leaf int8 quantization (scale = max|g|/127)."""
+
+    def _roundtrip(self, t: jax.Array) -> jax.Array:
+        scale = jnp.max(jnp.abs(t)) / 127.0
+        safe = jnp.maximum(scale, 1e-30)
+        q = jnp.clip(jnp.round(t / safe), -127, 127).astype(jnp.int8)
+        return q.astype(jnp.float32) * safe
+
+
+class TopKCompressor(Compressor):
+    """Keep the top ``frac`` entries of each leaf by magnitude, zero the
+    rest (sparsified all-reduce); ties at the threshold are all kept."""
+
+    def __init__(self, frac: float = 0.01):
+        assert 0.0 < frac <= 1.0
+        self.frac = frac
+
+    def _roundtrip(self, t: jax.Array) -> jax.Array:
+        flat = jnp.abs(t.reshape(-1))
+        k = max(1, int(round(self.frac * flat.shape[0])))
+        kth = jax.lax.top_k(flat, k)[0][-1]
+        return jnp.where(jnp.abs(t) >= kth, t, 0.0)

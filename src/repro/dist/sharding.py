@@ -1,0 +1,200 @@
+"""Logical-axis sharding: rules, Runtime, and the LM head/embed helpers.
+
+The parameter schemas (``repro.models.layers``) tag every dim with a
+*logical* axis name; ``default_rules`` maps logical axes onto mesh axes
+(TP over ``model``, FSDP over the data axes).  ``shardings_for_schema``
+walks a schema and emits a matching ``NamedSharding`` tree, dropping any
+assignment that does not divide or would reuse a mesh axis within one
+spec — so the same rules apply unchanged from reduced CPU configs to the
+production cell.
+
+``Runtime`` carries the mesh context through the model code: activation
+sharding constraints (batch over DP, sequence over TP when ``sp``),
+expert-parallel enablement, and the TP flash-decode flag.  ``CPU_RUNTIME``
+(no mesh) turns every constraint into a no-op, so the identical model code
+is the single-device oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def _is_param_def(node: Any) -> bool:
+    # duck-typed to avoid a circular import (models.layers imports us via
+    # the repro.models package __init__)
+    return hasattr(node, "shape") and hasattr(node, "axes") \
+        and not isinstance(node, dict)
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+
+def default_rules() -> Rules:
+    """Logical axis -> mesh axes.  TP over ``model``; the ``embed`` (d_model)
+    dim is FSDP-sharded over the data axes (weights gather per layer)."""
+    return {
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "experts": "model",
+        "embed": ("pod", "data"),
+        "experts_r": None,
+        "expert_inner": None,
+        "layers": None,
+        None: None,
+    }
+
+
+def _axes_in_mesh(rule, mesh: Mesh) -> Tuple[str, ...]:
+    if rule is None:
+        return ()
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def spec_for_leaf(leaf: Any, rules: Rules, mesh: Mesh) -> P:
+    """PartitionSpec for one ParamDef: rule lookup + divisibility guard +
+    no-axis-reuse guard (a mesh axis may appear once per spec)."""
+    used: set = set()
+    entries = []
+    for dim, name in zip(leaf.shape, leaf.axes):
+        axes = _axes_in_mesh(rules.get(name), mesh)
+        axes = tuple(a for a in axes if a not in used)
+        k = 1
+        for a in axes:
+            k *= int(mesh.shape[a])
+        if not axes or k <= 1 or dim % k != 0:
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes if len(axes) > 1 else axes[0])
+    return P(*entries)
+
+
+def shardings_for_schema(schema: Any, rules: Rules, mesh: Mesh) -> Any:
+    """NamedSharding tree mirroring a ParamDef schema tree."""
+    if _is_param_def(schema):
+        return NamedSharding(mesh, spec_for_leaf(schema, rules, mesh))
+    return {k: shardings_for_schema(v, rules, mesh) for k, v in schema.items()}
+
+
+# ---------------------------------------------------------------------------
+# Runtime
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Runtime:
+    """Mesh context threaded through the model code.  ``mesh=None`` is the
+    single-device oracle: every method becomes the identity."""
+
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ()
+    tp_axis: str = "model"
+    flash_decode: bool = False  # TP flash decoding (attention.flash_decode_tp)
+    sp: bool = True  # sequence-parallel activation constraint
+
+    @property
+    def batch_axes(self):
+        """PartitionSpec entry for the batch dim (tuple collapses to str)."""
+        return self.dp_axes if len(self.dp_axes) != 1 else self.dp_axes[0]
+
+    @property
+    def rules(self) -> Rules:
+        return default_rules()
+
+    def axis_size(self, axis) -> int:
+        if self.mesh is None:
+            return 1
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        n = 1
+        for a in axes:
+            n *= int(self.mesh.shape[a])
+        return n
+
+    def dp_size(self) -> int:
+        return self.axis_size(self.dp_axes) if self.dp_axes else 1
+
+    def ep_enabled(self, cfg) -> bool:
+        """Expert parallelism: experts must divide over the TP axis."""
+        if self.mesh is None or self.tp_axis not in self.mesh.axis_names:
+            return False
+        return cfg.moe.num_experts % int(self.mesh.shape[self.tp_axis]) == 0
+
+    def shard(self, x: jax.Array, *entries) -> jax.Array:
+        """with_sharding_constraint with explicit PartitionSpec entries;
+        identity off-mesh.  Entries beyond x.ndim are ignored."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*entries[: x.ndim]))
+        )
+
+    def activation(self, x: jax.Array) -> jax.Array:
+        """Pin a (B, S, d) activation to (batch over DP, seq over TP when
+        ``sp`` and divisible, replicated d).  Identity off-mesh or for
+        non-3D arrays."""
+        if self.mesh is None or x.ndim != 3:
+            return x
+        B, S, _ = x.shape
+        ndp = self.dp_size()
+        b_entry = self.batch_axes if (self.dp_axes and B % max(ndp, 1) == 0
+                                      and B >= ndp) else None
+        ntp = self.axis_size(self.tp_axis)
+        s_entry = self.tp_axis if (self.sp and ntp > 1 and S % ntp == 0
+                                   and S >= ntp) else None
+        return self.shard(x, b_entry, s_entry, None)
+
+
+CPU_RUNTIME = Runtime(mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel embed / LM head
+# ---------------------------------------------------------------------------
+
+def embed_lookup(embed: jax.Array, tokens: jax.Array, runtime: Runtime) -> jax.Array:
+    """tokens (B, S) -> embeddings (B, S, d).  With a vocab-sharded table the
+    gather lowers to a masked partial lookup + all-reduce under GSPMD."""
+    x = jnp.take(embed, tokens, axis=0)
+    return runtime.activation(x)
+
+
+def _masked_logits(x: jax.Array, head: jax.Array, valid_vocab: int) -> jax.Array:
+    """(B, S, d) x (Vp, d) -> f32 logits with padded vocab masked out."""
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x.astype(jnp.float32), head.astype(jnp.float32)
+    )
+    Vp = head.shape[0]
+    if valid_vocab < Vp:
+        mask = jnp.arange(Vp) < valid_vocab
+        logits = jnp.where(mask[None, None, :], logits, NEG_INF)
+    return logits
+
+
+def lm_head_logits(
+    x: jax.Array, head: jax.Array, runtime: Runtime, *, valid_vocab: int
+) -> jax.Array:
+    """f32 logits (B, S, Vp); padding vocab rows pinned to NEG_INF so
+    sampling never selects them."""
+    return _masked_logits(x, head, valid_vocab)
+
+
+def lm_head_loss(
+    x: jax.Array, head: jax.Array, labels: jax.Array, runtime: Runtime, *,
+    valid_vocab: int,
+) -> jax.Array:
+    """Mean next-token cross-entropy over positions with labels >= 0."""
+    logits = _masked_logits(x, head, valid_vocab)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lab = jnp.clip(labels, 0, valid_vocab - 1)
+    picked = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -163,6 +163,79 @@ class GoFSStore(InstanceProvider):
         for t in range(self.num_timesteps()):
             yield self.get_instance(t, sgid)
 
+    # ---------------- bulk staging (blocked engine path) -------------------
+    def _visible_packs(self) -> Dict[int, List[Tuple[int, int]]]:
+        """Visible timesteps grouped by time pack: {pack: [(row, offset)]}."""
+        packs: Dict[int, List[Tuple[int, int]]] = {}
+        for i, t_real in enumerate(self._t_map):
+            k, r = divmod(t_real, self.ipack)
+            packs.setdefault(k, []).append((i, r))
+        return packs
+
+    def _bin_concat_ids(self, p: int, b: int, field: str) -> np.ndarray:
+        """Template ids for a bin's concatenated value arrays, in slice
+        order.  field: 'vertices' | 'local_edge_id' | 'remote_edge_id'."""
+        sgs = [int(sg["sgid"]) for sg in self._part_meta[p]["bins"][b]["subgraphs"]]
+        if not sgs:
+            return np.array([], np.int64)
+        return np.concatenate(
+            [getattr(self.get_topology(g), field) for g in sgs]
+        )
+
+    def edge_attr_matrix(self, name: str) -> np.ndarray:
+        """Bulk-read an edge attribute for every visible instance into
+        template edge order: (I, E) float32.
+
+        One slice read per (partition, bin, pack) instead of one per
+        (timestep, subgraph) — the staging path the temporal engine batches
+        through ``BlockedGraph.fill_*_batch``.
+        """
+        a = self._e_attrs[name]
+        I = self.num_timesteps()
+        E = int(self.meta["num_edges"])
+        if a.constant is not None:
+            return np.full((I, E), a.constant, np.float32)
+        out = np.empty((I, E), np.float32)
+        packs = self._visible_packs()
+        for p in range(int(self.meta["num_partitions"])):
+            for b in range(len(self._part_meta[p]["bins"])):
+                le_ids = self._bin_concat_ids(p, b, "local_edge_id")
+                re_ids = self._bin_concat_ids(p, b, "remote_edge_id")
+                for k, rows in packs.items():
+                    sl = self._load(p, attr_slice_name("e", name, b, k))
+                    for i, r in rows:
+                        out[i, le_ids] = sl["local"][r]
+                        out[i, re_ids] = sl["remote"][r]
+        return out
+
+    def vertex_attr_matrix(self, name: str) -> np.ndarray:
+        """Bulk-read a vertex attribute for every visible instance: (I, V)."""
+        a = self._v_attrs[name]
+        I = self.num_timesteps()
+        V = int(self.meta["num_vertices"])
+        dt = np.dtype(a.dtype)
+        if a.constant is not None:
+            return np.full((I, V), a.constant, dt)
+        out = np.empty((I, V), dt)
+        packs = self._visible_packs()
+        for p in range(int(self.meta["num_partitions"])):
+            for b in range(len(self._part_meta[p]["bins"])):
+                v_ids = self._bin_concat_ids(p, b, "vertices")
+                for k, rows in packs.items():
+                    sl = self._load(p, attr_slice_name("v", name, b, k))
+                    for i, r in rows:
+                        out[i, v_ids] = sl["vals"][r]
+        return out
+
+    def load_blocked(
+        self, bg, name: str, *, zero: float = np.inf
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Stage an edge attribute straight into blocked instance tensors:
+        (tiles (I, P, T, B, B), btiles (I, P, Tb, B, B))."""
+        w = self.edge_attr_matrix(name)
+        return bg.fill_local_batch(w, zero=zero), \
+            bg.fill_boundary_batch(w, zero=zero)
+
     # ---------------- internals -------------------------------------------
     def _load(self, pid: int, slice_name: str) -> Dict[str, np.ndarray]:
         path = os.path.join(self.root, f"part_{pid}", slice_name)

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_compiler_params
+
 
 def _spmv_kernel(rows, cols, tile_ref, x_ref, y_ref, *, sr_name: str, zero: float):
     t = pl.program_id(0)
@@ -82,7 +84,7 @@ def spmv_blocked_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_out_blocks + 1, B), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("arbitrary",),  # sequential grid: accumulation
         ),
     )(rows_c, cols_c, tiles, x.reshape(nvb, B))

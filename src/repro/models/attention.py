@@ -13,6 +13,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.models.layers import ParamDef, apply_rope
 
 Params = Any
@@ -228,7 +229,7 @@ def flash_decode_tp(
         return out.astype(q_l.dtype), k_l, v_l, pos_l
 
     kv_spec = P(bspec, tp, None, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn,
         mesh=runtime.mesh,
         in_specs=(

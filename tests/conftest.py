@@ -8,6 +8,28 @@ from repro.core.generator import generate_collection
 from repro.core.partition import discover_subgraphs, partition_graph
 from repro.core.subgraph import build_subgraphs
 
+# --- optional hypothesis: property tests skip cleanly when absent ----------
+try:
+    from hypothesis import given, settings, strategies as hyp_st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _StrategyStub:
+        """Stands in for hypothesis.strategies at decoration time only."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    hyp_st = _StrategyStub()
+
 
 TINY = GraphConfig(
     name="tiny", num_vertices=300, avg_degree=3.0, num_instances=3,

@@ -2,7 +2,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.conftest import given, settings, hyp_st as st
 
 from repro.core.blocked import build_blocked
 from repro.core.graph import GraphTemplate

@@ -143,7 +143,7 @@ def test_gofs_provider_matches_inmemory(tiny_gofs, tiny_collection,
 # Property: deploy -> read is the identity for ANY layout configuration
 # ---------------------------------------------------------------------------
 
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from tests.conftest import given, settings, hyp_st as st  # noqa: E402
 
 
 @settings(max_examples=5, deadline=None)

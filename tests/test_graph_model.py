@@ -1,7 +1,8 @@
 """Time-series graph model, partitioning, subgraph discovery (paper §III-IV)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.conftest import given, settings, hyp_st as st
 
 from repro.core.graph import AttributeDef, GraphInstance, GraphTemplate, TimeSeriesGraph
 from repro.core.partition import (
