@@ -1,25 +1,39 @@
 """Temporal engine economy: batched instance staging + unified runner vs
 the per-instance Python loop the algorithms used before the engine.
 
-Rows (also written to BENCH_temporal.json):
+Rows (also written to BENCH_temporal.json; field-by-field reference in
+docs/BENCHMARKS.md):
 
 * staging           — fill_local/fill_boundary per instance + np.stack
                       vs one fill_*_batch scatter for the whole collection
 * gofs_staging      — per-(timestep, subgraph) instance reads vs the
                       GoFSStore.load_blocked bulk slice path
+* async_staging     — end-to-end (GoFS stage + engine run): one-shot sync
+                      staging vs the double-buffered SlicePrefetcher stream
+                      (slice reads + tile fills overlap device execution)
 * pagerank_runner   — per-instance device_graph + pagerank_run loop vs one
                       engine run scanning the staged (I, ...) tensors
+* mesh              — stacked vs temporal-parallel mesh execution on forced
+                      host devices (subprocess; tracks scaling regressions)
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
 from benchmarks.common import BENCH_GRAPH, emit, store_for
 from repro.core.blocked import build_blocked
-from repro.core.engine import TemporalEngine, pagerank_program
+from repro.core.engine import (
+    TemporalEngine,
+    min_plus_program,
+    pagerank_program,
+    source_init,
+)
 from repro.core.generator import generate_collection
 from repro.core.partition import partition_graph
 from repro.core.algorithms.pagerank import (
@@ -99,6 +113,35 @@ def run() -> None:
         "speedup": t_gloop / max(t_gbulk, 1e-12),
     }
 
+    # ---- async staging: end-to-end (stage + run), sync vs prefetched ------
+    # cache_slots=0 so every repeat pays the real disk reads; sequential
+    # SSSP is the paper's flagship temporal workload (carried distances).
+    store0 = store_for("s4-i6", cache_slots=0)
+    eng_t = TemporalEngine(bg)
+    prog = min_plus_program("sssp", init=source_init(0))
+
+    def e2e_sync():
+        tiles, btiles = store0.load_blocked(bg, "latency")
+        return eng_t.run(prog, tiles=tiles, btiles=btiles,
+                         pattern="sequential")
+
+    def e2e_async():
+        stream = store0.load_blocked_stream(bg, "latency", prefetch_depth=2)
+        return eng_t.run(prog, pattern="sequential", stream=stream)
+
+    t_sync = _time(e2e_sync, repeats=3)
+    t_async = _time(e2e_async, repeats=3)
+    ra, rb = e2e_sync(), e2e_async()
+    assert np.array_equal(ra.values, rb.values)  # staging must be invisible
+    emit("temporal/e2e_sync_staging", t_sync * 1e6, f"instances={I}")
+    emit("temporal/e2e_async_staging", t_async * 1e6,
+         f"speedup={t_sync / max(t_async, 1e-12):.2f}x")
+    results["async_staging"] = {
+        "instances": I, "prefetch_depth": 2,
+        "sync_s": t_sync, "async_s": t_async,
+        "speedup": t_sync / max(t_async, 1e-12),
+    }
+
     # ---- runner: per-instance pagerank loop vs one engine scan ------------
     from repro.core.superstep import Comm, device_graph, pagerank_run
 
@@ -135,9 +178,92 @@ def run() -> None:
         "speedup": t_ploop / max(t_peng, 1e-12),
     }
 
+    # ---- mesh: stacked vs temporal-parallel shard_map (forced devices) ----
+    results["mesh"] = _mesh_rows()
+
     with open(OUT_JSON, "w") as f:
         json.dump(results, f, indent=2)
     emit("temporal/json_written", 0.0, OUT_JSON)
+
+
+# Runs in a subprocess: XLA_FLAGS must be set before jax imports, and the
+# in-process benches above need the single real CPU device.
+MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np, jax
+from repro.configs.base import GraphConfig
+from repro.core.generator import generate_collection
+from repro.core.partition import partition_graph
+from repro.core.blocked import build_blocked
+from repro.core.engine import TemporalEngine, pagerank_program
+from repro.core.algorithms.pagerank import edge_weights_for_instances
+
+cfg = GraphConfig(name="mesh-bench", num_vertices=1024, avg_degree=3.0,
+                  num_instances=8, num_partitions=4, block_size=32, seed=7)
+tsg = generate_collection(cfg)
+tmpl = tsg.template
+assign = partition_graph(tmpl, cfg.num_partitions, seed=cfg.seed)
+bg = build_blocked(tmpl, assign, cfg.block_size)
+I = len(tsg)
+active = np.stack([tsg.edge_values(t, "active") for t in range(I)])
+w = edge_weights_for_instances(tmpl.src, active, tmpl.num_vertices)
+prog = pagerank_program(tmpl.num_vertices, iters=20)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+eng_s = TemporalEngine(bg)
+eng_m = TemporalEngine(bg, mesh=mesh)
+
+
+def best(fn, repeats=3):
+    fn()
+    t = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        t = min(t, time.perf_counter() - t0)
+    return t
+
+
+t_stacked = best(lambda: eng_s.run(prog, w, pattern="independent"))
+t_mesh = best(lambda: eng_m.run(prog, w, pattern="independent"))
+rs = eng_s.run(prog, w, pattern="independent")
+rm = eng_m.run(prog, w, pattern="independent")
+assert np.abs(rs.values - rm.values).max() < 1e-6
+t_mesh_merge = best(
+    lambda: eng_m.run(prog, w, pattern="eventually", merge="mean"))
+print(json.dumps({
+    "instances": I, "iters": 20, "devices": 8,
+    "mesh_shape": {"data": 2, "model": 4},
+    "stacked_s": t_stacked, "mesh_s": t_mesh,
+    "mesh_eventually_merge_s": t_mesh_merge,
+    "mesh_vs_stacked": t_stacked / max(t_mesh, 1e-12),
+}))
+"""
+
+
+def _mesh_rows() -> dict:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", MESH_SCRIPT], env=env, capture_output=True,
+        text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    if r.returncode != 0:
+        emit("temporal/mesh_failed", 0.0, r.stderr.strip()[-200:])
+        return {"error": r.stderr.strip()[-2000:]}
+    rows = json.loads(r.stdout.strip().splitlines()[-1])
+    emit("temporal/mesh_stacked", rows["stacked_s"] * 1e6,
+         f"devices={rows['devices']}")
+    emit("temporal/mesh_temporal_parallel", rows["mesh_s"] * 1e6,
+         f"mesh_vs_stacked={rows['mesh_vs_stacked']:.2f}x")
+    emit("temporal/mesh_eventually_merge",
+         rows["mesh_eventually_merge_s"] * 1e6, "")
+    return rows
 
 
 if __name__ == "__main__":

@@ -36,6 +36,12 @@ Instance staging is batched: edge-attribute matrices (I, E) land in
 ``fill_boundary_batch`` (or straight from GoFS slices via
 ``GoFSStore.load_blocked``) — no per-instance Python fill loops.
 
+Staging can also be *overlapped* with execution (``staging="async"`` or an
+explicit ``stream=``): chunks of instances arrive from a
+:class:`repro.gofs.prefetch.SlicePrefetcher` double-buffer while the device
+executes the previous chunk — the paper's §V storage/compute overlap.  See
+``TemporalEngine`` and ``docs/ARCHITECTURE.md`` for the pipeline diagram.
+
 Stats are reported in the same :class:`repro.core.ibsp.BSPStats` shape as
 the host engine so the two paths are directly comparable.
 """
@@ -75,6 +81,18 @@ class SemiringProgram:
     exactly ``iters`` times — the fixed-count form keeps every instance's
     loop in lockstep, which is what lets the mesh run instances
     concurrently over the ``data`` axis.
+
+    Programs are declarative and engine-agnostic: the same program object
+    runs under any pattern, stacked or mesh, sync or async staging.  The
+    two stock constructors cover the paper's workloads:
+
+    >>> from repro.core.engine import min_plus_program, pagerank_program
+    >>> min_plus_program("sssp").kind          # idempotent -> fixpoint
+    'fixpoint'
+    >>> min_plus_program("sssp").semiring.name
+    'min_plus'
+    >>> pagerank_program(100, iters=5).iters   # non-idempotent -> iterate
+    5
     """
 
     name: str
@@ -200,16 +218,72 @@ class EngineResult:
 class TemporalEngine:
     """Pattern-aware runner for semiring programs over one blocked graph.
 
-    Modes:
+    **Pattern contracts** (paper §IV-B; identical semantics in every
+    placement/staging mode):
 
-    * ``mesh=None`` — stacked: all partitions on one device, instances
-      scanned (CPU tests and benchmarks).
-    * ``mesh=...`` — SPMD: partitions sharded one-per-device over
-      ``model_axes``; for ``independent``/``eventually`` the instance axis
-      additionally shards over ``data_axis`` (temporal parallelism).
+    * ``sequential`` — *incrementally aggregated*: instance ``t``'s end
+      state seeds instance ``t + 1`` (``SendToNextTimeStep``); the result's
+      ``final`` is the last carried state.  Chunked/async staging preserves
+      the carry across chunk boundaries.
+    * ``independent`` — every instance starts from the same ``x0``;
+      instances never communicate.  ``values[t]`` is instance ``t``'s
+      converged state.
+    * ``eventually`` — independent execution plus a Merge fold across
+      instances (``merge="mean"`` computes it on device into ``merged``;
+      ``merge=None`` leaves per-instance states for a host-side Merge).
+
+    **Placement** (stacked vs mesh):
+
+    * ``mesh=None`` — stacked: all partitions stacked on one device's
+      leading axis, instances scanned (CPU tests and benchmarks).
+    * ``mesh=...`` — SPMD ``shard_map``: partitions sharded one-per-device
+      over ``model_axes``; for ``independent``/``eventually`` the instance
+      axis additionally shards over ``data_axis`` (temporal parallelism)
+      whenever the instance count divides the data-axis size, else
+      instances are replicated (still correct, no speedup).
+
+    **Staging** (how instance tensors reach the device):
+
+    * ``staging="sync"`` — stage the whole (I, P, T, B, B) batch, then run.
+    * ``staging="async"`` — double-buffered: instances are staged in chunks
+      on a background thread (:class:`repro.gofs.prefetch.SlicePrefetcher`)
+      while the device executes the previous chunk; results are bitwise
+      identical to sync staging (one caveat: on a mesh, the ``eventually``
+      ``merge="mean"`` fold reduces in a different grouping than the
+      in-``shard_map`` psum, so ``merged`` may differ in low-order float
+      bits there — ``values``/``final`` stay identical).  ``run(...,
+      stream=...)`` accepts an explicit prefetcher (e.g.
+      ``GoFSStore.load_blocked_stream``) so disk slice reads themselves
+      overlap execution; for mesh runs pick a ``chunk_instances`` that is
+      a multiple of the data-axis size or the per-chunk runners fall back
+      to replicated instances.
 
     Jitted runners are cached per (program, pattern, instance count), so
     repeated calls (e.g. tracking's per-timestep probes) recompile nothing.
+
+    Example — one tiny graph, all three patterns, sync and async staging:
+
+    >>> import numpy as np
+    >>> from repro.core.blocked import build_blocked
+    >>> from repro.core.graph import GraphTemplate
+    >>> from repro.core.engine import (
+    ...     TemporalEngine, min_plus_program, source_init)
+    >>> tmpl = GraphTemplate(num_vertices=4,
+    ...     src=np.array([0, 1, 2, 0]), dst=np.array([1, 2, 3, 2]))
+    >>> bg = build_blocked(tmpl, np.array([0, 0, 1, 1]), block_size=2)
+    >>> eng = TemporalEngine(bg)
+    >>> sssp = min_plus_program("sssp", init=source_init(0))
+    >>> w = np.ones((2, 4), np.float32)     # 2 instances, unit latency
+    >>> eng.run(sssp, w, pattern="sequential").final
+    array([0., 1., 1., 2.], dtype=float32)
+    >>> eng.run(sssp, w, pattern="independent").values.shape
+    (2, 4)
+    >>> eng.run(sssp, w, pattern="eventually", merge="mean").merged
+    array([0., 1., 1., 2.], dtype=float32)
+    >>> eng_async = TemporalEngine(bg, staging="async")
+    >>> bool(np.array_equal(eng_async.run(sssp, w, pattern="sequential").final,
+    ...                     eng.run(sssp, w, pattern="sequential").final))
+    True
     """
 
     def __init__(
@@ -220,12 +294,19 @@ class TemporalEngine:
         data_axis: str = "data",
         model_axes: Tuple[str, ...] = ("model",),
         use_pallas: bool = False,
+        staging: str = "sync",
+        prefetch_depth: int = 2,
+        chunk_instances: Optional[int] = None,
     ):
+        assert staging in ("sync", "async"), staging
         self.bg = bg
         self.mesh = mesh
         self.data_axis = data_axis
         self.model_axes = tuple(model_axes)
         self.use_pallas = use_pallas
+        self.staging = staging
+        self.prefetch_depth = prefetch_depth
+        self.chunk_instances = chunk_instances
         self.comm = Comm(axis_name=None if mesh is None else self.model_axes)
         out_mask = np.arange(bg.o_max)[None, :] < bg.n_out[:, None]
         self._struct = (
@@ -235,6 +316,7 @@ class TemporalEngine:
             jnp.asarray(out_mask), jnp.asarray(bg.global_of >= 0),
         )
         self._runners: Dict[Any, Callable] = {}
+        self._merge_fn: Optional[Callable] = None
 
     # ------------------------------------------------------------ staging
     def stage(
@@ -389,6 +471,69 @@ class TemporalEngine:
                 )
         return self._runners[key]
 
+    # ------------------------------------------------------------ dispatch
+    def _dispatch(self, run_fn, tiles, btiles, x0):
+        if self.mesh is not None:
+            with self.mesh:
+                return run_fn(tiles, btiles, x0, *self._struct)
+        return run_fn(tiles, btiles, x0, *self._struct)
+
+    def _merge_mean(self, xs):
+        """On-device Merge over the full instance axis (async path).
+        Stacked: the same ``jnp.mean`` the sync runner computes in-graph,
+        on the same (I, P, Vp) values — bitwise-identical output.  Mesh:
+        the sync runner reduces as psum-of-shard-sums inside ``shard_map``,
+        a different float grouping — equal up to low-order bits."""
+        if self._merge_fn is None:
+            self._merge_fn = jax.jit(lambda v: jnp.mean(v, axis=0))
+        if self.mesh is not None:
+            with self.mesh:
+                return self._merge_fn(xs)
+        return self._merge_fn(xs)
+
+    def _run_stream(self, program: SemiringProgram, pattern: str,
+                    merge: Optional[str], chunks):
+        """Consume a chunk stream (SlicePrefetcher or any iterable of
+        StagedChunk): dispatch chunk *k* to the device, then pull chunk
+        *k+1* — whose slice reads + tile fills happen on the prefetcher's
+        background pool — while *k* executes (JAX dispatch is async).  The
+        sequential pattern carries the end state across chunk boundaries;
+        the eventually Merge folds once over the concatenated states."""
+
+        def body(x0):
+            xs_p, ss_p, lsw_p = [], [], []
+            carry = x0
+            final = None
+            for ch in chunks:
+                # Aliasing (no copy) is safe ONLY because each chunk owns
+                # its buffers (see SlicePrefetcher): JAX's device put
+                # zero-copy-aliases aligned host buffers on CPU and defers
+                # the host read even under copy=True, so a reused staging
+                # buffer would be overwritten mid-execution.
+                tiles = jnp.asarray(ch.tiles)
+                btiles = jnp.asarray(ch.btiles)
+                run_fn = self._runner(program, pattern, None,
+                                      int(tiles.shape[0]))
+                seed = carry if pattern == "sequential" else x0
+                xs, fin, _, ss, lsw = self._dispatch(
+                    run_fn, tiles, btiles, seed
+                )
+                carry = final = fin
+                xs_p.append(xs)
+                ss_p.append(ss)
+                lsw_p.append(lsw)
+            assert final is not None, "empty instance stream"
+            xs = xs_p[0] if len(xs_p) == 1 else jnp.concatenate(xs_p)
+            ss = ss_p[0] if len(ss_p) == 1 else jnp.concatenate(ss_p)
+            lsw = lsw_p[0] if len(lsw_p) == 1 else jnp.concatenate(lsw_p)
+            if pattern == "eventually" and merge == "mean":
+                merged = self._merge_mean(xs)
+            else:
+                merged = jnp.zeros_like(final)
+            return xs, final, merged, ss, lsw
+
+        return body
+
     # ----------------------------------------------------------------- run
     def run(
         self,
@@ -400,36 +545,70 @@ class TemporalEngine:
         tiles: Optional[jax.Array] = None,
         btiles: Optional[jax.Array] = None,
         merge: Optional[str] = None,
+        stream=None,
+        staging: Optional[str] = None,
     ) -> EngineResult:
         """Execute ``program`` over the instance collection.
 
-        Provide either ``instance_weights`` (I, E) — staged through the
-        batched fill — or pre-staged ``tiles``/``btiles`` (I, P, T|Tb, B, B)
-        (e.g. from ``GoFSStore.load_blocked``).  ``x0`` overrides
-        ``program.init(bg)``.  ``merge="mean"`` computes the on-device
-        eventually-dependent Merge.
+        Instance sources (exactly one):
+
+        * ``instance_weights`` (I, E) — staged through the batched fill;
+          with ``staging="async"`` (call or constructor) the fill is
+          chunked behind a background prefetcher and overlaps execution.
+        * pre-staged ``tiles``/``btiles`` (I, P, T|Tb, B, B) — e.g. from
+          ``GoFSStore.load_blocked`` (always synchronous: already staged).
+        * ``stream`` — an iterable of :class:`repro.gofs.prefetch
+          .StagedChunk` (e.g. ``GoFSStore.load_blocked_stream``): chunks
+          execute as they land, so disk reads overlap device compute.
+
+        ``x0`` overrides ``program.init(bg)``.  ``merge="mean"`` computes
+        the on-device eventually-dependent Merge.  All staging modes are
+        result-identical; see the class docstring for pattern contracts.
         """
         assert pattern in PATTERNS, pattern
         assert merge is None or pattern == "eventually", \
             "merge is the eventually-dependent Merge step; use pattern='eventually'"
-        if tiles is None or btiles is None:
-            assert instance_weights is not None, \
-                "need instance_weights or pre-staged tiles+btiles"
-            tiles, btiles = self.stage(instance_weights, program.zero_fill)
+        staging = staging or self.staging
         if x0 is None:
             assert program.init is not None, "program has no init; pass x0"
             x0 = program.init(self.bg)
         x0 = jnp.asarray(x0, jnp.float32)
 
-        run_fn = self._runner(program, pattern, merge, int(tiles.shape[0]))
-        if self.mesh is not None:
-            with self.mesh:
-                xs, final, merged, ss, lsw = run_fn(
-                    tiles, btiles, x0, *self._struct
-                )
+        if stream is None and staging == "async" and tiles is None:
+            assert instance_weights is not None, \
+                "need instance_weights or pre-staged tiles+btiles"
+            from repro.gofs.prefetch import SlicePrefetcher
+
+            w = np.asarray(instance_weights, np.float32)
+            if w.ndim == 1:
+                w = w[None]
+            # <= ~4 chunks by default: enough overlap, few compile shapes
+            chunk = self.chunk_instances or max(1, -(-w.shape[0] // 4))
+            if self.mesh is not None and self.chunk_instances is None:
+                # keep each chunk's instance axis divisible by the data
+                # axis, else per-chunk mesh runners fall back to replicated
+                # instances and temporal parallelism is silently lost
+                d = self._data_size()
+                chunk = max(1, -(-chunk // d)) * d
+            stream = SlicePrefetcher.from_weights(
+                self.bg, w, zero=program.zero_fill,
+                prefetch_depth=self.prefetch_depth, chunk_instances=chunk,
+            )
+
+        if stream is not None:
+            xs, final, merged, ss, lsw = self._run_stream(
+                program, pattern, merge, stream
+            )(x0)
         else:
-            xs, final, merged, ss, lsw = run_fn(
-                tiles, btiles, x0, *self._struct
+            if tiles is None or btiles is None:
+                assert instance_weights is not None, \
+                    "need instance_weights, tiles+btiles, or stream"
+                tiles, btiles = self.stage(instance_weights,
+                                           program.zero_fill)
+            run_fn = self._runner(program, pattern, merge,
+                                  int(tiles.shape[0]))
+            xs, final, merged, ss, lsw = self._dispatch(
+                run_fn, tiles, btiles, x0
             )
 
         bg = self.bg

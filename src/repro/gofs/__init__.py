@@ -8,6 +8,10 @@ LRU slice caching (§V-E).  ``GoFSStore`` implements the iBSP engine's
 """
 from repro.gofs.cache import SliceCache
 from repro.gofs.layout import deploy_collection
+from repro.gofs.prefetch import SlicePrefetcher, StagedChunk
 from repro.gofs.store import GoFSStore
 
-__all__ = ["SliceCache", "deploy_collection", "GoFSStore"]
+__all__ = [
+    "SliceCache", "SlicePrefetcher", "StagedChunk", "deploy_collection",
+    "GoFSStore",
+]

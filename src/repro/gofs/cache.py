@@ -7,35 +7,47 @@ micro-benchmarks; the cache is transparent to the GoFS API user.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
 
 class SliceCache:
+    """Thread-safe: the prefetcher's background pool (gofs.prefetch) and the
+    caller's thread may hit the same store concurrently.  The lock guards
+    the LRU bookkeeping only; the ``loader`` disk read runs outside it (two
+    threads may race the same cold key and both read — harmless, the LRU
+    keeps one copy)."""
+
     def __init__(self, slots: int = 14):
         self.slots = slots
         self._data: "OrderedDict[str, Any]" = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def get(self, key: str, loader: Callable[[], Any]) -> Any:
         if self.slots <= 0:
-            self.misses += 1
+            with self._lock:
+                self.misses += 1
             return loader()
-        if key in self._data:
-            self.hits += 1
-            self._data.move_to_end(key)
-            return self._data[key]
-        self.misses += 1
+        with self._lock:
+            if key in self._data:
+                self.hits += 1
+                self._data.move_to_end(key)
+                return self._data[key]
+            self.misses += 1
         val = loader()
-        self._data[key] = val
-        if len(self._data) > self.slots:
-            self._data.popitem(last=False)
+        with self._lock:
+            self._data[key] = val
+            if len(self._data) > self.slots:
+                self._data.popitem(last=False)
         return val
 
     def clear(self) -> None:
-        self._data.clear()
+        with self._lock:
+            self._data.clear()
 
     def stats(self) -> Dict[str, float]:
         total = self.hits + self.misses

@@ -1,0 +1,249 @@
+"""Double-buffered slice staging for the temporal engine (paper §V read
+optimizations: overlap GoFS slice reads with Gopher computation).
+
+The GoFFish paper's co-design argument is that iterative BSP execution is
+only as fast as the store can feed it time-series instances; its storage
+section overlaps slice materialization with computation so the engine never
+waits on disk.  :class:`SlicePrefetcher` is that pipeline for the blocked
+engine: it reads an edge attribute's (bin, pack) slices on a background
+thread pool, assembles them into ready ``(I_chunk, P, T, B, B)`` instance
+tile tensors (through the batched in-place ``BlockedGraph`` ``out=``
+fills), and hands chunks to the consumer through a bounded in-order
+window — the same shape as the shard prefetch in
+``repro.train.data.PackedShardDataset``.
+
+``prefetch_depth`` semantics:
+
+* ``1``  — degenerate/synchronous: no thread is created; each chunk is read
+  and filled on demand when the consumer asks for it.
+* ``d>=2`` — double (d=2) or deeper buffering: up to ``d - 1`` chunks are
+  staged ahead on the pool while the consumer processes the current one.
+
+Each chunk OWNS its buffers: they are allocated on the producer (so the
+allocation cost overlaps execution too) and never rewritten after handoff,
+which is what lets a device consumer alias them with no further copy
+(``jnp.asarray`` zero-copy-aliases aligned host buffers on CPU, and even
+``jnp.array(..., copy=True)`` defers the host read until execution —
+reusing a buffer ring here corrupts in-flight chunks; the engine parity
+tests pin this down).  In-flight memory stays bounded by the window: at
+most ``prefetch_depth + 1`` chunks exist before the consumer releases
+theirs.
+
+Cancellation: ``close()`` (or exiting the ``with`` block) stops the
+producer, cancels not-yet-started reads, and joins the pool — no leaked
+threads; abandoning the iterator mid-stream triggers the same cleanup.
+
+Doctest (in-memory source; the GoFS-backed form is
+``GoFSStore.load_blocked_stream``):
+
+>>> import numpy as np
+>>> from repro.core.graph import GraphTemplate
+>>> from repro.core.blocked import build_blocked
+>>> from repro.gofs.prefetch import SlicePrefetcher
+>>> tmpl = GraphTemplate(num_vertices=4,
+...     src=np.array([0, 1, 2, 0]), dst=np.array([1, 2, 3, 2]))
+>>> bg = build_blocked(tmpl, np.array([0, 0, 1, 1]), block_size=2)
+>>> w = np.ones((5, 4), np.float32)  # 5 instances x 4 edges
+>>> with SlicePrefetcher.from_weights(bg, w, zero=np.inf,
+...                                   chunk_instances=2) as pf:
+...     [(c.start, c.count) for c in pf]
+[(0, 2), (2, 2), (4, 1)]
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+THREAD_PREFIX = "gofs-prefetch"
+
+
+@dataclass
+class StagedChunk:
+    """A contiguous run of staged instances, ready for the engine.
+
+    The chunk owns ``tiles``/``btiles``: the prefetcher never touches them
+    again after handoff, so consumers may alias them (``jnp.asarray``)
+    for as long as they hold the chunk.
+    """
+
+    start: int  # first (visible) instance index covered by this chunk
+    count: int
+    tiles: np.ndarray  # (count, P, T, B, B) local adjacency tiles
+    btiles: np.ndarray  # (count, P, Tb, B, B) boundary tiles
+
+
+# reader(start, end) -> (end - start, E) float32 edge weights for the
+# visible-instance span [start, end)
+Reader = Callable[[int, int], np.ndarray]
+
+
+class SlicePrefetcher:
+    """Stage (bin, pack) attribute reads ahead of the engine run.
+
+    Construct via :meth:`GoFSStore.load_blocked_stream
+    <repro.gofs.store.GoFSStore.load_blocked_stream>` (disk slices) or
+    :meth:`from_weights` (an in-memory ``(I, E)`` array — what
+    ``TemporalEngine(staging="async")`` uses when handed raw weights).
+
+    Iterating yields :class:`StagedChunk` in instance order.  The iterator
+    is re-entrant: each ``iter()`` starts a fresh pass; only one pass may
+    be active at a time.
+    """
+
+    def __init__(
+        self,
+        bg,
+        reader: Reader,
+        num_instances: int,
+        *,
+        zero: float,
+        prefetch_depth: int = 2,
+        chunk_instances: int = 1,
+        num_workers: int = 1,
+    ):
+        assert prefetch_depth >= 1, "prefetch_depth must be >= 1"
+        assert chunk_instances >= 1 and num_workers >= 1
+        self.bg = bg
+        self.reader = reader
+        self.num_instances = int(num_instances)
+        self.zero = float(zero)
+        self.prefetch_depth = int(prefetch_depth)
+        self.chunk_instances = int(chunk_instances)
+        self.num_workers = int(num_workers)
+        self._spans: List[Tuple[int, int]] = [
+            (s, min(s + self.chunk_instances, self.num_instances))
+            for s in range(0, self.num_instances, self.chunk_instances)
+        ]
+        self._stop = threading.Event()
+        self._lock = threading.Lock()  # guards _pool/_pending handoff
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pending: deque = deque()
+
+    # ------------------------------------------------------------ sources
+    @classmethod
+    def from_weights(
+        cls,
+        bg,
+        weights: np.ndarray,
+        *,
+        zero: float,
+        prefetch_depth: int = 2,
+        chunk_instances: int = 1,
+        num_workers: int = 1,
+    ) -> "SlicePrefetcher":
+        """Prefetch from an in-memory (I, E) weight matrix (the fills —
+        the expensive host-side scatter — still overlap the engine run)."""
+        w = np.asarray(weights, np.float32)
+        if w.ndim == 1:
+            w = w[None]
+        return cls(
+            bg, lambda s, e: w[s:e], w.shape[0], zero=zero,
+            prefetch_depth=prefetch_depth, chunk_instances=chunk_instances,
+            num_workers=num_workers,
+        )
+
+    # ------------------------------------------------------------ staging
+    def _stage(self, span: Tuple[int, int]) -> StagedChunk:
+        """Read + fill one chunk into chunk-owned buffers (runs on the
+        pool, so both the reads AND the fill/allocation overlap the
+        consumer's execution)."""
+        s, e = span
+        n = e - s
+        lt_buf, bt_buf = self.bg.alloc_batch_buffers(n)
+        w = self.reader(s, e)
+        tiles = self.bg.fill_local_batch(w, zero=self.zero, out=lt_buf)
+        btiles = self.bg.fill_boundary_batch(w, zero=self.zero, out=bt_buf)
+        return StagedChunk(start=s, count=n, tiles=tiles, btiles=btiles)
+
+    def __iter__(self) -> Iterator[StagedChunk]:
+        if self.prefetch_depth == 1:
+            return self._iter_sync()
+        return self._iter_async()
+
+    def _iter_sync(self) -> Iterator[StagedChunk]:
+        self._stop.clear()  # fresh pass
+        for span in self._spans:
+            if self._stop.is_set():
+                return
+            yield self._stage(span)
+
+    def _iter_async(self) -> Iterator[StagedChunk]:
+        assert self._pool is None, "one prefetch pass at a time"
+        self._stop.clear()  # fresh pass
+        pool = ThreadPoolExecutor(
+            max_workers=self.num_workers, thread_name_prefix=THREAD_PREFIX
+        )
+        self._pool = pool
+        pending = self._pending
+        pending.clear()
+        todo = iter(self._spans)
+
+        def submit_one() -> None:
+            with self._lock:
+                if self._stop.is_set() or self._pool is not pool:
+                    return  # a concurrent close() ended this pass
+                try:
+                    span = next(todo)
+                except StopIteration:
+                    return
+                try:
+                    pending.append(pool.submit(self._guarded_stage, span))
+                except RuntimeError:  # pool shut down under us
+                    return
+
+        try:
+            # keep the window full: up to depth-1 chunks staged ahead
+            for _ in range(self.prefetch_depth - 1):
+                submit_one()
+            while True:
+                try:
+                    fut = pending.popleft()
+                except IndexError:  # drained, or cleared by close()
+                    return
+                chunk = fut.result()
+                # Submit BEFORE the yield: the next chunk's read + fill
+                # must already be running while the consumer executes this
+                # one (on CPU the jit call itself is where execution time
+                # is spent, so a submit deferred to the next pull would
+                # never overlap it).
+                submit_one()
+                if chunk is None:  # producer observed stop mid-pass
+                    return
+                yield chunk
+        finally:
+            self.close()
+
+    def _guarded_stage(self, span) -> Optional[StagedChunk]:
+        if self._stop.is_set():
+            return None
+        return self._stage(span)
+
+    # ------------------------------------------------------------- cancel
+    def close(self) -> None:
+        """Stop producing, cancel queued reads, join the pool (idempotent).
+
+        Safe to call mid-stream, from the consumer or any other thread
+        (a lock serializes the pool/pending handoff against the consumer's
+        submits): in-flight chunks finish (their buffer writes must not be
+        torn), queued chunks are cancelled, and the pool threads exit
+        before this returns."""
+        self._stop.set()
+        with self._lock:
+            pool, self._pool = self._pool, None
+            futs = list(self._pending)
+            self._pending.clear()
+        if pool is not None:
+            for fut in futs:
+                fut.cancel()
+            pool.shutdown(wait=True)
+
+    def __enter__(self) -> "SlicePrefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -164,12 +164,19 @@ class GoFSStore(InstanceProvider):
             yield self.get_instance(t, sgid)
 
     # ---------------- bulk staging (blocked engine path) -------------------
-    def _visible_packs(self) -> Dict[int, List[Tuple[int, int]]]:
-        """Visible timesteps grouped by time pack: {pack: [(row, offset)]}."""
+    def _visible_packs(
+        self, t_indices: Optional[Sequence[int]] = None
+    ) -> Dict[int, List[Tuple[int, int]]]:
+        """Visible timesteps grouped by time pack: {pack: [(row, offset)]}.
+
+        ``t_indices``: subset of visible instance indices (default: all);
+        ``row`` indexes into that subset."""
+        if t_indices is None:
+            t_indices = range(len(self._t_map))
         packs: Dict[int, List[Tuple[int, int]]] = {}
-        for i, t_real in enumerate(self._t_map):
-            k, r = divmod(t_real, self.ipack)
-            packs.setdefault(k, []).append((i, r))
+        for j, i in enumerate(t_indices):
+            k, r = divmod(self._t_map[i], self.ipack)
+            packs.setdefault(k, []).append((j, r))
         return packs
 
     def _bin_concat_ids(self, p: int, b: int, field: str) -> np.ndarray:
@@ -182,6 +189,32 @@ class GoFSStore(InstanceProvider):
             [getattr(self.get_topology(g), field) for g in sgs]
         )
 
+    def edge_attr_rows(
+        self, name: str, t_indices: Sequence[int]
+    ) -> np.ndarray:
+        """Bulk-read an edge attribute for a subset of visible instances
+        into template edge order: (len(t_indices), E) float32.
+
+        One slice read per (partition, bin, pack) touched by the subset —
+        the chunk grain of ``load_blocked_stream``'s prefetcher."""
+        a = self._e_attrs[name]
+        n = len(t_indices)
+        E = int(self.meta["num_edges"])
+        if a.constant is not None:
+            return np.full((n, E), a.constant, np.float32)
+        out = np.empty((n, E), np.float32)
+        packs = self._visible_packs(t_indices)
+        for p in range(int(self.meta["num_partitions"])):
+            for b in range(len(self._part_meta[p]["bins"])):
+                le_ids = self._bin_concat_ids(p, b, "local_edge_id")
+                re_ids = self._bin_concat_ids(p, b, "remote_edge_id")
+                for k, rows in packs.items():
+                    sl = self._load(p, attr_slice_name("e", name, b, k))
+                    for j, r in rows:
+                        out[j, le_ids] = sl["local"][r]
+                        out[j, re_ids] = sl["remote"][r]
+        return out
+
     def edge_attr_matrix(self, name: str) -> np.ndarray:
         """Bulk-read an edge attribute for every visible instance into
         template edge order: (I, E) float32.
@@ -190,23 +223,7 @@ class GoFSStore(InstanceProvider):
         (timestep, subgraph) — the staging path the temporal engine batches
         through ``BlockedGraph.fill_*_batch``.
         """
-        a = self._e_attrs[name]
-        I = self.num_timesteps()
-        E = int(self.meta["num_edges"])
-        if a.constant is not None:
-            return np.full((I, E), a.constant, np.float32)
-        out = np.empty((I, E), np.float32)
-        packs = self._visible_packs()
-        for p in range(int(self.meta["num_partitions"])):
-            for b in range(len(self._part_meta[p]["bins"])):
-                le_ids = self._bin_concat_ids(p, b, "local_edge_id")
-                re_ids = self._bin_concat_ids(p, b, "remote_edge_id")
-                for k, rows in packs.items():
-                    sl = self._load(p, attr_slice_name("e", name, b, k))
-                    for i, r in rows:
-                        out[i, le_ids] = sl["local"][r]
-                        out[i, re_ids] = sl["remote"][r]
-        return out
+        return self.edge_attr_rows(name, range(self.num_timesteps()))
 
     def vertex_attr_matrix(self, name: str) -> np.ndarray:
         """Bulk-read a vertex attribute for every visible instance: (I, V)."""
@@ -235,6 +252,38 @@ class GoFSStore(InstanceProvider):
         w = self.edge_attr_matrix(name)
         return bg.fill_local_batch(w, zero=zero), \
             bg.fill_boundary_batch(w, zero=zero)
+
+    def load_blocked_stream(
+        self,
+        bg,
+        name: str,
+        *,
+        zero: float = np.inf,
+        prefetch_depth: int = 2,
+        chunk_instances: Optional[int] = None,
+        num_workers: int = 1,
+    ):
+        """Streaming variant of ``load_blocked``: a
+        :class:`~repro.gofs.prefetch.SlicePrefetcher` yielding instance
+        chunks as their (bin, pack) slices land, so the engine can execute
+        chunk *k* while chunk *k+1* stages (``TemporalEngine.run(...,
+        stream=...)`` / ``staging="async"``).
+
+        ``chunk_instances`` defaults to the deployment's temporal pack size
+        (``instances_per_slice``) — the natural disk grain: one chunk reads
+        each (partition, bin) attribute slice of one time pack exactly once.
+        """
+        from repro.gofs.prefetch import SlicePrefetcher
+
+        return SlicePrefetcher(
+            bg,
+            lambda s, e: self.edge_attr_rows(name, range(s, e)),
+            self.num_timesteps(),
+            zero=zero,
+            prefetch_depth=prefetch_depth,
+            chunk_instances=int(chunk_instances or self.ipack),
+            num_workers=num_workers,
+        )
 
     # ---------------- internals -------------------------------------------
     def _load(self, pid: int, slice_name: str) -> Dict[str, np.ndarray]:

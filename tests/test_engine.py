@@ -168,6 +168,10 @@ rm = eng_m.run(pp, pw, pattern="eventually", merge="mean")
 rs = eng_s.run(pp, pw, pattern="eventually", merge="mean")
 assert np.abs(rm.values - rs.values).max() < 1e-6
 assert np.abs(rm.merged - rs.merged).max() < 1e-6
+# async staging under the mesh: per-chunk shard_map dispatch, same results
+rm_async = eng_m.run(prog, w, pattern="independent", staging="async")
+rm_sync = eng_m.run(prog, w, pattern="independent")
+assert np.array_equal(rm_async.values, rm_sync.values)
 # single-instance probes (I=1 < data axis) fall back to replicated instances
 r1m = eng_m.run(prog, w[:1], pattern="independent")
 r1s = eng_s.run(prog, w[:1], pattern="independent")

@@ -1,0 +1,202 @@
+"""SlicePrefetcher + async engine staging: the double-buffered GoFS read
+pipeline must be invisible in the results — async-vs-sync staging parity is
+BITWISE on all three iBSP patterns — and clean under cancellation (no
+leaked threads, prefetch_depth=1 degenerates to thread-free sync reads)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.blocked import build_blocked
+from repro.core.engine import (
+    TemporalEngine,
+    min_plus_program,
+    pagerank_program,
+    source_init,
+)
+from repro.core.algorithms import pagerank
+from repro.gofs import GoFSStore
+from repro.gofs.prefetch import THREAD_PREFIX, SlicePrefetcher
+
+from tests.conftest import TINY
+
+
+def _prefetch_threads():
+    return [t for t in threading.enumerate()
+            if t.name.startswith(THREAD_PREFIX)]
+
+
+@pytest.fixture(scope="module")
+def env(tiny_collection, tiny_partitioned, tiny_gofs):
+    tmpl, assign, sg_ids, subs = tiny_partitioned
+    bg = build_blocked(tmpl, assign, TINY.block_size)
+    store = GoFSStore(tiny_gofs, cache_slots=TINY.cache_slots)
+    I = len(tiny_collection)
+    weights = np.stack([tiny_collection.edge_values(t, "latency")
+                        for t in range(I)])
+    active = np.stack([tiny_collection.edge_values(t, "active")
+                       for t in range(I)])
+    return tmpl, bg, store, weights, active
+
+
+# ---------------------------------------------------------------- staging
+def test_fill_batch_out_buffer_in_place(env):
+    tmpl, bg, store, weights, active = env
+    ref_l = bg.fill_local_batch(weights)
+    ref_b = bg.fill_boundary_batch(weights)
+    buf_l, buf_b = bg.alloc_batch_buffers(weights.shape[0])
+    buf_l[...] = -7.0  # stale data from a previous ring pass
+    buf_b[...] = -7.0
+    got_l = bg.fill_local_batch(weights, out=buf_l)
+    got_b = bg.fill_boundary_batch(weights, out=buf_b)
+    assert np.array_equal(got_l, ref_l) and np.array_equal(got_b, ref_b)
+    # in place: no second copy
+    assert np.shares_memory(got_l, buf_l) and np.shares_memory(got_b, buf_b)
+
+
+def test_edge_attr_rows_matches_matrix(env):
+    tmpl, bg, store, weights, active = env
+    full = store.edge_attr_matrix("latency")
+    rows = store.edge_attr_rows("latency", [2, 0])
+    assert np.array_equal(rows[0], full[2])
+    assert np.array_equal(rows[1], full[0])
+
+
+def test_stream_chunks_match_bulk_load(env):
+    tmpl, bg, store, weights, active = env
+    tiles, btiles = store.load_blocked(bg, "latency")
+    for depth in (1, 2, 3):
+        pf = store.load_blocked_stream(bg, "latency", prefetch_depth=depth,
+                                       chunk_instances=2)
+        got_t, got_b, starts = [], [], []
+        with pf:
+            for ch in pf:
+                starts.append(ch.start)
+                got_t.append(ch.tiles)  # chunk-owned: safe to hold
+                got_b.append(ch.btiles)
+        assert starts == list(range(0, store.num_timesteps(), 2))
+        assert np.array_equal(np.concatenate(got_t), tiles)
+        assert np.array_equal(np.concatenate(got_b), btiles)
+
+
+# ------------------------------------------------------- engine parity
+def test_async_staging_bitwise_parity_all_patterns(env):
+    """TemporalEngine(staging="async") == sync staging, bit for bit, on
+    sequential / independent / eventually (the acceptance contract)."""
+    tmpl, bg, store, weights, active = env
+    sync = TemporalEngine(bg)
+    async_ = TemporalEngine(bg, staging="async", chunk_instances=1)
+    prog = min_plus_program("sssp", init=source_init(0))
+    for pattern in ("sequential", "independent"):
+        a = sync.run(prog, weights, pattern=pattern)
+        b = async_.run(prog, weights, pattern=pattern)
+        assert np.array_equal(a.values, b.values), pattern
+        assert np.array_equal(a.final, b.final), pattern
+        assert np.array_equal(a.stats["supersteps"], b.stats["supersteps"])
+    pw = pagerank.edge_weights_for_instances(tmpl.src, active,
+                                             tmpl.num_vertices)
+    pp = pagerank_program(tmpl.num_vertices, iters=8)
+    a = sync.run(pp, pw, pattern="eventually", merge="mean")
+    b = async_.run(pp, pw, pattern="eventually", merge="mean")
+    assert np.array_equal(a.values, b.values)
+    assert np.array_equal(a.merged, b.merged)
+
+
+def test_async_parity_many_chunks_in_flight(env):
+    """Many more chunks than the prefetch window: chunk buffers must stay
+    untouched after handoff while the device aliases them (JAX's device
+    put zero-copy-aliases host buffers on CPU and defers host reads even
+    under copy=True — a reused staging ring corrupts in-flight chunks;
+    this is the regression test that caught it)."""
+    tmpl, bg, store, weights, active = env
+    w9 = np.concatenate([weights, weights * 2.0, weights * 3.0])  # I=9
+    sync = TemporalEngine(bg)
+    # depth=2, chunk=1 -> 9 chunks stream through a 2-deep window
+    async_ = TemporalEngine(bg, staging="async", prefetch_depth=2,
+                            chunk_instances=1)
+    prog = min_plus_program("sssp", init=source_init(0))
+    for pattern in ("sequential", "independent"):
+        a = sync.run(prog, w9, pattern=pattern)
+        b = async_.run(prog, w9, pattern=pattern)
+        assert np.array_equal(a.values, b.values), pattern
+        assert np.array_equal(a.final, b.final), pattern
+
+
+def test_gofs_stream_engine_matches_sync(env):
+    """End-to-end disk path: engine consuming load_blocked_stream chunks
+    equals the one-shot load_blocked staging."""
+    tmpl, bg, store, weights, active = env
+    eng = TemporalEngine(bg)
+    prog = min_plus_program("sssp", init=source_init(0))
+    tiles, btiles = store.load_blocked(bg, "latency")
+    a = eng.run(prog, tiles=tiles, btiles=btiles, pattern="sequential")
+    b = eng.run(prog, pattern="sequential",
+                stream=store.load_blocked_stream(bg, "latency"))
+    assert np.array_equal(a.values, b.values)
+    assert np.array_equal(a.final, b.final)
+    assert _prefetch_threads() == []  # pool joined at stream exhaustion
+
+
+# ------------------------------------------------ depth/cancel semantics
+def test_depth1_is_synchronous_no_threads(env):
+    tmpl, bg, store, weights, active = env
+    pf = store.load_blocked_stream(bg, "latency", prefetch_depth=1,
+                                   chunk_instances=1)
+    seen = 0
+    for ch in pf:
+        assert _prefetch_threads() == []  # no pool in degenerate mode
+        seen += 1
+    assert seen == store.num_timesteps()
+
+
+def test_close_mid_stream_no_leaked_threads(env):
+    tmpl, bg, store, weights, active = env
+    pf = store.load_blocked_stream(bg, "latency", prefetch_depth=3,
+                                   chunk_instances=1)
+    it = iter(pf)
+    first = next(it)
+    assert first.start == 0
+    assert _prefetch_threads() != []  # pool live mid-stream
+    pf.close()
+    assert _prefetch_threads() == [] or all(
+        not t.is_alive() for t in _prefetch_threads()
+    )
+    assert list(it) == []  # cancelled stream yields nothing further
+
+
+def test_close_from_another_thread(env):
+    """close() may race the consumer's own submits (watchdog/timeout
+    threads): the pool/pending handoff is locked, so a mid-iteration
+    close from outside must neither crash the consumer nor leak."""
+    tmpl, bg, store, weights, active = env
+    pf = store.load_blocked_stream(bg, "latency", prefetch_depth=2,
+                                   chunk_instances=1)
+    closer_done = threading.Event()
+    seen = []
+    it = iter(pf)
+    seen.append(next(it).start)
+
+    def closer():
+        pf.close()
+        closer_done.set()
+
+    t = threading.Thread(target=closer)
+    t.start()
+    for ch in it:  # either ends early or finishes; must not raise
+        seen.append(ch.start)
+    t.join(timeout=10)
+    assert closer_done.is_set()
+    assert all(not th.is_alive() for th in _prefetch_threads())
+    assert seen == sorted(set(seen))  # in-order, no duplicates
+
+
+def test_prefetcher_reiterates_after_close(env):
+    tmpl, bg, store, weights, active = env
+    pf = store.load_blocked_stream(bg, "latency", prefetch_depth=2,
+                                   chunk_instances=2)
+    it = iter(pf)
+    next(it)
+    pf.close()
+    counts = [c.count for c in pf]  # fresh pass after cancel
+    assert sum(counts) == store.num_timesteps()
+    assert _prefetch_threads() == []
