@@ -13,6 +13,10 @@ docs/BENCHMARKS.md):
                       (slice reads + tile fills overlap device execution)
 * pagerank_runner   — per-instance device_graph + pagerank_run loop vs one
                       engine run scanning the staged (I, ...) tensors
+* comm_backend      — the same engine run under each boundary-exchange
+                      backend (repro.core.comm): dense psum/pmin vs
+                      collective-permute ring vs host-side gather, stacked
+                      in-process + dense-vs-ring on a forced host mesh
 * mesh              — stacked vs temporal-parallel mesh execution on forced
                       host devices (subprocess; tracks scaling regressions)
 """
@@ -178,6 +182,28 @@ def run() -> None:
         "speedup": t_ploop / max(t_peng, 1e-12),
     }
 
+    # ---- comm backends: one workload, three boundary exchanges ------------
+    prog_c = min_plus_program("sssp", init=source_init(0))
+    comm_engines = {
+        b: TemporalEngine(bg, comm=b) for b in ("dense", "ring", "host")
+    }
+
+    def comm_run(b):
+        return comm_engines[b].run(prog_c, w, pattern="sequential")
+
+    ref_vals = comm_run("dense").values
+    stacked = {}
+    for b in ("dense", "ring", "host"):
+        # backends must be invisible: bitwise parity before timing
+        assert np.array_equal(comm_run(b).values, ref_vals), b
+        stacked[f"{b}_s"] = _time(lambda b=b: comm_run(b))
+        emit(f"temporal/comm_{b}_stacked", stacked[f"{b}_s"] * 1e6,
+             f"instances={I}")
+    stacked["host_vs_dense"] = stacked["host_s"] / max(stacked["dense_s"],
+                                                       1e-12)
+    results["comm_backend"] = {"instances": I, "stacked": stacked,
+                               "mesh": _comm_mesh_rows()}
+
     # ---- mesh: stacked vs temporal-parallel shard_map (forced devices) ----
     results["mesh"] = _mesh_rows()
 
@@ -240,6 +266,81 @@ print(json.dumps({
     "mesh_vs_stacked": t_stacked / max(t_mesh, 1e-12),
 }))
 """
+
+
+# Dense all-reduce vs collective-permute ring under shard_map; forced host
+# devices need a fresh process (XLA_FLAGS before jax imports).
+COMM_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np, jax
+from repro.configs.base import GraphConfig
+from repro.core.generator import generate_collection
+from repro.core.partition import partition_graph
+from repro.core.blocked import build_blocked
+from repro.core.engine import TemporalEngine, pagerank_program
+from repro.core.algorithms.pagerank import edge_weights_for_instances
+
+cfg = GraphConfig(name="comm-bench", num_vertices=1024, avg_degree=3.0,
+                  num_instances=8, num_partitions=4, block_size=32, seed=7)
+tsg = generate_collection(cfg)
+tmpl = tsg.template
+assign = partition_graph(tmpl, cfg.num_partitions, seed=cfg.seed)
+bg = build_blocked(tmpl, assign, cfg.block_size)
+I = len(tsg)
+active = np.stack([tsg.edge_values(t, "active") for t in range(I)])
+w = edge_weights_for_instances(tmpl.src, active, tmpl.num_vertices)
+prog = pagerank_program(tmpl.num_vertices, iters=20)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+eng_d = TemporalEngine(bg, mesh=mesh)
+eng_r = TemporalEngine(bg, mesh=mesh, comm="ring")
+
+
+def best(fn, repeats=3):
+    fn()
+    t = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        t = min(t, time.perf_counter() - t0)
+    return t
+
+
+rd = eng_d.run(prog, w, pattern="independent")
+rr = eng_r.run(prog, w, pattern="independent")
+assert np.abs(rd.values - rr.values).max() < 1e-6  # documented reassociation
+t_dense = best(lambda: eng_d.run(prog, w, pattern="independent"))
+t_ring = best(lambda: eng_r.run(prog, w, pattern="independent"))
+print(json.dumps({
+    "instances": I, "iters": 20, "devices": 8,
+    "mesh_shape": {"data": 2, "model": 4},
+    "dense_s": t_dense, "ring_s": t_ring,
+    "ring_vs_dense": t_ring / max(t_dense, 1e-12),
+}))
+"""
+
+
+def _comm_mesh_rows() -> dict:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", COMM_MESH_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    if r.returncode != 0:
+        emit("temporal/comm_mesh_failed", 0.0, r.stderr.strip()[-200:])
+        return {"error": r.stderr.strip()[-2000:]}
+    rows = json.loads(r.stdout.strip().splitlines()[-1])
+    emit("temporal/comm_dense_mesh", rows["dense_s"] * 1e6,
+         f"devices={rows['devices']}")
+    emit("temporal/comm_ring_mesh", rows["ring_s"] * 1e6,
+         f"ring_vs_dense={rows['ring_vs_dense']:.2f}x")
+    return rows
 
 
 def _mesh_rows() -> dict:

@@ -37,15 +37,18 @@ def run_blocked_temporal(
     *,
     mesh=None,
     use_pallas: bool = False,
+    comm="dense",
 ) -> np.ndarray:
     """Components of EVERY instance (independent pattern) through the
-    unified temporal engine.  Returns (I, V) int64 labels."""
+    unified temporal engine.  ``comm`` selects the boundary exchange
+    backend (min-plus: bitwise identical across backends).  Returns
+    (I, V) int64 labels."""
     from repro.core.engine import TemporalEngine, label_init, min_plus_program
 
     bg2 = symmetrized_blocked(bg, src, dst)
     w = np.where(instance_active > 0, 0.0, INF).astype(np.float32)
     w2 = np.concatenate([w, w], axis=1)  # both orientations
-    eng = TemporalEngine(bg2, mesh=mesh, use_pallas=use_pallas)
+    eng = TemporalEngine(bg2, mesh=mesh, use_pallas=use_pallas, comm=comm)
     prog = min_plus_program(
         "components", init=label_init(), max_supersteps=256,
     )
@@ -61,12 +64,13 @@ def run_blocked(
     *,
     mesh=None,
     use_pallas: bool = False,
+    comm="dense",
 ) -> np.ndarray:
     """Min-label propagation over UNDIRECTED active edges of one instance.
     Returns (V,) component labels (min vertex id in component)."""
     labels = run_blocked_temporal(
         bg, src, dst, np.asarray(active)[None], mesh=mesh,
-        use_pallas=use_pallas,
+        use_pallas=use_pallas, comm=comm,
     )
     return labels[0]
 

@@ -152,18 +152,21 @@ def run_blocked(
     bins: np.ndarray = DEFAULT_BINS,
     mesh=None,
     use_pallas: bool = False,
+    comm="dense",
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Eventually-dependent pattern through the unified temporal engine:
     per-instance min-latency fixpoints run temporally concurrent (instances
     over the mesh ``data`` axis when a mesh is given), the hop-count
     fixpoint runs ONCE (topology is instance-invariant), and the Merge
     folds per-instance histograms into the composite on the host.
+    ``comm`` selects the boundary exchange backend (min-plus: bitwise
+    identical across backends).
 
     Returns (composite histogram, per-instance histograms (I, nbins))."""
     from repro.core.engine import TemporalEngine, min_plus_program, source_init
 
     I, E = instance_latency.shape
-    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas)
+    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas, comm=comm)
     prog = min_plus_program("nhop", init=source_init(source_vertex))
     # unweighted hop distance: one instance of all-ones weights
     hops = eng.run(prog, np.ones((1, E), np.float32),

@@ -131,15 +131,18 @@ def run_blocked(
     iters: int = 30,
     mesh=None,
     use_pallas: bool = False,
+    comm="dense",
 ) -> Tuple[np.ndarray, np.ndarray]:
     """PageRank on every instance (independent pattern) through the unified
     temporal engine: batched staging, instances scanned on one device or
-    sharded over the mesh ``data`` axis.  Returns (ranks (I, V),
-    supersteps (I,))."""
+    sharded over the mesh ``data`` axis.  ``comm`` selects the boundary
+    exchange backend (the plus-mul mesh ring reassociates the sum — expect
+    low-order float differences there; stacked/host are bitwise).
+    Returns (ranks (I, V), supersteps (I,))."""
     from repro.core.engine import TemporalEngine, pagerank_program
 
     w = edge_weights_for_instances(src, instance_active, num_vertices)
-    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas)
+    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas, comm=comm)
     res = eng.run(
         pagerank_program(num_vertices, damping=damping, iters=iters),
         w, pattern="independent",

@@ -140,16 +140,19 @@ def run_blocked(
     mesh=None,
     use_pallas: bool = False,
     max_supersteps: int = 64,
+    comm="dense",
 ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
     """Temporal SSSP over all instances (sequential pattern) through the
     unified temporal engine: one batched staging pass, then a ``lax.scan``
-    carrying the distance vector across the instance axis.
+    carrying the distance vector across the instance axis.  ``comm``
+    selects the boundary exchange backend (``repro.core.comm``); min-plus
+    results are bitwise identical across backends.
 
     Returns (final distances (V,), stats per timestep).
     """
     from repro.core.engine import TemporalEngine, min_plus_program, source_init
 
-    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas)
+    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas, comm=comm)
     prog = min_plus_program(
         "sssp", init=source_init(source_vertex),
         subgraph_centric=subgraph_centric, max_supersteps=max_supersteps,

@@ -131,6 +131,7 @@ def run_blocked(
     search_depth: int = 4,
     mesh=None,
     use_pallas: bool = False,
+    comm="dense",
 ) -> List[Tuple[int, int]]:
     """Masked wavefront tracker through the unified temporal engine.
 
@@ -138,13 +139,15 @@ def run_blocked(
     timestep's seed is the argmin sighting, a host-side decision), so each
     timestep is one engine probe: a min-plus hop fixpoint from the last
     sighting over the instance-invariant topology (tiles staged ONCE, the
-    jitted runner cached across timesteps).  Returns [(timestep, vertex)].
+    jitted runner cached across timesteps).  ``comm`` selects the boundary
+    exchange backend (min-plus: bitwise identical across backends).
+    Returns [(timestep, vertex)].
     """
     from repro.core.engine import TemporalEngine, min_plus_program, source_init
 
     I, V = instance_plates.shape
     E = len(bg.le_edge_id) + len(bg.re_edge_id)  # every edge local xor cut
-    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas)
+    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas, comm=comm)
     tiles, btiles = eng.stage(np.ones((1, E), np.float32), INF)
     prog = min_plus_program("tracking_hops")
     trace: List[Tuple[int, int]] = []

@@ -28,8 +28,12 @@ pattern                   execution
 Placement: ``mesh=None`` runs stacked on one device (tests, benches);
 with a mesh the engine lowers to ``shard_map`` — partitions one-per-device
 over ``model_axes``, and for the temporally concurrent patterns instances
-over ``data_axis``.  The boundary exchange stays a single dense
-psum/pmin per superstep either way (see ``repro.core.superstep``).
+over ``data_axis``.  The boundary exchange is ONE combine per superstep
+either way, routed through a pluggable comm backend
+(``comm="dense" | "ring" | "host"`` — see ``repro.core.comm``): the dense
+psum/pmin all-reduce (default), a collective-permute ring for multi-pod
+DCI topologies, or a mesh-free host-side gather for CPU clusters.
+Algorithms never see the difference.
 
 Instance staging is batched: edge-attribute matrices (I, E) land in
 (I, P, T, B, B) tile tensors through ``BlockedGraph.fill_local_batch`` /
@@ -48,7 +52,7 @@ the host engine so the two paths are directly comparable.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -56,10 +60,10 @@ import numpy as np
 
 from repro.compat import shard_map
 from repro.core.blocked import BlockedGraph
+from repro.core.comm import CommBackend, make_comm
 from repro.core.ibsp import BSPStats
 from repro.core.semiring import INF, MIN_PLUS, PLUS_MUL, Semiring
 from repro.core.superstep import (
-    Comm,
     DeviceGraph,
     bsp_fixpoint,
     pagerank_step,
@@ -242,6 +246,23 @@ class TemporalEngine:
       whenever the instance count divides the data-axis size, else
       instances are replicated (still correct, no speedup).
 
+    **Comm backend** (how the boundary exchange moves bytes; see
+    ``repro.core.comm`` and the selection table in
+    ``docs/ARCHITECTURE.md``):
+
+    * ``comm="dense"`` — psum/pmin all-reduce of the boundary buffer
+      (default; single-pod meshes and stacked mode).
+    * ``comm="ring"`` — ``lax.ppermute`` ring over ``model_axes``:
+      P-1 neighbor-to-neighbor hops folding semiring partials (multi-pod
+      DCI regime).  Stacked mode degenerates to the dense fold.
+    * ``comm="host"`` — mesh-free host-side numpy semiring fold
+      (``jax.pure_callback``); requires ``mesh=None``.
+
+    Min-plus programs are bitwise identical across backends; plus-mul
+    (PageRank) reassociates the sum on the mesh ring (low-order float
+    bits).  The backend changes only the collective's lowering — never
+    the program, pattern, staging mode, or result semantics.
+
     **Staging** (how instance tensors reach the device):
 
     * ``staging="sync"`` — stage the whole (I, P, T, B, B) batch, then run.
@@ -284,6 +305,10 @@ class TemporalEngine:
     >>> bool(np.array_equal(eng_async.run(sssp, w, pattern="sequential").final,
     ...                     eng.run(sssp, w, pattern="sequential").final))
     True
+    >>> eng_host = TemporalEngine(bg, comm="host")  # mesh-free host combine
+    >>> bool(np.array_equal(eng_host.run(sssp, w, pattern="sequential").final,
+    ...                     eng.run(sssp, w, pattern="sequential").final))
+    True
     """
 
     def __init__(
@@ -297,6 +322,7 @@ class TemporalEngine:
         staging: str = "sync",
         prefetch_depth: int = 2,
         chunk_instances: Optional[int] = None,
+        comm: Union[str, CommBackend] = "dense",
     ):
         assert staging in ("sync", "async"), staging
         self.bg = bg
@@ -307,7 +333,7 @@ class TemporalEngine:
         self.staging = staging
         self.prefetch_depth = prefetch_depth
         self.chunk_instances = chunk_instances
-        self.comm = Comm(axis_name=None if mesh is None else self.model_axes)
+        self.comm = make_comm(comm, mesh=mesh, model_axes=self.model_axes)
         out_mask = np.arange(bg.o_max)[None, :] < bg.n_out[:, None]
         self._struct = (
             jnp.asarray(bg.tiles_rc[:, :, 0]), jnp.asarray(bg.tiles_rc[:, :, 1]),
@@ -343,12 +369,12 @@ class TemporalEngine:
         )
 
     def _run_instance(self, program: SemiringProgram, x, tiles_l, btiles_l,
-                      struct):
+                      struct, comm: CommBackend):
         """One instance's BSP on the local shard.  Returns (x, (ss, lsw))."""
         dg = self._device_graph(tiles_l, btiles_l, struct)
         if program.kind == "fixpoint":
             x, st = bsp_fixpoint(
-                x, dg, program.semiring, comm=self.comm,
+                x, dg, program.semiring, comm=comm,
                 subgraph_centric=program.subgraph_centric,
                 max_supersteps=program.max_supersteps,
                 max_local_sweeps=program.max_local_sweeps,
@@ -357,7 +383,7 @@ class TemporalEngine:
             return x, (st["supersteps"], st["local_sweeps"])
 
         def body(r, _):
-            return program.step(r, dg, self.comm, self.use_pallas), None
+            return program.step(r, dg, comm, self.use_pallas), None
 
         x, _ = jax.lax.scan(body, x, None, length=program.iters)
         return x, (jnp.asarray(program.iters, jnp.int32),
@@ -365,15 +391,17 @@ class TemporalEngine:
 
     # ------------------------------------------------------------- runners
     def _scan_instances(self, program: SemiringProgram, pattern: str,
-                        x0, tiles, btiles, struct):
+                        x0, tiles, btiles, struct,
+                        comm: Optional[CommBackend] = None):
         """Scan the instance axis on the local shard.  Returns
         (xs (I, P_l, Vp), final (P_l, Vp), ss (I,), lsw (I,))."""
+        comm = self.comm if comm is None else comm
 
         def step(carry, tb):
             tiles_l, btiles_l = tb
             seed = carry if pattern == "sequential" else x0
             x, (ss, lsw) = self._run_instance(
-                program, seed, tiles_l, btiles_l, struct
+                program, seed, tiles_l, btiles_l, struct, comm
             )
             return x, (x, ss, lsw)
 
@@ -418,10 +446,18 @@ class TemporalEngine:
         temporal = pattern in ("independent", "eventually")
         shard_instances = (temporal and n_instances % self._data_size() == 0
                            and n_instances >= self._data_size())
+        # data-sharded instances run data-dependent superstep loops
+        # concurrently; backends with globally scheduled collectives (the
+        # ppermute ring) must equalize trip counts over the data axis or
+        # the permutes deadlock (see CommBackend.bind_sync)
+        comm = self.comm
+        if shard_instances:
+            daxes = (daxis,) if isinstance(daxis, str) else tuple(daxis)
+            comm = comm.bind_sync(daxes)
 
         def local_fn(tiles, btiles, x0, *struct):
             xs, final, ss, lsw = self._scan_instances(
-                program, pattern, x0, tiles, btiles, struct
+                program, pattern, x0, tiles, btiles, struct, comm
             )
             if pattern == "eventually" and merge == "mean":
                 # eventually-dependent Merge across ALL instances (data axis)

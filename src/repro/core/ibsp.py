@@ -28,6 +28,14 @@ Messages in a superstep are delivered in *bulk* before the next superstep
 timestep terminates when every subgraph voted to halt and no messages are
 in flight.  The engine tracks superstep counts and message volumes — the
 quantities the paper's evaluation reasons about.
+
+Comm topology: this host engine's exchange IS the host-gather shape — all
+per-subgraph messages meet in one process's inboxes between supersteps,
+exactly GoFFish's §V commodity-cluster deployment.  The blocked engine
+exposes the same choice as the ``HostGather`` backend in
+``repro.core.comm`` (beside the device-collective ``DenseAllReduce`` /
+``RingExchange`` backends), so a ``SemiringProgram`` can run with
+``run_ibsp``-style host combining without leaving the blocked/TPU path.
 """
 from __future__ import annotations
 

@@ -14,17 +14,20 @@ The engine realizes the paper's superstep semantics as linear algebra
 Both a stacked single-process path (partitions on a leading axis, used by
 CPU tests/benchmarks) and an SPMD path (partitions sharded over a mesh axis
 inside ``shard_map``, used by the dry-run and production launch) share the
-kernel-level step functions; only the ``Comm`` reduction differs.
+kernel-level step functions; only the :class:`repro.core.comm.CommBackend`
+reduction differs.
 
 The boundary exchange is a dense (num_boundary,) buffer combined with the
-semiring's add (pmin / psum over the mesh axis) — O(cut vertices) collective
-bytes per superstep, the blocked analogue of Gopher's message-count win.
+semiring's add — O(cut vertices) collective bytes per superstep, the
+blocked analogue of Gopher's message-count win.  HOW those bytes move is
+pluggable (``repro.core.comm``): a psum/pmin all-reduce (default), a
+``ppermute`` ring for DCI-bound multi-pod topologies, or a host-side
+gather for mesh-free CPU clusters — same drivers, same algorithms.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +35,14 @@ import numpy as np
 
 from repro.compat import shard_map
 from repro.core.blocked import BlockedGraph
+from repro.core.comm import (  # noqa: F401  (re-exported: historical home)
+    Comm,
+    CommBackend,
+    DenseAllReduce,
+    HostGather,
+    RingExchange,
+    make_comm,
+)
 from repro.core.semiring import MIN_PLUS, PLUS_MUL, Semiring
 from repro.kernels.semiring_spmm.ops import spmv_blocked
 
@@ -86,32 +97,6 @@ def device_graph(
     )
 
 
-@dataclass(frozen=True)
-class Comm:
-    """Cross-partition combination.  ``axis_name=None`` = stacked mode (all
-    partitions live on one device with a leading axis); otherwise SPMD mode
-    (leading axis is the per-device shard inside shard_map)."""
-
-    axis_name: Optional[str] = None
-
-    def combine_boundary(self, buf: jax.Array, sr: Semiring) -> jax.Array:
-        """buf: (P_local, NB) -> (NB,) combined over ALL partitions."""
-        out = buf[0] if buf.shape[0] == 1 else functools.reduce(
-            sr.add, [buf[i] for i in range(buf.shape[0])]
-        )
-        if self.axis_name is not None:
-            if sr.name == "plus_mul":
-                out = jax.lax.psum(out, self.axis_name)
-            else:
-                out = jax.lax.pmin(out, self.axis_name)
-        return out
-
-    def any_changed(self, flag: jax.Array) -> jax.Array:
-        if self.axis_name is not None:
-            flag = jax.lax.pmax(flag.astype(jnp.int32), self.axis_name) > 0
-        return flag
-
-
 # ---------------------------------------------------------------------------
 # Step primitives
 # ---------------------------------------------------------------------------
@@ -161,7 +146,8 @@ def _local_converge(
     return x, sweeps
 
 
-def _publish(x: jax.Array, dg: DeviceGraph, sr: Semiring, comm: Comm) -> jax.Array:
+def _publish(x: jax.Array, dg: DeviceGraph, sr: Semiring,
+             comm: CommBackend) -> jax.Array:
     """Scatter owned boundary-vertex values into the global boundary buffer
     and combine across partitions.  Returns (NB,)."""
 
@@ -192,10 +178,13 @@ def _consume(
 
 
 def make_spmd_superstep(mesh, sr: Semiring = MIN_PLUS, *,
-                        use_pallas: bool = False):
+                        use_pallas: bool = False,
+                        comm="dense"):
     """One BSP superstep as an explicit shard_map program: partitions are
-    sharded one-per-device over ALL mesh axes; the boundary exchange is a
-    single pmin/psum of the (num_boundary,) buffer.
+    sharded one-per-device over ALL mesh axes; the boundary exchange is one
+    combine of the (num_boundary,) buffer through the selected
+    ``repro.core.comm`` backend (``"dense"`` pmin/psum all-reduce or
+    ``"ring"`` collective-permute ring).
 
     This is the production lowering — letting XLA auto-shard the stacked
     (P, NB) publish buffer instead materializes an all-gather of P x NB
@@ -205,7 +194,7 @@ def make_spmd_superstep(mesh, sr: Semiring = MIN_PLUS, *,
     from jax.sharding import PartitionSpec as P
 
     axes = tuple(mesh.axis_names)
-    comm = Comm(axis_name=axes)
+    comm = make_comm(comm, mesh=mesh, model_axes=axes)
 
     def superstep_with_nb(nb: int):
         def run(x, rows, cols, tiles, brows, bcols, btiles,
@@ -251,7 +240,7 @@ def bsp_fixpoint(
     dg: DeviceGraph,
     sr: Semiring = MIN_PLUS,
     *,
-    comm: Comm = Comm(),
+    comm: CommBackend = DenseAllReduce(),
     subgraph_centric: bool = True,
     max_supersteps: int = 64,
     max_local_sweeps: int = 1024,
@@ -293,7 +282,7 @@ def bsp_fixpoint(
 def pagerank_step(
     rank: jax.Array,  # (P, Vp)
     dg: DeviceGraph,  # tiles already hold 1/out_degree weights
-    comm: Comm,
+    comm: CommBackend,
     *,
     damping: float = 0.85,
     num_vertices: int,
@@ -312,7 +301,7 @@ def pagerank_step(
 
 def pagerank_run(
     dg: DeviceGraph,
-    comm: Comm = Comm(),
+    comm: CommBackend = DenseAllReduce(),
     *,
     damping: float = 0.85,
     num_vertices: int,
@@ -335,9 +324,7 @@ def pagerank_run(
             r, dg, comm, damping=damping, num_vertices=num_vertices,
             use_pallas=use_pallas,
         )
-        delta = jnp.sum(jnp.abs(rn - r))
-        if comm.axis_name is not None:
-            delta = jax.lax.psum(delta, comm.axis_name)
+        delta = comm.sum_scalar(jnp.sum(jnp.abs(rn - r)))
         return rn, delta, it + 1
 
     r, _, it = jax.lax.while_loop(

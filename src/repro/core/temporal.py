@@ -9,7 +9,9 @@ paper's parallelism at once:
     ranks  (I, P, Vp)        same
 
 Each device holds I/|data| instances x P/|model| partitions; the spatial
-boundary exchange is a psum over ``model`` ONLY (instances never talk), and
+boundary exchange runs over ``model`` ONLY (instances never talk), through
+whichever ``repro.core.comm`` backend the deployment picks (dense psum
+all-reduce by default, a collective-permute ring for multi-pod DCI), and
 the eventually-dependent Merge is a final reduction over ``data``.
 
 This module provides the shape-polymorphic ``shard_map`` builder
@@ -31,7 +33,8 @@ import numpy as np
 
 from repro.compat import shard_map
 from repro.core.blocked import BlockedGraph
-from repro.core.superstep import Comm, DeviceGraph, pagerank_step
+from repro.core.comm import make_comm
+from repro.core.superstep import DeviceGraph, pagerank_step
 
 
 def make_temporal_runner(
@@ -46,7 +49,10 @@ def make_temporal_runner(
 
     ``run_one(tiles_l (P_l, T, B, B), btiles_l, struct)`` computes one
     instance's final vertex state (P_l, Vp) on the local partition shard
-    (collectives over ``model_axes`` only).  The returned jittable fn takes
+    (collectives over ``model_axes`` only — typically a ``repro.core.comm``
+    backend bound to those axes, so the same runner lowers to a dense
+    all-reduce or a collective-permute ring depending on the closure's
+    ``comm`` choice).  The returned jittable fn takes
     the global (I, P, ...) tensors, shards instances over ``data_axis`` and
     partitions over ``model_axes``, vmaps ``run_one`` over the local
     instances, and (when ``merge``) folds the across-instance mean as one
@@ -108,6 +114,7 @@ def make_temporal_pagerank(
     data_axis: str = "data",
     model_axes: Tuple[str, ...] = ("model",),
     merge: bool = True,
+    comm="dense",
 ):
     """Build the jittable temporal-parallel PageRank (the paper's
     independent-pattern workload) on top of ``make_temporal_runner``.
@@ -116,9 +123,10 @@ def make_temporal_pagerank(
     struct arrays (P, ...).  Returns ranks (I, P, Vp) and, when ``merge``,
     the across-instance mean rank (P, Vp).  Fixed iteration count keeps
     every instance's loop in lockstep, so the model-axis collectives stay
-    congruent under the data-axis sharding.
+    congruent under the data-axis sharding.  ``comm`` picks the boundary
+    exchange backend (``"dense"`` or ``"ring"``; see ``repro.core.comm``).
     """
-    comm = Comm(axis_name=model_axes)
+    comm = make_comm(comm, mesh=mesh, model_axes=model_axes)
 
     def run_one(tiles, btiles, struct):
         dg = DeviceGraph(
@@ -156,16 +164,18 @@ def pagerank_temporal(
     iters: int = 30,
     data_axis: str = "data",
     model_axes: Tuple[str, ...] = ("model",),
+    comm="dense",
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Host wrapper: batched-stage per-instance tiles, run all instances
-    concurrently on the mesh through the TemporalEngine.
-    Returns (ranks (I, V), merged mean rank (V,))."""
+    concurrently on the mesh through the TemporalEngine.  ``comm`` selects
+    the boundary exchange backend.  Returns (ranks (I, V), merged mean
+    rank (V,))."""
     from repro.core.algorithms.pagerank import edge_weights_for_instances
     from repro.core.engine import TemporalEngine, pagerank_program
 
     w = edge_weights_for_instances(src, instance_active, num_vertices)
     eng = TemporalEngine(
-        bg, mesh=mesh, data_axis=data_axis, model_axes=model_axes,
+        bg, mesh=mesh, data_axis=data_axis, model_axes=model_axes, comm=comm,
     )
     res = eng.run(
         pagerank_program(num_vertices, damping=damping, iters=iters),

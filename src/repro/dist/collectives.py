@@ -1,6 +1,15 @@
 """HLO collective accounting: parse optimized HLO text and total the output
 bytes moved per collective kind.  Used by the dry-run to report per-cell
-collective volume (the quantity the mesh/DCI budget reasons about)."""
+collective volume (the quantity the mesh/DCI budget reasons about).
+
+Also home to the ANALYTIC cost model for the boundary exchange
+(:func:`boundary_exchange_bytes`): the same per-superstep quantity, derived
+from (num_boundary, devices, backend) instead of parsed from HLO, so the
+comm-backend choice (``repro.core.comm``) can be costed before anything is
+lowered.  The measured and analytic views are cross-checked in
+``tests/test_comm_backends.py`` — the dense backend must lower to
+``all-reduce`` ops and the ring backend to ``collective-permute`` ops.
+"""
 from __future__ import annotations
 
 import re
@@ -52,3 +61,51 @@ def collective_bytes_by_kind(hlo_text: str) -> Dict[str, float]:
         if b:
             out[m.group("kind")] = out.get(m.group("kind"), 0.0) + float(b)
     return out
+
+
+def boundary_exchange_bytes(
+    num_boundary: int,
+    n_devices: int,
+    backend: str = "dense",
+    *,
+    dtype_bytes: int = 4,
+) -> Dict[str, float]:
+    """Analytic per-superstep comm cost of one boundary exchange.
+
+    Returns ``{"kind", "hops", "bytes_per_device", "bytes_total"}`` for a
+    (num_boundary,)-float buffer combined across ``n_devices`` partitions:
+
+    * ``dense`` — XLA's ring all-reduce moves ``2 (n-1)/n × NB`` bytes per
+      device (reduce-scatter + all-gather), in ``2 (n-1)`` latency hops.
+    * ``ring``  — the ``ppermute`` circulate-and-fold sends the full NB
+      buffer on ``n-1`` hops per device: MORE total bytes than the dense
+      all-reduce, but every transfer is strictly neighbor-to-neighbor, so
+      on a bandwidth-asymmetric topology (multi-pod DCI) each slow link
+      carries exactly one NB buffer per hop instead of the all-reduce
+      tree's cross-section traffic — latency-bound small cuts prefer
+      ``dense``, DCI-bandwidth-bound large cuts prefer ``ring``.
+    * ``host``  — no device collective: every partition ships its NB
+      buffer to the host, which returns one combined buffer (``n × NB``
+      up, ``n × NB`` down across PCIe/Ethernet, 2 logical hops).
+
+    >>> boundary_exchange_bytes(1000, 4, "dense")["bytes_per_device"]
+    6000.0
+    >>> boundary_exchange_bytes(1000, 4, "ring")["hops"]
+    3
+    >>> boundary_exchange_bytes(1000, 4, "host")["kind"]
+    'host-gather'
+    """
+    if backend not in ("dense", "ring", "host"):
+        raise ValueError(f"unknown comm backend {backend!r}")
+    nb = float(num_boundary * dtype_bytes)
+    n = int(n_devices)
+    if backend == "dense":
+        per_dev = 2.0 * (n - 1) / max(n, 1) * nb
+        return {"kind": "all-reduce", "hops": 2 * (n - 1),
+                "bytes_per_device": per_dev, "bytes_total": per_dev * n}
+    if backend == "ring":
+        per_dev = (n - 1) * nb
+        return {"kind": "collective-permute", "hops": n - 1,
+                "bytes_per_device": per_dev, "bytes_total": per_dev * n}
+    return {"kind": "host-gather", "hops": 2,
+            "bytes_per_device": 2.0 * nb, "bytes_total": 2.0 * nb * n}

@@ -34,3 +34,30 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
 
 def mesh_dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def recommended_comm(
+    mesh: Optional[Mesh], model_axes: Tuple[str, ...] = ("model",)
+) -> str:
+    """Default boundary-exchange backend for a placement
+    (``repro.core.comm``; full selection table in docs/ARCHITECTURE.md).
+
+    What matters is whether the EXCHANGE axes (``model_axes`` — the axes
+    the boundary combine actually runs over) cross DCI, not whether the
+    mesh is multi-pod: on the standard production mesh ``pod`` composes
+    with ``data`` and the model axis stays intra-pod on ICI, so the dense
+    all-reduce remains the right default there.
+
+    * no mesh                      -> ``"host"``  (mesh-free CPU cluster:
+      combine per-partition buffers on the host, no shard_map at all)
+    * ``pod`` among the exchange axes -> ``"ring"`` (the combine crosses
+      DCI; neighbor-to-neighbor hops keep each slow link at one
+      buffer/hop)
+    * otherwise                    -> ``"dense"`` (ICI all-reduce is
+      latency-optimal for the O(cut) boundary buffer)
+    """
+    if mesh is None:
+        return "host"
+    if "pod" in model_axes:
+        return "ring"
+    return "dense"

@@ -6,7 +6,9 @@ deployment (the paper's end-to-end path).
 
 Apps: sssp (sequential), pagerank (independent), nhop (eventually),
 tracking (sequential, Alg. 1), cc (independent).  ``--engine blocked`` runs
-the TPU-adapted blocked engine instead of the faithful host engine.
+the TPU-adapted blocked engine instead of the faithful host engine;
+``--comm dense|ring|host`` picks its boundary-exchange backend
+(repro.core.comm — identical results, different byte movement).
 """
 from __future__ import annotations
 
@@ -48,6 +50,9 @@ def main() -> None:
     ap.add_argument("--plate", type=int, default=3)
     ap.add_argument("--cache-slots", type=int, default=14)
     ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--comm", default="dense",
+                    choices=["dense", "ring", "host"],
+                    help="blocked-engine boundary exchange (repro.core.comm)")
     args = ap.parse_args()
 
     cfg, store = ensure_deployment(args.size, args.deploy, args.cache_slots)
@@ -84,25 +89,30 @@ def main() -> None:
         I = len(tsg)
         if args.app == "sssp":
             w = np.stack([tsg.edge_values(t, "latency") for t in range(I)])
-            dist, stats = sssp.run_blocked(bg, w, args.source)
+            dist, stats = sssp.run_blocked(bg, w, args.source,
+                                           comm=args.comm)
             print(f"[gopher] SSSP reached {int(np.isfinite(dist).sum())}; "
                   f"supersteps/timestep={stats['supersteps'].tolist()}")
         elif args.app == "pagerank":
             a = np.stack([tsg.edge_values(t, "active") for t in range(I)])
             ranks, iters = pagerank.run_blocked(
-                bg, tmpl.src, a, num_vertices=tmpl.num_vertices, iters=10)
+                bg, tmpl.src, a, num_vertices=tmpl.num_vertices, iters=10,
+                comm=args.comm)
             print(f"[gopher] PageRank top vertex (t=0): {int(ranks[0].argmax())}")
         elif args.app == "nhop":
             w = np.stack([tsg.edge_values(t, "latency") for t in range(I)])
-            comp, per = nhop.run_blocked(bg, w, args.source, n_hops=6)
+            comp, per = nhop.run_blocked(bg, w, args.source, n_hops=6,
+                                         comm=args.comm)
             print(f"[gopher] N-hop composite: {comp}")
         elif args.app == "tracking":
             plates = np.stack([tsg.vertex_values(t, "plate") for t in range(I)])
-            trace = tracking.run_blocked(bg, plates, args.plate, args.source)
+            trace = tracking.run_blocked(bg, plates, args.plate,
+                                         args.source, comm=args.comm)
             print(f"[gopher] track: {trace}")
         else:
             a = tsg.edge_values(0, "active")
-            labels = components.run_blocked(bg, tmpl.src, tmpl.dst, a)
+            labels = components.run_blocked(bg, tmpl.src, tmpl.dst, a,
+                                            comm=args.comm)
             print(f"[gopher] components: {len(np.unique(labels))}")
 
     print(f"[gopher] {args.app}/{args.engine} done in {time.time()-t0:.1f}s; "

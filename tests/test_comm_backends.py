@@ -1,0 +1,326 @@
+"""Comm-backend parity: the boundary exchange is pluggable (paper §IV-B
+merge, §V deployment) and must be INVISIBLE to every algorithm — dense
+all-reduce, collective-permute ring, and host-gather produce the same
+results for all three iBSP patterns, fixpoint and iterate programs, sync
+and async staging, stacked and mesh placement.
+
+Exactness contract (see ``repro.core.comm``): min-plus combines are
+bitwise identical across backends everywhere; plus-mul (PageRank) is
+bitwise in stacked/host modes and reassociated (float-tolerance) on the
+mesh ring.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.algorithms import components, nhop, pagerank, sssp, tracking
+from repro.core.blocked import build_blocked
+from repro.core.comm import (
+    COMM_BACKENDS,
+    DenseAllReduce,
+    HostGather,
+    RingExchange,
+    make_comm,
+)
+from repro.core.engine import (
+    TemporalEngine,
+    min_plus_program,
+    pagerank_program,
+    source_init,
+)
+from repro.dist.collectives import boundary_exchange_bytes
+
+from tests.conftest import TINY
+
+
+@pytest.fixture(scope="module")
+def env(tiny_collection, tiny_partitioned):
+    tmpl, assign, sg_ids, subs = tiny_partitioned
+    bg = build_blocked(tmpl, assign, TINY.block_size)
+    I = len(tiny_collection)
+    weights = np.stack([tiny_collection.edge_values(t, "latency")
+                        for t in range(I)])
+    active = np.stack([tiny_collection.edge_values(t, "active")
+                       for t in range(I)])
+    plates = np.stack([tiny_collection.vertex_values(t, "plate")
+                       for t in range(I)]).astype(np.int64)
+    return tmpl, bg, weights, active, plates
+
+
+# ---------------------------------------------------------------------------
+# Backend construction / binding
+# ---------------------------------------------------------------------------
+
+def test_make_comm_binds_placement():
+    assert make_comm("dense").name == "dense"
+    assert make_comm("dense").axis_name is None
+    ring = make_comm("ring")
+    assert isinstance(ring, RingExchange) and ring.axis_name is None
+    assert isinstance(make_comm("host"), HostGather)
+    # correctly-bound instances pass through untouched
+    pre = RingExchange()
+    assert make_comm(pre) is pre
+    with pytest.raises(ValueError, match="unknown comm backend"):
+        make_comm("nope")
+
+
+def test_host_gather_rejects_mesh():
+    jax = pytest.importorskip("jax")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="mesh-free"):
+        make_comm("host", mesh=mesh)
+    # dense/ring bind the model axis and (ring) its static size
+    assert make_comm("dense", mesh=mesh).axis_name == ("model",)
+    r = make_comm("ring", mesh=mesh)
+    assert r.axis_sizes == (1,)
+
+
+def test_make_comm_validates_prebuilt_instances():
+    """A mis-bound instance must be rejected, not silently accepted — an
+    unbound backend inside shard_map would fold only the local shard."""
+    jax = pytest.importorskip("jax")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="unbound"):
+        make_comm(DenseAllReduce(), mesh=mesh)  # axis_name=None on a mesh
+    with pytest.raises(ValueError, match="mesh-free"):
+        make_comm(HostGather(), mesh=mesh)
+    with pytest.raises(ValueError, match="no mesh was given"):
+        make_comm(DenseAllReduce(axis_name=("model",)))  # bound, no mesh
+    with pytest.raises(ValueError, match="only has axes"):
+        make_comm(DenseAllReduce(axis_name=("nope",)), mesh=mesh)
+    with pytest.raises(ValueError, match="do not match the mesh shape"):
+        make_comm(RingExchange(axis_name=("model",), axis_sizes=(4,)),
+                  mesh=mesh)
+    ok = RingExchange(axis_name=("model",), axis_sizes=(1,))
+    assert make_comm(ok, mesh=mesh) is ok
+
+
+def test_recommended_comm_follows_exchange_axes():
+    """Ring is recommended only when the EXCHANGE axes cross DCI: the
+    standard production mesh keeps model intra-pod, so dense stays the
+    default even multi-pod."""
+    jax = pytest.importorskip("jax")
+    from repro.launch.mesh import recommended_comm
+
+    assert recommended_comm(None) == "host"
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert recommended_comm(mesh) == "dense"
+    assert recommended_comm(mesh, model_axes=("pod", "model")) == "ring"
+
+
+def test_bind_sync_is_ring_only():
+    r = RingExchange(axis_name=("model",), axis_sizes=(4,))
+    assert r.bind_sync(("data",)).sync_axes == ("data",)
+    assert r.sync_axes == ()  # frozen: binding returns a new instance
+    d = DenseAllReduce(axis_name=("model",))
+    assert d.bind_sync(("data",)) is d  # group-scoped: nothing to sync
+    h = HostGather()
+    assert h.bind_sync(("data",)) is h  # mesh-free: nothing to sync
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: patterns × programs × backends (stacked)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", COMM_BACKENDS)
+def test_fixpoint_parity_all_patterns(env, backend):
+    """Min-plus fixpoint: bitwise-identical values, final, merged, and
+    stats under every backend, for all three iBSP patterns."""
+    tmpl, bg, weights, active, plates = env
+    prog = min_plus_program("sssp", init=source_init(0))
+    ref_eng = TemporalEngine(bg)
+    eng = TemporalEngine(bg, comm=backend)
+    for pattern, merge in (("sequential", None), ("independent", None),
+                           ("eventually", "mean")):
+        ref = ref_eng.run(prog, weights, pattern=pattern, merge=merge)
+        res = eng.run(prog, weights, pattern=pattern, merge=merge)
+        assert np.array_equal(res.values, ref.values), (backend, pattern)
+        assert np.array_equal(res.final, ref.final), (backend, pattern)
+        if merge == "mean":
+            assert np.array_equal(res.merged, ref.merged), backend
+        for k in ref.stats:
+            assert np.array_equal(res.stats[k], ref.stats[k]), (backend, k)
+
+
+@pytest.mark.parametrize("backend", COMM_BACKENDS)
+def test_iterate_parity(env, backend):
+    """Plus-mul iterate (PageRank): stacked backends share the same fold
+    association, so results match to float tolerance (bitwise in
+    practice; only the MESH ring reassociates — see the slow mesh test)."""
+    tmpl, bg, weights, active, plates = env
+    pw = pagerank.edge_weights_for_instances(tmpl.src, active,
+                                             tmpl.num_vertices)
+    prog = pagerank_program(tmpl.num_vertices, iters=8)
+    ref = TemporalEngine(bg).run(prog, pw, pattern="eventually",
+                                 merge="mean")
+    res = TemporalEngine(bg, comm=backend).run(prog, pw,
+                                               pattern="eventually",
+                                               merge="mean")
+    np.testing.assert_allclose(res.values, ref.values, rtol=0, atol=1e-6)
+    np.testing.assert_allclose(res.merged, ref.merged, rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ("ring", "host"))
+def test_all_five_algorithms_parity(env, backend):
+    """Every algorithm entry point accepts comm= and returns results
+    identical to the dense default (bitwise for the min-plus four,
+    1e-6 for plus-mul PageRank)."""
+    tmpl, bg, weights, active, plates = env
+    V = tmpl.num_vertices
+
+    d_ref, _ = sssp.run_blocked(bg, weights, 0)
+    d_alt, _ = sssp.run_blocked(bg, weights, 0, comm=backend)
+    assert np.array_equal(d_ref, d_alt)
+
+    l_ref = components.run_blocked_temporal(bg, tmpl.src, tmpl.dst, active)
+    l_alt = components.run_blocked_temporal(bg, tmpl.src, tmpl.dst, active,
+                                            comm=backend)
+    assert np.array_equal(l_ref, l_alt)
+
+    c_ref, p_ref = nhop.run_blocked(bg, weights, 0, n_hops=4)
+    c_alt, p_alt = nhop.run_blocked(bg, weights, 0, n_hops=4, comm=backend)
+    assert np.array_equal(c_ref, c_alt) and np.array_equal(p_ref, p_alt)
+
+    t_ref = tracking.run_blocked(bg, plates, plate=2, initial_vertex=0)
+    t_alt = tracking.run_blocked(bg, plates, plate=2, initial_vertex=0,
+                                 comm=backend)
+    assert t_ref == t_alt
+
+    r_ref, _ = pagerank.run_blocked(bg, tmpl.src, active, num_vertices=V,
+                                    iters=8)
+    r_alt, _ = pagerank.run_blocked(bg, tmpl.src, active, num_vertices=V,
+                                    iters=8, comm=backend)
+    np.testing.assert_allclose(r_alt, r_ref, rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", COMM_BACKENDS)
+def test_async_staging_parity(env, backend):
+    """The double-buffered staging path composes with every backend:
+    chunked dispatch + sequential carry + eventually Merge stay bitwise
+    identical to the dense sync run."""
+    tmpl, bg, weights, active, plates = env
+    prog = min_plus_program("sssp", init=source_init(0))
+    ref = TemporalEngine(bg).run(prog, weights, pattern="sequential")
+    eng = TemporalEngine(bg, comm=backend, staging="async",
+                         chunk_instances=2)
+    res = eng.run(prog, weights, pattern="sequential")
+    assert np.array_equal(res.values, ref.values), backend
+    ref_e = TemporalEngine(bg).run(prog, weights, pattern="eventually",
+                                   merge="mean")
+    res_e = eng.run(prog, weights, pattern="eventually", merge="mean")
+    assert np.array_equal(res_e.merged, ref_e.merged), backend
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model (repro.dist.collectives)
+# ---------------------------------------------------------------------------
+
+def test_boundary_exchange_cost_model():
+    nb, n = 1000, 8
+    dense = boundary_exchange_bytes(nb, n, "dense")
+    ring = boundary_exchange_bytes(nb, n, "ring")
+    host = boundary_exchange_bytes(nb, n, "host")
+    assert dense["kind"] == "all-reduce"
+    assert ring["kind"] == "collective-permute"
+    assert host["kind"] == "host-gather"
+    # ring: full buffer on each of n-1 hops; dense: 2(n-1)/n per device
+    assert ring["hops"] == n - 1
+    assert ring["bytes_per_device"] == (n - 1) * nb * 4
+    assert dense["bytes_per_device"] == pytest.approx(2 * (n - 1) / n * nb * 4)
+    # the ring trades MORE bytes for neighbor-only transfers
+    assert ring["bytes_per_device"] > dense["bytes_per_device"]
+    with pytest.raises(ValueError, match="unknown comm backend"):
+        boundary_exchange_bytes(nb, n, "nope")
+
+
+# ---------------------------------------------------------------------------
+# Mesh: ring vs dense under shard_map (forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs.base import GraphConfig
+from repro.core.generator import generate_collection
+from repro.core.partition import partition_graph
+from repro.core.blocked import build_blocked
+from repro.core.engine import (TemporalEngine, min_plus_program,
+                               pagerank_program, source_init)
+from repro.core.algorithms import pagerank
+from repro.dist.collectives import collective_bytes_by_kind
+
+cfg = GraphConfig(name="t", num_vertices=400, avg_degree=3.0,
+                  num_instances=4, num_partitions=4, block_size=32, seed=9)
+tsg = generate_collection(cfg)
+tmpl = tsg.template
+assign = partition_graph(tmpl, 4, seed=9)
+bg = build_blocked(tmpl, assign, 32)
+w = np.stack([tsg.edge_values(t, "latency") for t in range(4)])
+active = np.stack([tsg.edge_values(t, "active") for t in range(4)])
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+prog = min_plus_program("sssp", init=source_init(0))
+eng_d = TemporalEngine(bg, mesh=mesh)
+eng_r = TemporalEngine(bg, mesh=mesh, comm="ring")
+
+# min-plus: bitwise parity on every pattern (including data-sharded
+# instances, where the ring's vote syncs trip counts over the data axis)
+for pattern in ("sequential", "independent"):
+    rd = eng_d.run(prog, w, pattern=pattern)
+    rr = eng_r.run(prog, w, pattern=pattern)
+    assert np.array_equal(rd.values, rr.values), pattern
+
+# single-instance probe: replicated-instance fallback, ring still exact
+r1d = eng_d.run(prog, w[:1], pattern="independent")
+r1r = eng_r.run(prog, w[:1], pattern="independent")
+assert np.array_equal(r1d.values, r1r.values)
+
+# async staging under the mesh with ring comm
+ra = eng_r.run(prog, w, pattern="independent", staging="async")
+rs = eng_r.run(prog, w, pattern="independent")
+assert np.array_equal(ra.values, rs.values)
+
+# plus-mul: the mesh ring reassociates the boundary sum (documented)
+pw = pagerank.edge_weights_for_instances(tmpl.src, active, tmpl.num_vertices)
+pp = pagerank_program(tmpl.num_vertices, iters=10)
+pd = eng_d.run(pp, pw, pattern="eventually", merge="mean")
+pr = eng_r.run(pp, pw, pattern="eventually", merge="mean")
+assert np.abs(pd.values - pr.values).max() < 1e-6
+assert np.abs(pd.merged - pr.merged).max() < 1e-6
+
+# HLO accounting: dense lowers the exchange to all-reduce, ring to
+# collective-permute (the only all-reduce left is the 4-byte halt vote)
+def kinds(eng):
+    tiles, btiles = eng.stage(w, prog.zero_fill)
+    run_fn = eng._runner(prog, "independent", None, 4)
+    with eng.mesh:
+        hlo = run_fn.lower(tiles, btiles,
+                           jnp.asarray(prog.init(bg), jnp.float32),
+                           *eng._struct).compile().as_text()
+    return collective_bytes_by_kind(hlo)
+
+kd, kr = kinds(eng_d), kinds(eng_r)
+assert "all-reduce" in kd and "collective-permute" not in kd, kd
+assert "collective-permute" in kr, kr
+assert kr.get("all-reduce", 0) <= 8, kr  # just the halt-vote flag
+print("COMM MESH OK")
+"""
+
+
+@pytest.mark.slow
+def test_mesh_ring_matches_dense():
+    """Ring and dense agree under shard_map temporal parallelism, and the
+    backends lower to the collective kinds the cost model names."""
+    env_ = dict(os.environ)
+    env_.pop("XLA_FLAGS", None)
+    env_["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", MESH_SCRIPT], env=env_, capture_output=True,
+        text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "COMM MESH OK" in r.stdout

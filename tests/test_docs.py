@@ -57,12 +57,14 @@ def test_named_module_paths_exist(md):
 
 @pytest.mark.parametrize(
     "modname",
-    ["repro.core.engine", "repro.gofs.prefetch"],
+    ["repro.core.engine", "repro.core.comm", "repro.gofs.prefetch",
+     "repro.dist.collectives"],
 )
 def test_docstring_examples_run(modname):
     """The per-pattern snippets documented on TemporalEngine /
-    SemiringProgram / SlicePrefetcher are executable contracts
-    (equivalent to `pytest --doctest-modules` on these modules)."""
+    SemiringProgram / the CommBackend implementations / SlicePrefetcher /
+    the comm cost model are executable contracts (equivalent to
+    `pytest --doctest-modules` on these modules)."""
     mod = __import__(modname, fromlist=["_"])
     result = doctest.testmod(mod, verbose=False)
     assert result.attempted > 0, f"{modname} lost its doctests"
