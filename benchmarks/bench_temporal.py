@@ -13,12 +13,23 @@ docs/BENCHMARKS.md):
                       (slice reads + tile fills overlap device execution)
 * pagerank_runner   — per-instance device_graph + pagerank_run loop vs one
                       engine run scanning the staged (I, ...) tensors
+* sparse            — dense vs block-sparse layout on a banded-activity
+                      workload (~1/8 tile occupancy): staged bytes +
+                      engine-step time, bitwise min-plus parity asserted
+* use_pallas        — the semiring SpMV kernel (interpret mode) walking the
+                      dense template tile list vs the packed active-tile
+                      list with an nnz skip, vs the jnp oracle
 * comm_backend      — the same engine run under each boundary-exchange
                       backend (repro.core.comm): dense psum/pmin vs
                       collective-permute ring vs host-side gather, stacked
                       in-process + dense-vs-ring on a forced host mesh
 * mesh              — stacked vs temporal-parallel mesh execution on forced
                       host devices (subprocess; tracks scaling regressions)
+
+``run(check=True)`` (CLI: ``--check``, also via ``benchmarks.run temporal
+--check``) re-measures and compares against the committed
+BENCH_temporal.json with per-row regression thresholds instead of
+rewriting it; any violation exits nonzero.
 """
 from __future__ import annotations
 
@@ -58,7 +69,23 @@ def _time(fn, repeats: int = 3) -> float:
     return best
 
 
-def run() -> None:
+def _edge_bands(bg, src, dst, n_bands: int) -> np.ndarray:
+    """Tile-aligned band id per edge: every edge of one tile shares
+    (row_block, col_block), so banding on their sum keeps each tile
+    single-band — instance *i* activating band ``i % n_bands`` yields
+    ~1/n_bands tile occupancy, the GoFS-motivating sparse-activity
+    regime."""
+    B = bg.block_size
+    local = bg.part_of[src] == bg.part_of[dst]
+    slot_of = np.full(len(bg.part_of), 0, np.int64)
+    pub = bg.bslot_of_src
+    valid = pub >= 0
+    slot_of[pub[valid]] = np.nonzero(valid)[0]
+    row_blk = np.where(local, bg.local_of[src] // B, slot_of[src] // B)
+    return (row_blk + bg.local_of[dst] // B) % n_bands
+
+
+def run(check: bool = False) -> None:
     tsg = generate_collection(BENCH_GRAPH)
     tmpl = tsg.template
     assign = partition_graph(tmpl, BENCH_GRAPH.num_partitions,
@@ -182,6 +209,106 @@ def run() -> None:
         "speedup": t_ploop / max(t_peng, 1e-12),
     }
 
+    # ---- block-sparse layout: staged bytes + engine-step economy ----------
+    # banded temporal activity (~1/8 tile occupancy): per instance only one
+    # of n_bands tile-aligned bands is live — the regime the sparse layout
+    # targets (most inter-subgraph tiles empty per timestep).
+    n_bands = 8
+    band = _edge_bands(bg, tmpl.src, tmpl.dst, n_bands)
+    live = band[None, :] == (np.arange(I) % n_bands)[:, None]  # (I, E)
+    eng_d = TemporalEngine(bg)
+    eng_sp = TemporalEngine(bg, layout="sparse")
+
+    # parity first (bitwise for min-plus), on banded SSSP latencies
+    wb = np.where(live, w, np.inf).astype(np.float32)
+    prog_s = min_plus_program("sssp", init=source_init(0))
+    r_dense = eng_d.run(prog_s, wb, pattern="sequential")
+    r_sparse = eng_sp.run(prog_s, wb, pattern="sequential")
+    assert np.array_equal(r_dense.values, r_sparse.values)  # layout invisible
+
+    # timing on fixed-work PageRank (20 supersteps — no convergence noise)
+    sp_iters = 20
+    pw_b = edge_weights_for_instances(tmpl.src, live.astype(np.float32), V)
+    prog_p = pagerank_program(V, iters=sp_iters)
+    tiles_d, btiles_d = eng_d.stage(pw_b, prog_p.zero_fill)
+    sp = eng_sp.stage_sparse(pw_b, prog_p.zero_fill)
+    rp_d = eng_d.run(prog_p, tiles=tiles_d, btiles=btiles_d,
+                     pattern="independent")
+    rp_s = eng_sp.run(prog_p, sparse=sp, pattern="independent")
+    assert np.abs(rp_d.values - rp_s.values).max() < 1e-6
+    t_dstep = _time(lambda: eng_d.run(prog_p, tiles=tiles_d,
+                                      btiles=btiles_d,
+                                      pattern="independent"))
+    t_sstep = _time(lambda: eng_sp.run(prog_p, sparse=sp,
+                                       pattern="independent"))
+    bytes_d = int(np.asarray(tiles_d).nbytes + np.asarray(btiles_d).nbytes)
+    bytes_s = sp.staged_bytes()
+    occ = sp.occupancy()
+    emit("temporal/sparse_engine_dense", t_dstep * 1e6,
+         f"tiles={bg.t_max}+{bg.tb_max}")
+    emit("temporal/sparse_engine_sparse", t_sstep * 1e6,
+         f"speedup={t_dstep / max(t_sstep, 1e-12):.2f}x;"
+         f"occupancy={occ:.3f}")
+    emit("temporal/sparse_staged_bytes", float(bytes_s),
+         f"dense={bytes_d};ratio={bytes_d / max(bytes_s, 1):.2f}x")
+    results["sparse"] = {
+        "instances": I, "iters": sp_iters, "n_bands": n_bands,
+        "occupancy": occ,
+        "bucket": sp.bucket, "bbucket": sp.bbucket,
+        "t_max": bg.t_max, "tb_max": bg.tb_max,
+        "dense_step_s": t_dstep, "sparse_step_s": t_sstep,
+        "step_speedup": t_dstep / max(t_sstep, 1e-12),
+        "staged_bytes_dense": bytes_d, "staged_bytes_sparse": bytes_s,
+        "staged_bytes_ratio": bytes_d / max(bytes_s, 1),
+    }
+
+    # ---- use_pallas: kernel walking dense vs packed active-tile lists -----
+    from repro.core.semiring import MIN_PLUS
+    from repro.kernels.semiring_spmm.ops import spmv_blocked
+    import jax.numpy as jnp
+
+    p0 = 0
+    dt = jnp.asarray(bg.fill_local(wb[0])[p0])
+    drows = jnp.asarray(bg.tiles_rc[p0, :, 0])
+    dcols = jnp.asarray(bg.tiles_rc[p0, :, 1])
+    sp_mp = bg.stage_sparse(wb[:1])  # same instance, min-plus zero fill
+    st = jnp.asarray(sp_mp.tiles[0, p0])
+    srows = jnp.asarray(sp_mp.rows[0, p0])
+    scols = jnp.asarray(sp_mp.cols[0, p0])
+    snnz = jnp.asarray(int(sp_mp.nnz[0, p0]), jnp.int32)
+    x = jnp.asarray(np.random.default_rng(0).random(bg.vp), jnp.float32)
+
+    def k_dense():
+        return spmv_blocked(dt, drows, dcols, x, MIN_PLUS,
+                            use_pallas=True, interpret=True).block_until_ready()
+
+    def k_sparse():
+        return spmv_blocked(st, srows, scols, x, MIN_PLUS, use_pallas=True,
+                            interpret=True, nnz=snnz,
+                            n_out_blocks=bg.vp // bg.block_size,
+                            ).block_until_ready()
+
+    def k_ref():
+        return spmv_blocked(st, srows, scols, x, MIN_PLUS, use_pallas=False,
+                            n_out_blocks=bg.vp // bg.block_size,
+                            ).block_until_ready()
+
+    yk_d, yk_s, yk_r = np.asarray(k_dense()), np.asarray(k_sparse()), \
+        np.asarray(k_ref())
+    assert np.array_equal(yk_s, yk_r) and np.array_equal(yk_d, yk_s)
+    t_kd, t_ks, t_kr = _time(k_dense), _time(k_sparse), _time(k_ref)
+    emit("temporal/use_pallas_dense_walk", t_kd * 1e6,
+         f"tiles={int(dt.shape[0])};interpret=True")
+    emit("temporal/use_pallas_sparse_walk", t_ks * 1e6,
+         f"tiles={int(st.shape[0])};nnz={int(snnz)}")
+    results["use_pallas"] = {
+        "interpret": True, "block_size": bg.block_size,
+        "tiles_dense": int(dt.shape[0]), "tiles_packed": int(st.shape[0]),
+        "nnz": int(snnz),
+        "pallas_dense_s": t_kd, "pallas_sparse_s": t_ks, "jnp_sparse_s": t_kr,
+        "dense_vs_sparse": t_kd / max(t_ks, 1e-12),
+    }
+
     # ---- comm backends: one workload, three boundary exchanges ------------
     prog_c = min_plus_program("sssp", init=source_init(0))
     comm_engines = {
@@ -207,9 +334,74 @@ def run() -> None:
     # ---- mesh: stacked vs temporal-parallel shard_map (forced devices) ----
     results["mesh"] = _mesh_rows()
 
+    if check:
+        failures = check_against_baseline(results)
+        for f_ in failures:
+            emit("temporal/check_failed", 0.0, f_)
+        if failures:
+            print(f"[bench_temporal --check] {len(failures)} regression(s):",
+                  file=sys.stderr)
+            for f_ in failures:
+                print(f"  {f_}", file=sys.stderr)
+            raise SystemExit(1)
+        emit("temporal/check_ok", 0.0, f"rows={len(THRESHOLDS)}")
+        return
+
     with open(OUT_JSON, "w") as f:
         json.dump(results, f, indent=2)
     emit("temporal/json_written", 0.0, OUT_JSON)
+
+
+# Per-row regression gates for ``--check``: (row, field) -> (kind, floor,
+# rel_frac).  ``min``: fresh value must be >= max(floor, rel_frac *
+# baseline) — the absolute floor catches a lost optimization outright, the
+# relative guard (None = disabled) catches slow drift vs the committed
+# BENCH_temporal.json on rows stable enough to compare run-to-run.
+# ``max``: fresh value must stay <= ceiling (deterministic quantities
+# only).  Rows whose ratio is dominated by disk/cache or thread-scheduling
+# noise (gofs_staging swings 2x between runs; async_staging shares cores
+# between fill threads and the engine on CPU boxes) gate on the absolute
+# floor alone.
+THRESHOLDS = {
+    ("staging", "speedup"): ("min", 1.3, 0.5),
+    ("gofs_staging", "speedup"): ("min", 50.0, None),
+    ("async_staging", "speedup"): ("min", 0.5, None),
+    ("pagerank_runner", "speedup"): ("min", 1.3, 0.5),
+    ("sparse", "step_speedup"): ("min", 1.5, 0.5),
+    # deterministic (shape-derived): the acceptance targets themselves
+    ("sparse", "staged_bytes_ratio"): ("min", 4.0, 0.9),
+    ("sparse", "occupancy"): ("max", 0.25, None),
+}
+
+
+def check_against_baseline(fresh: dict, path: str = OUT_JSON) -> list:
+    """Compare fresh results against the committed baseline.  Returns a
+    list of human-readable violations (empty = pass)."""
+    if not os.path.exists(path):
+        return [f"baseline {path} missing — run `benchmarks.run temporal` "
+                f"once to create it"]
+    with open(path) as f:
+        base = json.load(f)
+    failures = []
+    for (row, field), (kind, bound, rel) in THRESHOLDS.items():
+        got = fresh.get(row, {}).get(field)
+        if got is None:
+            failures.append(f"{row}.{field}: missing from fresh results")
+            continue
+        ref = base.get(row, {}).get(field)
+        if kind == "min":
+            floor = bound
+            if rel is not None and ref is not None:
+                floor = max(bound, rel * ref)
+            if got < floor:
+                failures.append(
+                    f"{row}.{field}: {got:.3f} < floor {floor:.3f} "
+                    f"(baseline {'n/a' if ref is None else f'{ref:.3f}'})"
+                )
+        else:  # max
+            if got > bound:
+                failures.append(f"{row}.{field}: {got:.3f} > cap {bound:.3f}")
+    return failures
 
 
 # Runs in a subprocess: XLA_FLAGS must be set before jax imports, and the
@@ -368,4 +560,11 @@ def _mesh_rows() -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="compare fresh numbers against the committed "
+                         f"{OUT_JSON} (per-row thresholds) and exit "
+                         "nonzero on regression instead of rewriting it")
+    run(check=ap.parse_args().check)

@@ -1,8 +1,13 @@
 """Benchmark runner: one section per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Usage:
-    PYTHONPATH=src python -m benchmarks.run [section ...]
+    PYTHONPATH=src python -m benchmarks.run [section ...] [--check]
 Sections: gofs_layout sssp_timesteps slices_read engine kernels roofline
+
+``--check`` flips sections that keep a committed baseline (today:
+``temporal`` / BENCH_temporal.json) into regression-gate mode — fresh
+numbers are compared against the baseline with per-row thresholds and a
+violation exits nonzero instead of rewriting the file.
 """
 import sys
 import traceback
@@ -19,21 +24,28 @@ def main() -> None:
         bench_temporal,
     )
 
+    argv = sys.argv[1:]
+    check = "--check" in argv
+    argv = [a for a in argv if a != "--check"]
+
     sections = {
         "gofs_layout": bench_gofs_layout.run,     # paper Fig. 6
         "sssp_timesteps": bench_sssp_timesteps.run,  # paper Fig. 7
         "slices_read": bench_slices_read.run,     # paper Fig. 8
         "engine": bench_engine.run,               # §II/IV superstep economy
-        "temporal": bench_temporal.run,           # batched staging + engine
+        "temporal": lambda: bench_temporal.run(check=check),  # staging+engine
         "kernels": bench_kernels.run,             # §V hot-spot kernels
         "roofline": bench_roofline.run,           # EXPERIMENTS §Roofline
     }
-    wanted = sys.argv[1:] or list(sections)
+    wanted = argv or list(sections)
     print("name,us_per_call,derived")
     failed = []
     for name in wanted:
         try:
             sections[name]()
+        except SystemExit as e:  # --check regression gate
+            if e.code:
+                failed.append(name)
         except Exception:
             failed.append(name)
             traceback.print_exc()

@@ -9,9 +9,13 @@
 
   PYTHONPATH=src python examples/quickstart.py
   PYTHONPATH=src python examples/quickstart.py --comm host  # mesh-free
+  PYTHONPATH=src python examples/quickstart.py --layout sparse
 
 ``--comm`` swaps the boundary-exchange backend (dense | ring | host; see
 ``repro.core.comm``) — identical results, different byte movement.
+``--layout sparse`` stages packed active tiles instead of dense template
+tensors (``repro.core.blocked.SparseBlocked``) — identical results,
+printing the measured tile occupancy.
 
 The paper-to-code map lives in docs/ARCHITECTURE.md; the engine's pattern
 contracts and runnable per-pattern snippets are in the docstrings of
@@ -33,7 +37,7 @@ from repro.core.partition import edge_cut, partition_graph
 from repro.gofs import GoFSStore, deploy_collection
 
 
-def main(comm: str = "dense") -> None:
+def main(comm: str = "dense", layout: str = "dense") -> None:
     cfg = GraphConfig(
         name="quickstart", num_vertices=2_000, avg_degree=3.0,
         num_instances=6, num_partitions=4, block_size=64,
@@ -78,17 +82,31 @@ def main(comm: str = "dense") -> None:
         print(f"   max |blocked - host| = {err:.2e}  ✓ engines agree")
 
         print(f"== 5. unified temporal engine: one runner, all patterns "
-              f"(comm={comm})")
+              f"(comm={comm}, layout={layout})")
         from repro.core.engine import (
             TemporalEngine, min_plus_program, pagerank_program, source_init,
         )
         from repro.core.algorithms.pagerank import edge_weights_for_instances
 
-        eng = TemporalEngine(bg, comm=comm)
+        eng = TemporalEngine(bg, comm=comm, layout=layout)
         # bulk staging: GoFS attribute slices -> (I, P, T, B, B) tensors
         tiles, btiles = store.load_blocked(bg, "latency")
-        seq = eng.run(min_plus_program("sssp", init=source_init(0)),
-                      tiles=tiles, btiles=btiles, pattern="sequential")
+        if layout == "sparse":
+            # packed active tiles: same result, O(nnz_tiles) staged bytes
+            sp = store.load_blocked(bg, "latency", layout="sparse")
+            seq = eng.run(min_plus_program("sssp", init=source_init(0)),
+                          sparse=sp, pattern="sequential")
+            dense_bytes = tiles.nbytes + btiles.nbytes
+            note = ("" if sp.staged_bytes() < dense_bytes else
+                    " (every latency is finite here, so every tile is "
+                    "live; the sparse win needs temporally sparse "
+                    "activity — see the BENCH_temporal.json sparse row)")
+            print(f"   block-sparse staging: tile occupancy "
+                  f"{seq.occupancy:.1%}, staged bytes "
+                  f"{sp.staged_bytes():,} vs dense {dense_bytes:,}{note}")
+        else:
+            seq = eng.run(min_plus_program("sssp", init=source_init(0)),
+                          tiles=tiles, btiles=btiles, pattern="sequential")
         assert np.allclose(seq.final[finite], d_blk[finite])
         if comm != "dense":
             # backend swap is invisible: bitwise-identical to the dense
@@ -108,7 +126,8 @@ def main(comm: str = "dense") -> None:
               f"{int(ev.merged.argmax())}  ✓ one engine, three patterns")
 
         print("== 6. double-buffered staging: slice reads overlap execution")
-        stream = store.load_blocked_stream(bg, "latency", prefetch_depth=2)
+        stream = store.load_blocked_stream(bg, "latency", prefetch_depth=2,
+                                           layout=layout)
         seq_async = eng.run(min_plus_program("sssp", init=source_init(0)),
                             stream=stream, pattern="sequential")
         assert np.array_equal(seq_async.values, seq.values)
@@ -122,4 +141,10 @@ if __name__ == "__main__":
     ap.add_argument("--comm", choices=("dense", "ring", "host"),
                     default="dense",
                     help="boundary-exchange backend (repro.core.comm)")
-    main(comm=ap.parse_args().comm)
+    ap.add_argument("--layout", choices=("dense", "sparse"),
+                    default="dense",
+                    help="instance tile layout: dense template tensors or "
+                         "packed active tiles (repro.core.blocked"
+                         ".SparseBlocked)")
+    args = ap.parse_args()
+    main(comm=args.comm, layout=args.layout)

@@ -8,9 +8,13 @@ conditions are observed — incremental aggregation, §VI-A).
   PYTHONPATH=src python examples/temporal_sssp.py
   PYTHONPATH=src python examples/temporal_sssp.py --comm host   # mesh-free
   PYTHONPATH=src python examples/temporal_sssp.py --comm ring
+  PYTHONPATH=src python examples/temporal_sssp.py --layout sparse
 
 ``--comm`` swaps the boundary-exchange backend (repro.core.comm): min-plus
 results are bitwise identical under every backend — the script asserts it.
+``--layout sparse`` stages packed active tiles (only roads congested
+enough to matter occupy tile memory) and prints the measured occupancy;
+results are again bitwise identical — the script asserts that too.
 """
 import argparse
 
@@ -36,7 +40,7 @@ def road_grid(n: int) -> GraphTemplate:
     )
 
 
-def main(comm: str = "dense") -> None:
+def main(comm: str = "dense", layout: str = "dense") -> None:
     n = 32
     tmpl = road_grid(n)
     rng = np.random.default_rng(0)
@@ -62,9 +66,13 @@ def main(comm: str = "dense") -> None:
     from repro.core.engine import TemporalEngine, min_plus_program, source_init
 
     print(f"comm backend: {comm} (boundary exchange; see repro.core.comm)")
-    eng = TemporalEngine(bg, comm=comm)
+    print(f"tile layout: {layout} (see repro.core.blocked)")
+    eng = TemporalEngine(bg, comm=comm, layout=layout)
     res = eng.run(min_plus_program("sssp", init=source_init(depot)), w,
                   pattern="sequential")
+    if layout == "sparse":
+        print(f"✓ block-sparse staging: measured tile occupancy "
+              f"{res.occupancy:.1%}")
     print("t  reachable<40min  mean_dist  supersteps")
     for t in range(len(tsg)):
         d_t = res.values[t]
@@ -82,16 +90,17 @@ def main(comm: str = "dense") -> None:
     # bitwise identical — the backend only changes how the bytes move)
     d_ref, _ = sssp.run_blocked(bg, w, depot)
     assert np.allclose(dist[fin], d_ref[fin])
-    if comm != "dense":
+    if comm != "dense" or layout != "dense":
         res_dense = TemporalEngine(bg).run(
             min_plus_program("sssp", init=source_init(depot)), w,
             pattern="sequential")
         assert np.array_equal(res.values, res_dense.values)
-        print(f"✓ comm swap: {comm} == dense bitwise on every timestep")
+        print(f"✓ comm={comm}/layout={layout} == dense bitwise on every "
+              f"timestep")
     # async staging: instance k+1's tiles fill while instance k executes;
     # the sequential carry crosses chunk boundaries bitwise-identically
     eng_async = TemporalEngine(bg, staging="async", chunk_instances=3,
-                               comm=comm)
+                               comm=comm, layout=layout)
     res_async = eng_async.run(
         min_plus_program("sssp", init=source_init(depot)), w,
         pattern="sequential")
@@ -104,4 +113,9 @@ if __name__ == "__main__":
     ap.add_argument("--comm", choices=("dense", "ring", "host"),
                     default="dense",
                     help="boundary-exchange backend (repro.core.comm)")
-    main(comm=ap.parse_args().comm)
+    ap.add_argument("--layout", choices=("dense", "sparse"),
+                    default="dense",
+                    help="instance tile layout (packed active tiles vs "
+                         "dense template tensors)")
+    args = ap.parse_args()
+    main(comm=args.comm, layout=args.layout)

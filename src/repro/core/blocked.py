@@ -21,6 +21,20 @@ into SPMD arrays with a leading partition axis):
 The boundary exchange is a single ``psum``/``pmin`` of a dense
 (num_boundary,) buffer per superstep — O(cut vertices), the blocked analogue
 of Gopher's O(cut edges) message win over vertex-centric O(edges).
+
+Two instance-value layouts share this template structure:
+
+* **dense** — every template tile slot is materialized per instance:
+  ``(I, P, T, B, B)`` tensors (``fill_local_batch``).  Cost is
+  ``O(P·T·B²)`` per instance regardless of how many tiles the instance
+  actually touches.
+* **sparse** (:class:`SparseBlocked`) — only the tiles *active in that
+  instance* (holding at least one edge whose weight differs from the
+  semiring zero) are packed, together with a per-(instance, partition)
+  ``(row, col)`` tile index.  The packed tile axis is padded to a
+  power-of-two bucket (:func:`pow2_bucket`) so the number of distinct
+  jit shapes stays O(log T).  Cost is ``O(nnz_tiles·B²)`` — the GoFS
+  compact-slice claim carried all the way to the device tensors.
 """
 from __future__ import annotations
 
@@ -31,6 +45,71 @@ import numpy as np
 
 from repro.core.graph import GraphTemplate
 from repro.core.semiring import INF
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= max(1, n) — the padded tile-count bucket.
+
+    Bucketing bounds the set of distinct staged shapes (and therefore jit
+    cache entries) to O(log T) while wasting at most 2x padding tiles.
+
+    >>> [pow2_bucket(n) for n in (0, 1, 2, 3, 8, 9)]
+    [1, 1, 2, 4, 8, 16]
+    """
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+@dataclass
+class SparseBlocked:
+    """Block-sparse instance batch: packed active tiles + per-instance index.
+
+    The template's tile axis (length T) is replaced by a packed axis of
+    length ``bucket`` (a power of two >= the largest per-(instance,
+    partition) active-tile count).  ``rows``/``cols`` carry the tile index
+    — (row_block, col_block) per packed slot, ``-1`` padding — in template
+    order, which is col-major sorted per partition, so the packed list
+    keeps the contiguous-output-runs invariant the Pallas kernel needs.
+    Skipped tiles hold only semiring zeros, so staging them sparse is
+    result-identical (bitwise for min-plus) to the dense layout.
+    """
+
+    block_size: int
+    tiles: np.ndarray  # (I, P, K, B, B) float32 packed local tile values
+    btiles: np.ndarray  # (I, P, Kb, B, B) float32 packed boundary tiles
+    rows: np.ndarray  # (I, P, K) int32 row block per packed slot, -1 = pad
+    cols: np.ndarray  # (I, P, K) int32 col block per packed slot, -1 = pad
+    brows: np.ndarray  # (I, P, Kb) int32 boundary block index, -1 = pad
+    bcols: np.ndarray  # (I, P, Kb) int32 local dst block index, -1 = pad
+    nnz: np.ndarray  # (I, P) int32 active local tiles
+    bnnz: np.ndarray  # (I, P) int32 active boundary tiles
+    total_tiles: int  # template valid local tiles, summed over partitions
+    total_btiles: int  # template valid boundary tiles
+
+    @property
+    def num_instances(self) -> int:
+        return self.tiles.shape[0]
+
+    @property
+    def bucket(self) -> int:
+        return self.tiles.shape[2]
+
+    @property
+    def bbucket(self) -> int:
+        return self.btiles.shape[2]
+
+    def occupancy(self) -> float:
+        """Fraction of template tiles active, averaged over instances."""
+        total = self.num_instances * (self.total_tiles + self.total_btiles)
+        if total == 0:
+            return 0.0
+        return float(self.nnz.sum() + self.bnnz.sum()) / total
+
+    def staged_bytes(self) -> int:
+        """Host bytes materialized for this batch (values + tile index)."""
+        return int(
+            self.tiles.nbytes + self.btiles.nbytes + self.rows.nbytes
+            + self.cols.nbytes + self.brows.nbytes + self.bcols.nbytes
+        )
 
 
 @dataclass
@@ -83,6 +162,13 @@ class BlockedGraph:
     @property
     def o_max(self) -> int:
         return self.out_slot.shape[1]
+
+    @property
+    def boundary_nnz(self) -> int:
+        """Boundary vertices actually published per superstep — the real
+        cut size the comm cost model should see, as opposed to the padded
+        ``num_boundary`` buffer length."""
+        return int(self.n_out.sum())
 
     # ------------------------------------------------------------------ fill
     # Parallel edges between the same (src, dst) land in the same tile slot;
@@ -138,6 +224,19 @@ class BlockedGraph:
     def _slot_key(self, part: np.ndarray, flat: np.ndarray, t_count: int):
         return part.astype(np.int64) * (t_count * self.block_size ** 2) + flat
 
+    def _local_slots_unique(self) -> bool:
+        """Is the local fill map duplicate-free (lazily probed once)?"""
+        if self._le_unique is None:
+            key = self._slot_key(self.le_part, self.le_flat, self.t_max)
+            self._le_unique = bool(len(np.unique(key)) == len(key))
+        return self._le_unique
+
+    def _boundary_slots_unique(self) -> bool:
+        if self._re_unique is None:
+            key = self._slot_key(self.re_part, self.re_flat, self.tb_max)
+            self._re_unique = bool(len(np.unique(key)) == len(key))
+        return self._re_unique
+
     def fill_local_batch(
         self, weights: np.ndarray, zero: float = INF,
         out: Optional[np.ndarray] = None,
@@ -147,12 +246,9 @@ class BlockedGraph:
         ``out``: optional pre-staged (I, P, T, B, B) float32 buffer filled
         in place (see ``alloc_batch_buffers``); avoids the allocation per
         call when the prefetcher stages chunk buffers."""
-        if self._le_unique is None:
-            key = self._slot_key(self.le_part, self.le_flat, self.t_max)
-            self._le_unique = bool(len(np.unique(key)) == len(key))
         return self._fill_batch(
             weights, zero, self.le_part, self.le_flat, self.le_edge_id,
-            self.t_max, out, self._le_unique,
+            self.t_max, out, self._local_slots_unique(),
         )
 
     def fill_boundary_batch(
@@ -162,25 +258,190 @@ class BlockedGraph:
         """Instance edge weights (I, E) -> boundary tiles (I, P, Tb, B, B).
 
         ``out``: optional pre-staged buffer, as in ``fill_local_batch``."""
-        if self._re_unique is None:
-            key = self._slot_key(self.re_part, self.re_flat, self.tb_max)
-            self._re_unique = bool(len(np.unique(key)) == len(key))
         return self._fill_batch(
             weights, zero, self.re_part, self.re_flat, self.re_edge_id,
-            self.tb_max, out, self._re_unique,
+            self.tb_max, out, self._boundary_slots_unique(),
         )
 
     def alloc_batch_buffers(
-        self, max_instances: int
+        self, max_instances: int, *,
+        bucket: Optional[int] = None, bbucket: Optional[int] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Allocate one reusable (local, boundary) fill-buffer pair sized
-        for ``max_instances`` — the unit of the prefetcher's buffer ring."""
+        for ``max_instances`` — the unit of the prefetcher's buffer ring.
+
+        ``bucket``/``bbucket`` size the tile axes for the sparse layout's
+        padded power-of-two buckets instead of the dense ``t_max``/
+        ``tb_max`` — a ``bucket/t_max`` staging-memory reduction."""
         B = self.block_size
         return (
-            np.empty((max_instances, self.n_parts, self.t_max, B, B),
-                     np.float32),
-            np.empty((max_instances, self.n_parts, self.tb_max, B, B),
-                     np.float32),
+            np.empty((max_instances, self.n_parts, bucket or self.t_max,
+                      B, B), np.float32),
+            np.empty((max_instances, self.n_parts, bbucket or self.tb_max,
+                      B, B), np.float32),
+        )
+
+    # ------------------------------------------------------- sparse staging
+    # A tile is ACTIVE for an instance iff at least one edge mapping into it
+    # carries a weight != the semiring zero.  Inactive tiles contribute
+    # exact semiring zeros to the SpMV (min with +inf / sum with 0.0), so
+    # packing only active tiles is result-identical to the dense layout —
+    # bitwise for min-plus, where min is order-exact.
+    def _active_tiles(
+        self, w: np.ndarray, zero: float, part: np.ndarray,
+        flat: np.ndarray, edge_id: np.ndarray, t_count: int,
+    ) -> np.ndarray:
+        """(I, E) weights -> (I, P, t_count) bool active-tile mask."""
+        B2 = self.block_size * self.block_size
+        I = w.shape[0]
+        act = np.zeros((I, self.n_parts * t_count), bool)
+        if len(edge_id):
+            tile_key = part.astype(np.int64) * t_count + flat // B2  # (L,)
+            live = w[:, edge_id] != zero  # (I, L)
+            ii, ll = np.nonzero(live)
+            act[ii, tile_key[ll]] = True
+        return act.reshape(I, self.n_parts, t_count)
+
+    def _fill_batch_sparse(
+        self, w: np.ndarray, zero: float, part: np.ndarray,
+        flat: np.ndarray, edge_id: np.ndarray, t_count: int,
+        rc: np.ndarray, bucket: Optional[int], out: Optional[np.ndarray],
+        slots_unique: bool, act: Optional[np.ndarray],
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Packed-tile fill.  Returns (vals (I, P, K, B, B), rows (I, P, K),
+        cols (I, P, K), nnz (I, P))."""
+        B = self.block_size
+        B2 = B * B
+        I, P = w.shape[0], self.n_parts
+        if act is None:
+            act = self._active_tiles(w, zero, part, flat, edge_id, t_count)
+        assert act.shape == (I, P, t_count), act.shape
+        nnz = act.sum(-1, dtype=np.int32)  # (I, P)
+        max_nnz = int(nnz.max()) if nnz.size else 0
+        K = int(bucket) if bucket is not None else pow2_bucket(max_nnz)
+        assert K >= max_nnz, \
+            f"bucket {K} < max active tiles {max_nnz} (stale tile map?)"
+        # packed slot of each active tile, in template (col-major) order —
+        # the subset keeps the sorted-cols invariant the kernel relies on
+        slot = np.cumsum(act, axis=-1, dtype=np.int64) - 1  # valid where act
+        rows = np.full((I, P, K), -1, np.int32)
+        cols = np.full((I, P, K), -1, np.int32)
+        ii, pp, tt = np.nonzero(act)
+        ss = slot[ii, pp, tt]
+        rows[ii, pp, ss] = rc[pp, tt, 0]
+        cols[ii, pp, ss] = rc[pp, tt, 1]
+        if out is None:
+            vals = np.full(I * P * K * B2, zero, np.float32)
+        else:
+            assert out.shape == (I, P, K, B, B), (out.shape, K)
+            assert out.dtype == np.float32 and out.flags.c_contiguous
+            vals = out.reshape(-1)
+            vals[...] = zero
+        if len(edge_id):
+            tile_key = part.astype(np.int64) * t_count + flat // B2  # (L,)
+            within = flat % B2
+            keep = act.reshape(I, P * t_count)[:, tile_key]  # (I, L) bool
+            # gather destinations/values only at the KEPT (instance, edge)
+            # pairs — no full (I, L) weight/offset temporaries beyond the
+            # boolean mask itself
+            ki, kl = np.nonzero(keep)
+            pslot = slot.reshape(I, P * t_count)[ki, tile_key[kl]]
+            didx = ((ki * np.int64(P) + part[kl]) * K + pslot) * B2 \
+                + within[kl]
+            dvals = w[ki, edge_id[kl]]
+            if slots_unique:
+                vals[didx] = dvals
+            else:
+                op = np.minimum if zero == INF else np.add
+                op.at(vals, didx, dvals)
+        return vals.reshape(I, P, K, B, B), rows, cols, nnz
+
+    def fill_local_batch_sparse(
+        self, weights: np.ndarray, zero: float = INF, *,
+        bucket: Optional[int] = None, out: Optional[np.ndarray] = None,
+        act: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Instance edge weights (I, E) -> packed local tiles.
+
+        Returns (vals (I, P, K, B, B), rows (I, P, K), cols (I, P, K),
+        nnz (I, P)) with K = ``bucket`` or the pow2 bucket of the batch's
+        max active-tile count.  ``act``: precomputed (I, P, T) active-tile
+        mask (e.g. a GoFS-recorded per-pack tile map); ``out``: pre-staged
+        buffer as in ``fill_local_batch``."""
+        return self._fill_batch_sparse(
+            np.asarray(weights, np.float32), zero, self.le_part,
+            self.le_flat, self.le_edge_id, self.t_max, self.tiles_rc,
+            bucket, out, self._local_slots_unique(), act,
+        )
+
+    def fill_boundary_batch_sparse(
+        self, weights: np.ndarray, zero: float = INF, *,
+        bucket: Optional[int] = None, out: Optional[np.ndarray] = None,
+        act: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Instance edge weights (I, E) -> packed boundary tiles (see
+        ``fill_local_batch_sparse``)."""
+        return self._fill_batch_sparse(
+            np.asarray(weights, np.float32), zero, self.re_part,
+            self.re_flat, self.re_edge_id, self.tb_max, self.btiles_rc,
+            bucket, out, self._boundary_slots_unique(), act,
+        )
+
+    def active_tile_maps(
+        self, weights: np.ndarray, zero: float = INF
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(I, E) weights -> ((I, P, T), (I, P, Tb)) bool active-tile maps
+        — the per-pack record GoFS deployment persists next to the
+        attribute slices (``repro.gofs.layout``)."""
+        w = np.asarray(weights, np.float32)
+        if w.ndim == 1:
+            w = w[None]
+        return (
+            self._active_tiles(w, zero, self.le_part, self.le_flat,
+                               self.le_edge_id, self.t_max),
+            self._active_tiles(w, zero, self.re_part, self.re_flat,
+                               self.re_edge_id, self.tb_max),
+        )
+
+    def sparse_buckets(
+        self, weights: np.ndarray, zero: float = INF
+    ) -> Tuple[int, int]:
+        """Pow2 (local, boundary) tile buckets for a weight batch — the
+        shape every chunk of the batch should share (one jit entry)."""
+        w = np.asarray(weights, np.float32)
+        if w.ndim == 1:
+            w = w[None]
+        la = self._active_tiles(w, zero, self.le_part, self.le_flat,
+                                self.le_edge_id, self.t_max)
+        ba = self._active_tiles(w, zero, self.re_part, self.re_flat,
+                                self.re_edge_id, self.tb_max)
+        lmax = int(la.sum(-1).max()) if la.size else 0
+        bmax = int(ba.sum(-1).max()) if ba.size else 0
+        return pow2_bucket(lmax), pow2_bucket(bmax)
+
+    def stage_sparse(
+        self, weights: np.ndarray, zero: float = INF, *,
+        bucket: Optional[int] = None, bbucket: Optional[int] = None,
+        act_local: Optional[np.ndarray] = None,
+        act_boundary: Optional[np.ndarray] = None,
+    ) -> SparseBlocked:
+        """(I, E) edge weights -> :class:`SparseBlocked` packed batch."""
+        w = np.asarray(weights, np.float32)
+        if w.ndim == 1:
+            w = w[None]
+        tiles, rows, cols, nnz = self.fill_local_batch_sparse(
+            w, zero=zero, bucket=bucket, act=act_local,
+        )
+        btiles, brows, bcols, bnnz = self.fill_boundary_batch_sparse(
+            w, zero=zero, bucket=bbucket, act=act_boundary,
+        )
+        return SparseBlocked(
+            block_size=self.block_size,
+            tiles=tiles, btiles=btiles,
+            rows=rows, cols=cols, brows=brows, bcols=bcols,
+            nnz=nnz, bnnz=bnnz,
+            total_tiles=int(self.n_tiles.sum()),
+            total_btiles=int(self.n_btiles.sum()),
         )
 
     # ------------------------------------------------------------- vertex io

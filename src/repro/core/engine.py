@@ -40,6 +40,18 @@ Instance staging is batched: edge-attribute matrices (I, E) land in
 ``fill_boundary_batch`` (or straight from GoFS slices via
 ``GoFSStore.load_blocked``) — no per-instance Python fill loops.
 
+Staging is also *layout-aware* (``layout="dense" | "sparse"``): the sparse
+layout packs only each instance's ACTIVE tiles (those holding at least one
+edge whose weight differs from the semiring zero) into pow2-bucket
+tensors plus a per-instance tile index
+(:class:`repro.core.blocked.SparseBlocked`), and the runners scan the
+index alongside the values so the local SpMV gather-folds only active
+tiles.  Memory and FLOPs drop from ``O(P·T·B²)`` to ``O(nnz_tiles·B²)``
+per instance; results are identical (bitwise for min-plus) because
+skipped tiles contribute exact semiring zeros.  The boundary buffers and
+comm backends are untouched — the dense/sparse boundary is the local
+SpMV.
+
 Staging can also be *overlapped* with execution (``staging="async"`` or an
 explicit ``stream=``): chunks of instances arrive from a
 :class:`repro.gofs.prefetch.SlicePrefetcher` double-buffer while the device
@@ -59,7 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import shard_map
-from repro.core.blocked import BlockedGraph
+from repro.core.blocked import BlockedGraph, SparseBlocked
 from repro.core.comm import CommBackend, make_comm
 from repro.core.ibsp import BSPStats
 from repro.core.semiring import INF, MIN_PLUS, PLUS_MUL, Semiring
@@ -194,6 +206,7 @@ class EngineResult:
     final: np.ndarray  # (V,) carried end state (sequential) or values[-1]
     merged: Optional[np.ndarray]  # (V,) Merge output (eventually + on-device)
     stats: Dict[str, np.ndarray]  # {"supersteps": (I,), "local_sweeps": (I,)}
+    occupancy: Optional[float] = None  # active-tile fraction (sparse layout)
     _n_published: int = 0  # boundary vertices published per superstep
     _n_parts: int = 0
     _num_vertices: int = 0
@@ -263,6 +276,23 @@ class TemporalEngine:
     bits).  The backend changes only the collective's lowering — never
     the program, pattern, staging mode, or result semantics.
 
+    **Layout** (how instance tiles are materialized; see the block-sparse
+    section of ``docs/ARCHITECTURE.md``):
+
+    * ``layout="dense"`` — every template tile slot per instance:
+      (I, P, T, B, B) tensors.  Simple, and right when most tiles are
+      active every timestep.
+    * ``layout="sparse"`` — only each instance's ACTIVE tiles (holding an
+      edge whose weight differs from the semiring zero) are packed into
+      pow2-bucket tensors plus a per-instance (row, col) tile index
+      (:class:`repro.core.blocked.SparseBlocked`); the runners scan the
+      index with the values, so staging bytes and SpMV work scale with
+      ``nnz_tiles`` instead of ``T``.  Results are identical — bitwise
+      for min-plus — because skipped tiles contribute exact semiring
+      zeros; ``result.occupancy`` reports the measured active fraction.
+      Boundary buffers and comm backends are untouched (the dense/sparse
+      boundary is the local SpMV).
+
     **Staging** (how instance tensors reach the device):
 
     * ``staging="sync"`` — stage the whole (I, P, T, B, B) batch, then run.
@@ -309,6 +339,13 @@ class TemporalEngine:
     >>> bool(np.array_equal(eng_host.run(sssp, w, pattern="sequential").final,
     ...                     eng.run(sssp, w, pattern="sequential").final))
     True
+    >>> eng_sp = TemporalEngine(bg, layout="sparse")  # packed active tiles
+    >>> r_sp = eng_sp.run(sssp, w, pattern="sequential")
+    >>> bool(np.array_equal(r_sp.final, eng.run(sssp, w,
+    ...                                         pattern="sequential").final))
+    True
+    >>> 0.0 < r_sp.occupancy <= 1.0  # measured active-tile fraction
+    True
     """
 
     def __init__(
@@ -323,8 +360,10 @@ class TemporalEngine:
         prefetch_depth: int = 2,
         chunk_instances: Optional[int] = None,
         comm: Union[str, CommBackend] = "dense",
+        layout: str = "dense",
     ):
         assert staging in ("sync", "async"), staging
+        assert layout in ("dense", "sparse"), layout
         self.bg = bg
         self.mesh = mesh
         self.data_axis = data_axis
@@ -333,14 +372,21 @@ class TemporalEngine:
         self.staging = staging
         self.prefetch_depth = prefetch_depth
         self.chunk_instances = chunk_instances
+        self.layout = layout
         self.comm = make_comm(comm, mesh=mesh, model_axes=self.model_axes)
         out_mask = np.arange(bg.o_max)[None, :] < bg.n_out[:, None]
-        self._struct = (
-            jnp.asarray(bg.tiles_rc[:, :, 0]), jnp.asarray(bg.tiles_rc[:, :, 1]),
-            jnp.asarray(bg.btiles_rc[:, :, 0]), jnp.asarray(bg.btiles_rc[:, :, 1]),
+        # template structure: (rows, cols, brows, bcols) tile index + the
+        # layout-independent tail.  The sparse layout replaces the first
+        # four with PER-INSTANCE packed indices scanned alongside the tile
+        # values; the tail is shared by both layouts.
+        self._struct_tail = (
             jnp.asarray(bg.out_slot), jnp.asarray(bg.out_local),
             jnp.asarray(out_mask), jnp.asarray(bg.global_of >= 0),
         )
+        self._struct = (
+            jnp.asarray(bg.tiles_rc[:, :, 0]), jnp.asarray(bg.tiles_rc[:, :, 1]),
+            jnp.asarray(bg.btiles_rc[:, :, 0]), jnp.asarray(bg.btiles_rc[:, :, 1]),
+        ) + self._struct_tail
         self._runners: Dict[Any, Callable] = {}
         self._merge_fn: Optional[Callable] = None
 
@@ -356,6 +402,12 @@ class TemporalEngine:
             jnp.asarray(self.bg.fill_local_batch(w, zero=zero_fill)),
             jnp.asarray(self.bg.fill_boundary_batch(w, zero=zero_fill)),
         )
+
+    def stage_sparse(
+        self, instance_weights: np.ndarray, zero_fill: float
+    ) -> SparseBlocked:
+        """(I, E) edge weights -> packed active-tile batch (host arrays)."""
+        return self.bg.stage_sparse(instance_weights, zero=zero_fill)
 
     # ------------------------------------------------------- instance step
     def _device_graph(self, tiles_l, btiles_l, struct) -> DeviceGraph:
@@ -392,35 +444,54 @@ class TemporalEngine:
     # ------------------------------------------------------------- runners
     def _scan_instances(self, program: SemiringProgram, pattern: str,
                         x0, tiles, btiles, struct,
-                        comm: Optional[CommBackend] = None):
+                        comm: Optional[CommBackend] = None, idx=None):
         """Scan the instance axis on the local shard.  Returns
-        (xs (I, P_l, Vp), final (P_l, Vp), ss (I,), lsw (I,))."""
+        (xs (I, P_l, Vp), final (P_l, Vp), ss (I,), lsw (I,)).
+
+        ``idx=None`` (dense): ``struct`` is the full 8-tuple with the
+        template tile index.  Sparse: ``struct`` is the 4-tuple tail and
+        ``idx`` the per-instance (rows, cols, brows, bcols) packed index,
+        scanned alongside the tile values."""
         comm = self.comm if comm is None else comm
 
         def step(carry, tb):
-            tiles_l, btiles_l = tb
+            if idx is None:
+                tiles_l, btiles_l = tb
+                s = struct
+            else:
+                tiles_l, btiles_l, rows_l, cols_l, brows_l, bcols_l = tb
+                s = (rows_l, cols_l, brows_l, bcols_l) + struct
             seed = carry if pattern == "sequential" else x0
             x, (ss, lsw) = self._run_instance(
-                program, seed, tiles_l, btiles_l, struct, comm
+                program, seed, tiles_l, btiles_l, s, comm
             )
             return x, (x, ss, lsw)
 
-        final, (xs, ss, lsw) = jax.lax.scan(step, x0, (tiles, btiles))
+        xs_in = (tiles, btiles) if idx is None else (tiles, btiles) + tuple(idx)
+        final, (xs, ss, lsw) = jax.lax.scan(step, x0, xs_in)
         return xs, final, ss, lsw
 
     def _make_stacked_runner(self, program: SemiringProgram, pattern: str,
-                             merge: Optional[str]):
-        def run(tiles, btiles, x0, *struct):
-            xs, final, ss, lsw = self._scan_instances(
+                             merge: Optional[str], sparse: bool = False):
+        def run_dense(tiles, btiles, x0, *struct):
+            return finish(*self._scan_instances(
                 program, pattern, x0, tiles, btiles, struct
-            )
+            ))
+
+        def run_sparse(tiles, btiles, rows, cols, brows, bcols, x0, *struct):
+            return finish(*self._scan_instances(
+                program, pattern, x0, tiles, btiles, struct,
+                idx=(rows, cols, brows, bcols),
+            ))
+
+        def finish(xs, final, ss, lsw):
             if pattern == "eventually" and merge == "mean":
                 merged = jnp.mean(xs, axis=0)
             else:
                 merged = jnp.zeros_like(final)
             return xs, final, merged, ss, lsw
 
-        return jax.jit(run)
+        return jax.jit(run_sparse if sparse else run_dense)
 
     def _data_size(self) -> int:
         axes = (self.data_axis,) if isinstance(self.data_axis, str) \
@@ -431,7 +502,8 @@ class TemporalEngine:
         return n
 
     def _make_mesh_runner(self, program: SemiringProgram, pattern: str,
-                          merge: Optional[str], n_instances: int):
+                          merge: Optional[str], n_instances: int,
+                          sparse: bool = False):
         from jax.sharding import PartitionSpec as P_
 
         mesh = self.mesh
@@ -455,10 +527,7 @@ class TemporalEngine:
             daxes = (daxis,) if isinstance(daxis, str) else tuple(daxis)
             comm = comm.bind_sync(daxes)
 
-        def local_fn(tiles, btiles, x0, *struct):
-            xs, final, ss, lsw = self._scan_instances(
-                program, pattern, x0, tiles, btiles, struct, comm
-            )
+        def merged_of(xs, final):
             if pattern == "eventually" and merge == "mean":
                 # eventually-dependent Merge across ALL instances (data axis)
                 part = jnp.sum(xs, axis=0)
@@ -466,21 +535,44 @@ class TemporalEngine:
                 n = jax.lax.psum(
                     jnp.asarray(xs.shape[0], jnp.float32), daxis
                 )
-                merged = total / n
-            else:
-                merged = jnp.zeros_like(final)
-            return xs, final, merged, ss, lsw
+                return total / n
+            return jnp.zeros_like(final)
+
+        def local_dense(tiles, btiles, x0, *struct):
+            xs, final, ss, lsw = self._scan_instances(
+                program, pattern, x0, tiles, btiles, struct, comm
+            )
+            return xs, final, merged_of(xs, final), ss, lsw
+
+        def local_sparse(tiles, btiles, rows, cols, brows, bcols, x0,
+                         *struct):
+            xs, final, ss, lsw = self._scan_instances(
+                program, pattern, x0, tiles, btiles, struct, comm,
+                idx=(rows, cols, brows, bcols),
+            )
+            return xs, final, merged_of(xs, final), ss, lsw
 
         iaxis = daxis if shard_instances else None
 
         def lead(extra_dims: int, *front):
             return P_(*front, *([None] * extra_dims))
 
-        in_specs = (
-            lead(3, iaxis, maxes),  # tiles (I, P, T, B, B)
-            lead(3, iaxis, maxes),  # btiles
-            lead(1, maxes),         # x0 (P, Vp)
-        ) + tuple(lead(s.ndim - 1, maxes) for s in self._struct)
+        if sparse:
+            in_specs = (
+                lead(3, iaxis, maxes),  # tiles (I, P, K, B, B)
+                lead(3, iaxis, maxes),  # btiles
+                lead(1, iaxis, maxes),  # rows (I, P, K)
+                lead(1, iaxis, maxes),  # cols
+                lead(1, iaxis, maxes),  # brows (I, P, Kb)
+                lead(1, iaxis, maxes),  # bcols
+                lead(1, maxes),         # x0 (P, Vp)
+            ) + tuple(lead(s.ndim - 1, maxes) for s in self._struct_tail)
+        else:
+            in_specs = (
+                lead(3, iaxis, maxes),  # tiles (I, P, T, B, B)
+                lead(3, iaxis, maxes),  # btiles
+                lead(1, maxes),         # x0 (P, Vp)
+            ) + tuple(lead(s.ndim - 1, maxes) for s in self._struct)
         out_specs = (
             lead(2, iaxis, maxes),  # xs (I, P, Vp)
             lead(1, maxes),         # final
@@ -488,31 +580,43 @@ class TemporalEngine:
             P_(iaxis), P_(iaxis),   # ss, lsw (I,)
         )
         fn = shard_map(
-            local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            local_sparse if sparse else local_dense, mesh=mesh,
+            in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
         )
         return jax.jit(fn)
 
     def _runner(self, program: SemiringProgram, pattern: str,
-                merge: Optional[str], n_instances: int):
-        key = (program, pattern, merge, n_instances)
+                merge: Optional[str], n_instances: int,
+                sparse: bool = False):
+        key = (program, pattern, merge, n_instances, sparse)
         if key not in self._runners:
             if self.mesh is None:
                 self._runners[key] = self._make_stacked_runner(
-                    program, pattern, merge
+                    program, pattern, merge, sparse
                 )
             else:
                 self._runners[key] = self._make_mesh_runner(
-                    program, pattern, merge, n_instances
+                    program, pattern, merge, n_instances, sparse
                 )
         return self._runners[key]
 
     # ------------------------------------------------------------ dispatch
-    def _dispatch(self, run_fn, tiles, btiles, x0):
+    def _dispatch(self, run_fn, *args):
         if self.mesh is not None:
             with self.mesh:
-                return run_fn(tiles, btiles, x0, *self._struct)
-        return run_fn(tiles, btiles, x0, *self._struct)
+                return run_fn(*args)
+        return run_fn(*args)
+
+    def _dispatch_sparse(self, run_fn, sp: SparseBlocked, x0):
+        """Device-put a packed batch and dispatch the sparse runner."""
+        return self._dispatch(
+            run_fn,
+            jnp.asarray(sp.tiles), jnp.asarray(sp.btiles),
+            jnp.asarray(sp.rows), jnp.asarray(sp.cols),
+            jnp.asarray(sp.brows), jnp.asarray(sp.bcols),
+            x0, *self._struct_tail,
+        )
 
     def _merge_mean(self, xs):
         """On-device Merge over the full instance axis (async path).
@@ -534,26 +638,44 @@ class TemporalEngine:
         *k+1* — whose slice reads + tile fills happen on the prefetcher's
         background pool — while *k* executes (JAX dispatch is async).  The
         sequential pattern carries the end state across chunk boundaries;
-        the eventually Merge folds once over the concatenated states."""
+        the eventually Merge folds once over the concatenated states.
+        Sparse-layout chunks (packed tiles + per-instance index) dispatch
+        through the sparse runner; dense chunks through the dense one.
+        Returns (xs, final, merged, ss, lsw, occupancy | None)."""
 
         def body(x0):
             xs_p, ss_p, lsw_p = [], [], []
             carry = x0
             final = None
+            n_total = nnz_total = 0
+            sparse_seen = False
             for ch in chunks:
                 # Aliasing (no copy) is safe ONLY because each chunk owns
                 # its buffers (see SlicePrefetcher): JAX's device put
                 # zero-copy-aliases aligned host buffers on CPU and defers
                 # the host read even under copy=True, so a reused staging
                 # buffer would be overwritten mid-execution.
-                tiles = jnp.asarray(ch.tiles)
-                btiles = jnp.asarray(ch.btiles)
-                run_fn = self._runner(program, pattern, None,
-                                      int(tiles.shape[0]))
                 seed = carry if pattern == "sequential" else x0
-                xs, fin, _, ss, lsw = self._dispatch(
-                    run_fn, tiles, btiles, seed
-                )
+                n = int(ch.tiles.shape[0])
+                if getattr(ch, "is_sparse", False):
+                    sparse_seen = True
+                    n_total += n
+                    nnz_total += int(ch.nnz.sum()) + int(ch.bnnz.sum())
+                    run_fn = self._runner(program, pattern, None, n,
+                                          sparse=True)
+                    xs, fin, _, ss, lsw = self._dispatch(
+                        run_fn, jnp.asarray(ch.tiles), jnp.asarray(ch.btiles),
+                        jnp.asarray(ch.rows), jnp.asarray(ch.cols),
+                        jnp.asarray(ch.brows), jnp.asarray(ch.bcols),
+                        seed, *self._struct_tail,
+                    )
+                else:
+                    n_total += n
+                    run_fn = self._runner(program, pattern, None, n)
+                    xs, fin, _, ss, lsw = self._dispatch(
+                        run_fn, jnp.asarray(ch.tiles), jnp.asarray(ch.btiles),
+                        seed, *self._struct,
+                    )
                 carry = final = fin
                 xs_p.append(xs)
                 ss_p.append(ss)
@@ -566,7 +688,12 @@ class TemporalEngine:
                 merged = self._merge_mean(xs)
             else:
                 merged = jnp.zeros_like(final)
-            return xs, final, merged, ss, lsw
+            occ = None
+            if sparse_seen:
+                total = n_total * (int(self.bg.n_tiles.sum())
+                                   + int(self.bg.n_btiles.sum()))
+                occ = nnz_total / total if total else 0.0
+            return xs, final, merged, ss, lsw, occ
 
         return body
 
@@ -580,6 +707,7 @@ class TemporalEngine:
         x0: Optional[np.ndarray] = None,
         tiles: Optional[jax.Array] = None,
         btiles: Optional[jax.Array] = None,
+        sparse: Optional[SparseBlocked] = None,
         merge: Optional[str] = None,
         stream=None,
         staging: Optional[str] = None,
@@ -588,29 +716,49 @@ class TemporalEngine:
 
         Instance sources (exactly one):
 
-        * ``instance_weights`` (I, E) — staged through the batched fill;
+        * ``instance_weights`` (I, E) — staged through the batched fill in
+          the engine's ``layout`` (dense tensors or packed active tiles);
           with ``staging="async"`` (call or constructor) the fill is
           chunked behind a background prefetcher and overlaps execution.
         * pre-staged ``tiles``/``btiles`` (I, P, T|Tb, B, B) — e.g. from
           ``GoFSStore.load_blocked`` (always synchronous: already staged).
+        * pre-staged ``sparse`` — a :class:`repro.core.blocked
+          .SparseBlocked` packed batch (e.g. ``GoFSStore.load_blocked``
+          with ``layout="sparse"``).
         * ``stream`` — an iterable of :class:`repro.gofs.prefetch
-          .StagedChunk` (e.g. ``GoFSStore.load_blocked_stream``): chunks
-          execute as they land, so disk reads overlap device compute.
+          .StagedChunk` (dense or sparse chunks; e.g.
+          ``GoFSStore.load_blocked_stream``): chunks execute as they land,
+          so disk reads overlap device compute.
 
         ``x0`` overrides ``program.init(bg)``.  ``merge="mean"`` computes
-        the on-device eventually-dependent Merge.  All staging modes are
-        result-identical; see the class docstring for pattern contracts.
+        the on-device eventually-dependent Merge.  All staging modes AND
+        layouts are result-identical (bitwise for min-plus); sparse runs
+        report the measured active-tile fraction in ``result.occupancy``.
+        See the class docstring for pattern contracts.
         """
         assert pattern in PATTERNS, pattern
         assert merge is None or pattern == "eventually", \
             "merge is the eventually-dependent Merge step; use pattern='eventually'"
         staging = staging or self.staging
+        # pre-staged batches carry their own layout: sparse= flips a dense
+        # engine to the sparse runner for this call, tiles=/btiles= flip a
+        # sparse engine to the dense runner — symmetric, nothing dropped
+        assert sparse is None or tiles is None, \
+            "pass either sparse= or tiles=/btiles=, not both"
+        if sparse is not None:
+            layout = "sparse"
+        elif tiles is not None:
+            layout = "dense"
+        else:
+            layout = self.layout
         if x0 is None:
             assert program.init is not None, "program has no init; pass x0"
             x0 = program.init(self.bg)
         x0 = jnp.asarray(x0, jnp.float32)
+        occ: Optional[float] = None
 
-        if stream is None and staging == "async" and tiles is None:
+        if (stream is None and staging == "async" and tiles is None
+                and sparse is None):
             assert instance_weights is not None, \
                 "need instance_weights or pre-staged tiles+btiles"
             from repro.gofs.prefetch import SlicePrefetcher
@@ -629,12 +777,25 @@ class TemporalEngine:
             stream = SlicePrefetcher.from_weights(
                 self.bg, w, zero=program.zero_fill,
                 prefetch_depth=self.prefetch_depth, chunk_instances=chunk,
+                layout=layout,
             )
 
         if stream is not None:
-            xs, final, merged, ss, lsw = self._run_stream(
+            xs, final, merged, ss, lsw, occ = self._run_stream(
                 program, pattern, merge, stream
             )(x0)
+        elif layout == "sparse":
+            if sparse is None:
+                assert instance_weights is not None, \
+                    "need instance_weights, a SparseBlocked batch, or stream"
+                sparse = self.stage_sparse(instance_weights,
+                                           program.zero_fill)
+            occ = sparse.occupancy()
+            run_fn = self._runner(program, pattern, merge,
+                                  sparse.num_instances, sparse=True)
+            xs, final, merged, ss, lsw = self._dispatch_sparse(
+                run_fn, sparse, x0
+            )
         else:
             if tiles is None or btiles is None:
                 assert instance_weights is not None, \
@@ -644,7 +805,7 @@ class TemporalEngine:
             run_fn = self._runner(program, pattern, merge,
                                   int(tiles.shape[0]))
             xs, final, merged, ss, lsw = self._dispatch(
-                run_fn, tiles, btiles, x0
+                run_fn, tiles, btiles, x0, *self._struct
             )
 
         bg = self.bg
@@ -660,6 +821,7 @@ class TemporalEngine:
                 "supersteps": np.asarray(ss),
                 "local_sweeps": np.asarray(lsw),
             },
+            occupancy=occ,
             _n_published=int(bg.n_out.sum()),
             _n_parts=bg.n_parts,
             _num_vertices=len(bg.part_of),

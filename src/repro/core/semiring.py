@@ -46,6 +46,14 @@ class Semiring:
         """y[idx] <- add(y[idx], vals) with duplicate indices combined."""
         raise NotImplementedError
 
+    def segment_reduce(
+        self, vals: jax.Array, segment_ids: jax.Array, num_segments: int
+    ) -> jax.Array:
+        """add-reduce ``vals`` rows into ``num_segments`` buckets; empty
+        segments hold the semiring zero.  The packed-tile SpMV fallback
+        folds each output block's active-tile partials through this."""
+        raise NotImplementedError
+
     def full(self, shape, dtype=jnp.float32) -> jax.Array:
         return jnp.full(shape, self.zero, dtype)
 
@@ -63,6 +71,10 @@ class _MinPlus(Semiring):
     def scatter_add(self, y, idx, vals):
         return y.at[idx].min(vals)
 
+    def segment_reduce(self, vals, segment_ids, num_segments):
+        return jax.ops.segment_min(vals, segment_ids,
+                                   num_segments=num_segments)
+
 
 class _PlusMul(Semiring):
     def mul(self, x, w):
@@ -76,6 +88,10 @@ class _PlusMul(Semiring):
 
     def scatter_add(self, y, idx, vals):
         return y.at[idx].add(vals)
+
+    def segment_reduce(self, vals, segment_ids, num_segments):
+        return jax.ops.segment_sum(vals, segment_ids,
+                                   num_segments=num_segments)
 
 
 INF = float(np.inf)

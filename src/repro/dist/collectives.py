@@ -69,8 +69,17 @@ def boundary_exchange_bytes(
     backend: str = "dense",
     *,
     dtype_bytes: int = 4,
+    boundary_nnz: int | None = None,
 ) -> Dict[str, float]:
     """Analytic per-superstep comm cost of one boundary exchange.
+
+    ``boundary_nnz`` — the boundary vertices actually published
+    (``BlockedGraph.boundary_nnz``), as opposed to the block-padded
+    ``num_boundary`` buffer length.  When given it replaces
+    ``num_boundary`` in the byte model: that is the payload a
+    sparse-aware exchange moves, and the quantity backend selection
+    should reason about (a padded buffer can overstate a tiny cut by a
+    whole block).
 
     Returns ``{"kind", "hops", "bytes_per_device", "bytes_total"}`` for a
     (num_boundary,)-float buffer combined across ``n_devices`` partitions:
@@ -94,10 +103,14 @@ def boundary_exchange_bytes(
     3
     >>> boundary_exchange_bytes(1000, 4, "host")["kind"]
     'host-gather'
+    >>> boundary_exchange_bytes(1024, 4, "dense",  # padded NB overstates
+    ...                         boundary_nnz=37)["bytes_per_device"]
+    222.0
     """
     if backend not in ("dense", "ring", "host"):
         raise ValueError(f"unknown comm backend {backend!r}")
-    nb = float(num_boundary * dtype_bytes)
+    eff = num_boundary if boundary_nnz is None else boundary_nnz
+    nb = float(eff * dtype_bytes)
     n = int(n_devices)
     if backend == "dense":
         per_dev = 2.0 * (n - 1) / max(n, 1) * nb

@@ -15,6 +15,18 @@ Deployment-time knobs (fixed at write time, as the paper requires):
 §V-C).  Constant attributes are stored once in the template slice and never
 per instance; default-valued attributes are stored per instance only when
 the instance actually overrides them (§V-B value inheritance).
+
+Block-sparse tile maps (``sparse_absent=``): for each named edge
+attribute, deployment additionally records one ``tilemap_<attr>.npz``
+slice at the collection root holding the PER-PACK nonzero-tile maps —
+which (partition, tile) blocks of the blocked layout
+(``repro.core.blocked.build_blocked`` on this collection's partitioning)
+contain at least one edge whose value differs from the declared *absent*
+value in that instance.  ``GoFSStore.load_blocked(...,
+layout="sparse")`` consumes these maps to emit packed
+:class:`~repro.core.blocked.SparseBlocked` tensors without re-scanning
+the values, and ``load_blocked_stream`` uses them to pin a stream-wide
+pow2 tile bucket before any value slice is read.
 """
 from __future__ import annotations
 
@@ -38,14 +50,63 @@ def attr_slice_name(kind: str, attr: str, b: int, pack: int) -> str:
     return f"attr_{kind}_{attr}_b{b}_t{pack}"
 
 
+def tile_map_name(attr: str) -> str:
+    return f"tilemap_{attr}"
+
+
+def _write_tile_maps(
+    tsg: TimeSeriesGraph,
+    cfg: GraphConfig,
+    root: str,
+    assign: np.ndarray,
+    sparse_absent: Dict[str, float],
+    n_packs: int,
+    ipack: int,
+) -> None:
+    """Record per-pack nonzero-tile maps for the named edge attributes.
+
+    One ``tilemap_<attr>.npz`` at the collection root per attribute: the
+    blocked tile index fingerprint (``tiles_rc``/``btiles_rc`` +
+    ``block_size``, so a reader can verify its ``BlockedGraph`` matches
+    the deployment's) plus, per time pack *k*, ``local_k``
+    (rows, P, T) and ``boundary_k`` (rows, P, Tb) uint8 active-tile maps
+    relative to the attribute's declared absent value."""
+    from repro.core.blocked import build_blocked
+
+    tmpl = tsg.template
+    bg = build_blocked(tmpl, assign, cfg.block_size)
+    n_inst = len(tsg)
+    for name, absent in sparse_absent.items():
+        tmpl.edge_attr(name)  # KeyError on unknown attribute
+        arrs: Dict[str, np.ndarray] = {
+            "tiles_rc": bg.tiles_rc,
+            "btiles_rc": bg.btiles_rc,
+            "block_size": np.asarray(bg.block_size, np.int64),
+            "absent": np.asarray(absent, np.float64),
+            "n_packs": np.asarray(n_packs, np.int64),
+        }
+        for k in range(n_packs):
+            t0, t1 = k * ipack, min((k + 1) * ipack, n_inst)
+            w = np.stack([tsg.edge_values(t, name) for t in range(t0, t1)])
+            act_l, act_b = bg.active_tile_maps(w, zero=float(absent))
+            arrs[f"local_{k}"] = act_l.astype(np.uint8)
+            arrs[f"boundary_{k}"] = act_b.astype(np.uint8)
+        write_array_slice(os.path.join(root, tile_map_name(name)), arrs)
+
+
 def deploy_collection(
     tsg: TimeSeriesGraph,
     cfg: GraphConfig,
     root: str,
     *,
     assign: Optional[np.ndarray] = None,
+    sparse_absent: Optional[Dict[str, float]] = None,
 ) -> Dict:
     """Partition, bin-pack, time-pack, and write the collection to disk.
+
+    ``sparse_absent``: {edge attribute -> absent value} — for each entry a
+    per-pack nonzero-tile map slice is recorded at the root (see module
+    docstring), enabling the store's block-sparse staging path.
 
     Returns the global metadata dict (also written to collection.json).
     """
@@ -159,5 +220,11 @@ def deploy_collection(
             "n_bins": len(bins),
         }
 
+    if sparse_absent:
+        _write_tile_maps(tsg, cfg, root, assign, sparse_absent,
+                         n_packs, ipack)
+        global_meta["sparse_absent"] = {
+            k: float(v) for k, v in sparse_absent.items()
+        }
     write_json_slice(os.path.join(root, "collection.json"), global_meta)
     return global_meta

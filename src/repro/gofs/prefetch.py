@@ -66,15 +66,32 @@ THREAD_PREFIX = "gofs-prefetch"
 class StagedChunk:
     """A contiguous run of staged instances, ready for the engine.
 
-    The chunk owns ``tiles``/``btiles``: the prefetcher never touches them
-    again after handoff, so consumers may alias them (``jnp.asarray``)
-    for as long as they hold the chunk.
+    The chunk owns ``tiles``/``btiles`` (and, for the block-sparse layout,
+    the tile-index arrays): the prefetcher never touches them again after
+    handoff, so consumers may alias them (``jnp.asarray``) for as long as
+    they hold the chunk.
+
+    Dense layout: ``tiles``/``btiles`` span the full template tile axis
+    and the index fields are ``None``.  Sparse layout
+    (``repro.core.blocked.SparseBlocked`` fields): the tile axes are
+    packed pow2 buckets and ``rows``/``cols``/``brows``/``bcols`` carry
+    the per-instance active-tile index (``-1`` padding).
     """
 
     start: int  # first (visible) instance index covered by this chunk
     count: int
-    tiles: np.ndarray  # (count, P, T, B, B) local adjacency tiles
-    btiles: np.ndarray  # (count, P, Tb, B, B) boundary tiles
+    tiles: np.ndarray  # (count, P, T|K, B, B) local adjacency tiles
+    btiles: np.ndarray  # (count, P, Tb|Kb, B, B) boundary tiles
+    rows: Optional[np.ndarray] = None  # (count, P, K) int32, sparse only
+    cols: Optional[np.ndarray] = None  # (count, P, K)
+    brows: Optional[np.ndarray] = None  # (count, P, Kb)
+    bcols: Optional[np.ndarray] = None  # (count, P, Kb)
+    nnz: Optional[np.ndarray] = None  # (count, P) active local tiles
+    bnnz: Optional[np.ndarray] = None  # (count, P) active boundary tiles
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.rows is not None
 
 
 # reader(start, end) -> (end - start, E) float32 edge weights for the
@@ -105,9 +122,13 @@ class SlicePrefetcher:
         prefetch_depth: int = 2,
         chunk_instances: int = 1,
         num_workers: int = 1,
+        layout: str = "dense",
+        bucket: Optional[int] = None,
+        bbucket: Optional[int] = None,
     ):
         assert prefetch_depth >= 1, "prefetch_depth must be >= 1"
         assert chunk_instances >= 1 and num_workers >= 1
+        assert layout in ("dense", "sparse"), layout
         self.bg = bg
         self.reader = reader
         self.num_instances = int(num_instances)
@@ -115,6 +136,14 @@ class SlicePrefetcher:
         self.prefetch_depth = int(prefetch_depth)
         self.chunk_instances = int(chunk_instances)
         self.num_workers = int(num_workers)
+        # block-sparse staging: pack only active tiles per chunk.  A shared
+        # ``bucket``/``bbucket`` (e.g. precomputed from GoFS-recorded tile
+        # maps or a whole-batch activity scan) keeps every chunk on one jit
+        # shape; left None, each chunk picks its own pow2 bucket — still at
+        # most O(log T) distinct shapes over the stream.
+        self.layout = layout
+        self.bucket = bucket
+        self.bbucket = bbucket
         self._spans: List[Tuple[int, int]] = [
             (s, min(s + self.chunk_instances, self.num_instances))
             for s in range(0, self.num_instances, self.chunk_instances)
@@ -135,16 +164,24 @@ class SlicePrefetcher:
         prefetch_depth: int = 2,
         chunk_instances: int = 1,
         num_workers: int = 1,
+        layout: str = "dense",
+        bucket: Optional[int] = None,
+        bbucket: Optional[int] = None,
     ) -> "SlicePrefetcher":
         """Prefetch from an in-memory (I, E) weight matrix (the fills —
         the expensive host-side scatter — still overlap the engine run)."""
         w = np.asarray(weights, np.float32)
         if w.ndim == 1:
             w = w[None]
+        if layout == "sparse" and bucket is None:
+            # the weights are all in memory: one cheap activity scan pins
+            # a batch-wide bucket so every chunk shares one jit shape
+            bucket, bbucket = bg.sparse_buckets(w, zero=zero)
         return cls(
             bg, lambda s, e: w[s:e], w.shape[0], zero=zero,
             prefetch_depth=prefetch_depth, chunk_instances=chunk_instances,
-            num_workers=num_workers,
+            num_workers=num_workers, layout=layout, bucket=bucket,
+            bbucket=bbucket,
         )
 
     # ------------------------------------------------------------ staging
@@ -154,8 +191,25 @@ class SlicePrefetcher:
         consumer's execution)."""
         s, e = span
         n = e - s
-        lt_buf, bt_buf = self.bg.alloc_batch_buffers(n)
         w = self.reader(s, e)
+        if self.layout == "sparse":
+            out_l = out_b = None
+            if self.bucket is not None and self.bbucket is not None:
+                out_l, out_b = self.bg.alloc_batch_buffers(
+                    n, bucket=self.bucket, bbucket=self.bbucket
+                )
+            tiles, rows, cols, nnz = self.bg.fill_local_batch_sparse(
+                w, zero=self.zero, bucket=self.bucket, out=out_l
+            )
+            btiles, brows, bcols, bnnz = self.bg.fill_boundary_batch_sparse(
+                w, zero=self.zero, bucket=self.bbucket, out=out_b
+            )
+            return StagedChunk(
+                start=s, count=n, tiles=tiles, btiles=btiles,
+                rows=rows, cols=cols, brows=brows, bcols=bcols,
+                nnz=nnz, bnnz=bnnz,
+            )
+        lt_buf, bt_buf = self.bg.alloc_batch_buffers(n)
         tiles = self.bg.fill_local_batch(w, zero=self.zero, out=lt_buf)
         btiles = self.bg.fill_boundary_batch(w, zero=self.zero, out=bt_buf)
         return StagedChunk(start=s, count=n, tiles=tiles, btiles=btiles)

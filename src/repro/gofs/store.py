@@ -18,7 +18,7 @@ from repro.core.graph import AttributeDef
 from repro.core.ibsp import InstanceProvider, SubgraphInstance
 from repro.core.subgraph import SubgraphTopology
 from repro.gofs.cache import SliceCache
-from repro.gofs.layout import attr_slice_name
+from repro.gofs.layout import attr_slice_name, tile_map_name
 from repro.gofs.slices import ReadStats, read_array_slice, read_json_slice
 
 
@@ -244,12 +244,90 @@ class GoFSStore(InstanceProvider):
                         out[i, v_ids] = sl["vals"][r]
         return out
 
-    def load_blocked(
+    # -------------------------------------------------- sparse tile maps
+    def edge_tile_maps(self, name: str) -> Optional[Dict[str, np.ndarray]]:
+        """The deployment-recorded per-pack nonzero-tile maps for an edge
+        attribute (``repro.gofs.layout`` ``sparse_absent=``), or ``None``
+        when the deployment recorded none."""
+        path = os.path.join(self.root, tile_map_name(name))
+        if not os.path.exists(path + ".npz"):
+            return None
+        return self.cache.get(
+            f"tilemap/{name}", lambda: read_array_slice(path, self.stats)
+        )
+
+    def _recorded_activity(
+        self, bg, name: str, zero: float,
+        t_indices: Sequence[int],
+    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Assemble (act_local (I, P, T), act_boundary (I, P, Tb)) for the
+        visible-instance subset from the recorded per-pack maps.  Returns
+        ``None`` when no map was recorded, the absent value differs from
+        the requested semiring ``zero``, or the recorded blocked structure
+        does not match the caller's ``bg`` (different partitioning, block
+        size, or vertex order) — callers then fall back to scanning the
+        staged values, which is always correct."""
+        maps = self.edge_tile_maps(name)
+        if maps is None:
+            return None
+        if float(maps["absent"]) != float(zero):
+            return None
+        if int(maps["block_size"]) != bg.block_size:
+            return None
+        if (maps["tiles_rc"].shape != bg.tiles_rc.shape
+                or not np.array_equal(maps["tiles_rc"], bg.tiles_rc)
+                or maps["btiles_rc"].shape != bg.btiles_rc.shape
+                or not np.array_equal(maps["btiles_rc"], bg.btiles_rc)):
+            return None
+        n = len(t_indices)
+        act_l = np.zeros((n, bg.n_parts, bg.t_max), bool)
+        act_b = np.zeros((n, bg.n_parts, bg.tb_max), bool)
+        for j, i in enumerate(t_indices):
+            k, r = divmod(self._t_map[i], self.ipack)
+            act_l[j] = maps[f"local_{k}"][r].astype(bool)
+            act_b[j] = maps[f"boundary_{k}"][r].astype(bool)
+        return act_l, act_b
+
+    def sparse_buckets(
         self, bg, name: str, *, zero: float = np.inf
-    ) -> Tuple[np.ndarray, np.ndarray]:
-        """Stage an edge attribute straight into blocked instance tensors:
-        (tiles (I, P, T, B, B), btiles (I, P, Tb, B, B))."""
+    ) -> Optional[Tuple[int, int]]:
+        """Pow2 (local, boundary) tile buckets for the visible collection,
+        derived from the recorded tile maps ALONE — no value slice is
+        read, so a stream can pin one jit shape before staging starts.
+        ``None`` when no usable map is recorded."""
+        from repro.core.blocked import pow2_bucket
+
+        acts = self._recorded_activity(
+            bg, name, zero, range(self.num_timesteps())
+        )
+        if acts is None:
+            return None
+        act_l, act_b = acts
+        lmax = int(act_l.sum(-1).max()) if act_l.size else 0
+        bmax = int(act_b.sum(-1).max()) if act_b.size else 0
+        return pow2_bucket(lmax), pow2_bucket(bmax)
+
+    def load_blocked(
+        self, bg, name: str, *, zero: float = np.inf, layout: str = "dense"
+    ):
+        """Stage an edge attribute straight into blocked instance tensors.
+
+        ``layout="dense"``: (tiles (I, P, T, B, B), btiles (I, P, Tb, B,
+        B)) spanning every template tile slot.  ``layout="sparse"``: a
+        packed :class:`~repro.core.blocked.SparseBlocked` batch holding
+        only each instance's active tiles; the deployment-recorded
+        per-pack tile maps (``sparse_absent=`` at deploy time) skip the
+        activity re-scan when they match ``bg`` and ``zero``."""
+        assert layout in ("dense", "sparse"), layout
         w = self.edge_attr_matrix(name)
+        if layout == "sparse":
+            acts = self._recorded_activity(
+                bg, name, zero, range(self.num_timesteps())
+            )
+            act_l, act_b = acts if acts is not None else (None, None)
+            return bg.stage_sparse(
+                w, zero=zero, act_local=act_l, act_boundary=act_b,
+            )
         return bg.fill_local_batch(w, zero=zero), \
             bg.fill_boundary_batch(w, zero=zero)
 
@@ -262,6 +340,7 @@ class GoFSStore(InstanceProvider):
         prefetch_depth: int = 2,
         chunk_instances: Optional[int] = None,
         num_workers: int = 1,
+        layout: str = "dense",
     ):
         """Streaming variant of ``load_blocked``: a
         :class:`~repro.gofs.prefetch.SlicePrefetcher` yielding instance
@@ -272,9 +351,21 @@ class GoFSStore(InstanceProvider):
         ``chunk_instances`` defaults to the deployment's temporal pack size
         (``instances_per_slice``) — the natural disk grain: one chunk reads
         each (partition, bin) attribute slice of one time pack exactly once.
+
+        ``layout="sparse"`` stages packed active-tile chunks; when the
+        deployment recorded tile maps for this attribute, the stream-wide
+        pow2 bucket is pinned from the maps up front (one jit shape for
+        the whole stream, no value read needed), else each chunk buckets
+        itself.
         """
         from repro.gofs.prefetch import SlicePrefetcher
 
+        assert layout in ("dense", "sparse"), layout
+        bucket = bbucket = None
+        if layout == "sparse":
+            buckets = self.sparse_buckets(bg, name, zero=zero)
+            if buckets is not None:
+                bucket, bbucket = buckets
         return SlicePrefetcher(
             bg,
             lambda s, e: self.edge_attr_rows(name, range(s, e)),
@@ -283,6 +374,9 @@ class GoFSStore(InstanceProvider):
             prefetch_depth=prefetch_depth,
             chunk_instances=int(chunk_instances or self.ipack),
             num_workers=num_workers,
+            layout=layout,
+            bucket=bucket,
+            bbucket=bbucket,
         )
 
     # ---------------- internals -------------------------------------------

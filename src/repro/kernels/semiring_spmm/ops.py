@@ -16,7 +16,7 @@ from repro.kernels.semiring_spmm.ref import spmv_blocked_ref
 
 
 def spmv_blocked(
-    tiles: jax.Array,  # (T, B, B)
+    tiles: jax.Array,  # (T, B, B) — dense template or packed active tiles
     rows: jax.Array,  # (T,)
     cols: jax.Array,  # (T,)
     x: jax.Array,  # (nvb * B,)
@@ -25,13 +25,18 @@ def spmv_blocked(
     n_out_blocks: int | None = None,
     use_pallas: bool = False,
     interpret: bool | None = None,
+    nnz: jax.Array | None = None,  # valid-tile count of a packed list
 ) -> jax.Array:
+    """``nnz`` (block-sparse packed lists only) lets the Pallas kernel skip
+    the compute of pow2-bucket padding steps; the jnp oracle's segment
+    reduce already routes padding to a dropped overflow segment, so it
+    ignores ``nnz``."""
     nob = n_out_blocks if n_out_blocks is not None else x.shape[0] // tiles.shape[1]
     if use_pallas:
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         return spmv_blocked_pallas(
             tiles, rows, cols, x,
-            sr_name=sr.name, n_out_blocks=nob, interpret=interpret,
+            sr_name=sr.name, n_out_blocks=nob, interpret=interpret, nnz=nnz,
         )
     return spmv_blocked_ref(tiles, rows, cols, x, sr, n_out_blocks=nob)

@@ -1,10 +1,17 @@
-"""Pure-jnp oracle for the blocked semiring SpMV.
+"""Pure-jnp oracle for the blocked semiring SpMV — a segment-reduce over
+the (packed) tile list.
 
 y[cb*B + j] = add-reduce over tiles t with col(t)==cb, over i of
               mul(x[row(t)*B + i], tiles[t, i, j])
 
-Padding tiles carry (rows, cols) == -1 and values == semiring zero; they are
-masked out explicitly so the oracle is safe for any fill value.
+The tile axis may be the dense template list (every tile slot of the
+partition) or a block-sparse packed list (only the instance's active
+tiles, pow2-bucket padded — ``repro.core.blocked.SparseBlocked``): the
+oracle only ever walks the tiles it is given, folding each output block's
+partials with the semiring's segment reduce.  Padding tiles carry
+(rows, cols) == -1 and values == semiring zero; they are routed to an
+overflow segment that is sliced off, so the oracle is safe for any fill
+value.
 """
 from __future__ import annotations
 
@@ -27,9 +34,10 @@ def spmv_blocked_ref(
     nob = n_out_blocks if n_out_blocks is not None else nvb
     xb = x.reshape(nvb, B)[jnp.maximum(rows, 0)]  # (T, B)
     prod = sr.mul(xb[:, :, None], tiles)  # (T, B, B)
-    part = sr.add_reduce(prod, 1)  # (T, B)
-    part = jnp.where((cols >= 0)[:, None], part,
-                     jnp.asarray(sr.zero, prod.dtype))
-    y = sr.full((nob, B), prod.dtype)
-    y = sr.scatter_add(y, jnp.maximum(cols, 0), part)
+    part = sr.add_reduce(prod, 1)  # (T, B) per-tile output-block partial
+    # segment-reduce the partials by output block; padding tiles fold into
+    # an overflow segment (nob) that never reaches the caller, and blocks
+    # with no tiles come back as the semiring zero (segment identity).
+    seg = jnp.where(cols >= 0, cols, nob)
+    y = sr.segment_reduce(part, seg, nob + 1)[:nob]
     return y.reshape(-1)

@@ -36,8 +36,16 @@ def mesh_dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+# Below ~64 KiB of actual cut payload the DCI exchange is latency-bound,
+# not bandwidth-bound: the all-reduce tree's 2(P-1) short hops beat the
+# ring's P-1 full-buffer circulations even across pods.
+RING_MIN_CUT_BYTES = 1 << 16
+
+
 def recommended_comm(
-    mesh: Optional[Mesh], model_axes: Tuple[str, ...] = ("model",)
+    mesh: Optional[Mesh], model_axes: Tuple[str, ...] = ("model",),
+    *,
+    boundary_nnz: Optional[int] = None,
 ) -> str:
     """Default boundary-exchange backend for a placement
     (``repro.core.comm``; full selection table in docs/ARCHITECTURE.md).
@@ -48,16 +56,28 @@ def recommended_comm(
     with ``data`` and the model axis stays intra-pod on ICI, so the dense
     all-reduce remains the right default there.
 
+    ``boundary_nnz`` — the boundary vertices actually published
+    (``BlockedGraph.boundary_nnz``), NOT the block-padded buffer length:
+    sparse cuts flip the DCI recommendation back to ``dense`` when the
+    real payload (``4·nnz`` bytes) is too small for byte volume to beat
+    hop latency (``RING_MIN_CUT_BYTES``).
+
     * no mesh                      -> ``"host"``  (mesh-free CPU cluster:
       combine per-partition buffers on the host, no shard_map at all)
-    * ``pod`` among the exchange axes -> ``"ring"`` (the combine crosses
-      DCI; neighbor-to-neighbor hops keep each slow link at one
-      buffer/hop)
+    * ``pod`` among the exchange axes and the cut large (or unknown)
+      -> ``"ring"`` (the combine crosses DCI; neighbor-to-neighbor hops
+      keep each slow link at one buffer/hop)
     * otherwise                    -> ``"dense"`` (ICI all-reduce is
       latency-optimal for the O(cut) boundary buffer)
+
+    >>> recommended_comm(None)
+    'host'
     """
     if mesh is None:
         return "host"
     if "pod" in model_axes:
+        if (boundary_nnz is not None
+                and boundary_nnz * 4 < RING_MIN_CUT_BYTES):
+            return "dense"
         return "ring"
     return "dense"

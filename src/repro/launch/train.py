@@ -18,8 +18,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+COMPRESSORS = ("none", "int8", "topk")
+
+
+def make_compressor(compress, *, topk_frac: float = 0.01):
+    """Resolve the ``--compress`` choice to a gradient compressor.
+
+    Accepts the legacy boolean form (``True`` = int8) and the named
+    backends: ``int8`` (symmetric quantization) or ``topk`` (magnitude
+    sparsification at ``topk_frac``), both with error feedback
+    (``repro.dist.compression``).  Returns ``None`` for no compression.
+    """
+    if compress in (None, False, "none"):
+        return None
+    if compress in (True, "int8"):
+        return Int8Compressor()
+    if compress == "topk":
+        return TopKCompressor(frac=topk_frac)
+    raise ValueError(
+        f"unknown compressor {compress!r}; pick from {COMPRESSORS}"
+    )
+
 from repro.configs import get_config
-from repro.dist.compression import Int8Compressor
+from repro.dist.compression import Int8Compressor, TopKCompressor
 from repro.dist.sharding import CPU_RUNTIME, Runtime, default_rules, shardings_for_schema
 from repro.models import init_model_params, model_schema
 from repro.train import checkpoint as ckpt
@@ -40,14 +61,15 @@ def train_loop(
     ckpt_every: int = 50,
     keep: int = 3,
     accum_steps: int = 1,
-    compress: bool = False,
+    compress=False,  # False/"none" | True/"int8" | "topk"
+    topk_frac: float = 0.01,
     seed: int = 0,
     log_every: int = 10,
     max_step_retries: int = 2,
 ) -> Dict[str, Any]:
     """Returns {"params", "opt_state", "history", "resumed_from"}."""
     oc = oc or OptConfig(total_steps=steps)
-    compressor = Int8Compressor() if compress else None
+    compressor = make_compressor(compress, topk_frac=topk_frac)
     step_fn = make_train_step(
         cfg, runtime, oc, accum_steps=accum_steps, compressor=compressor
     )
@@ -115,7 +137,12 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--accum", type=int, default=1)
-    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--compress", nargs="?", const="int8", default="none",
+                    choices=COMPRESSORS,
+                    help="gradient all-reduce compression (bare flag = "
+                         "int8; 'topk' keeps --topk-frac by magnitude "
+                         "with error feedback)")
+    ap.add_argument("--topk-frac", type=float, default=0.01)
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
 
@@ -128,6 +155,7 @@ def main() -> None:
         cfg, steps=args.steps, global_batch=args.batch, seq_len=args.seq,
         oc=oc, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         accum_steps=args.accum, compress=args.compress,
+        topk_frac=args.topk_frac,
     )
     losses = [h["loss"] for h in out["history"]]
     print(f"[train] done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")

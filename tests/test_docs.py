@@ -57,8 +57,9 @@ def test_named_module_paths_exist(md):
 
 @pytest.mark.parametrize(
     "modname",
-    ["repro.core.engine", "repro.core.comm", "repro.gofs.prefetch",
-     "repro.dist.collectives"],
+    ["repro.core.engine", "repro.core.comm", "repro.core.blocked",
+     "repro.gofs.prefetch", "repro.dist.collectives",
+     "repro.launch.mesh"],
 )
 def test_docstring_examples_run(modname):
     """The per-pattern snippets documented on TemporalEngine /

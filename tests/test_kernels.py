@@ -58,6 +58,68 @@ def test_spmv_empty_structure():
     assert np.all(np.isinf(np.asarray(y)))
 
 
+@pytest.mark.parametrize("sr", [MIN_PLUS, PLUS_MUL], ids=lambda s: s.name)
+@pytest.mark.parametrize("nnz", [0, 3, 7])
+def test_spmv_packed_walk_nnz(sr, nnz):
+    """Block-sparse packed list (interpret mode): the Pallas walk with the
+    ``nnz`` padding-skip == the walk without it == the jnp segment-reduce
+    oracle, for every semiring and valid-tile count (0 = fully padded)."""
+    B, nvb, T = 8, 4, 7
+    cols = np.sort(RNG.integers(0, nvb, nnz)).astype(np.int32)
+    rows = RNG.integers(0, nvb, nnz).astype(np.int32)
+    rows = np.concatenate([rows, np.full(T - nnz, -1, np.int32)])
+    cols = np.concatenate([cols, np.full(T - nnz, -1, np.int32)])
+    tiles = np.full((T, B, B), sr.zero, np.float32)
+    tiles[:nnz] = RNG.random((nnz, B, B))
+    x = RNG.random(nvb * B).astype(np.float32)
+    args = (jnp.asarray(tiles), jnp.asarray(rows), jnp.asarray(cols),
+            jnp.asarray(x), sr)
+    y_ref = np.asarray(spmv_blocked(*args, use_pallas=False))
+    y_pal = np.asarray(spmv_blocked(*args, use_pallas=True, interpret=True))
+    y_nnz = np.asarray(spmv_blocked(
+        *args, use_pallas=True, interpret=True,
+        nnz=jnp.asarray(nnz, jnp.int32),
+    ))
+    assert np.array_equal(y_pal, y_nnz)
+    fin = np.isfinite(y_ref)
+    assert np.array_equal(np.isfinite(y_nnz), fin)
+    np.testing.assert_allclose(y_nnz[fin], y_ref[fin], rtol=2e-5, atol=2e-5)
+
+
+def test_spmv_packed_subset_matches_dense_walk():
+    """Dropping all-zero tiles from the walked list must not change the
+    output (the sparse layout's core claim, at kernel level, bitwise)."""
+    B, nvb = 8, 4
+    T = 10
+    cols = np.sort(RNG.integers(0, nvb, T)).astype(np.int32)
+    rows = RNG.integers(0, nvb, T).astype(np.int32)
+    for sr in (MIN_PLUS, PLUS_MUL):
+        tiles = np.full((T, B, B), sr.zero, np.float32)
+        live = RNG.random(T) < 0.5
+        for t in np.nonzero(live)[0]:
+            tiles[t] = RNG.random((B, B))
+        x = RNG.random(nvb * B).astype(np.float32)
+        k = int(live.sum())
+        packed = np.full((T, B, B), sr.zero, np.float32)
+        prows = np.full(T, -1, np.int32)
+        pcols = np.full(T, -1, np.int32)
+        packed[:k] = tiles[live]
+        prows[:k] = rows[live]
+        pcols[:k] = cols[live]
+        for use_pallas in (False, True):
+            kw = dict(use_pallas=use_pallas, n_out_blocks=nvb)
+            if use_pallas:
+                kw["interpret"] = True
+            y_dense = np.asarray(spmv_blocked(
+                jnp.asarray(tiles), jnp.asarray(rows), jnp.asarray(cols),
+                jnp.asarray(x), sr, **kw))
+            y_packed = np.asarray(spmv_blocked(
+                jnp.asarray(packed), jnp.asarray(prows), jnp.asarray(pcols),
+                jnp.asarray(x), sr,
+                nnz=jnp.asarray(k, jnp.int32) if use_pallas else None, **kw))
+            assert np.array_equal(y_dense, y_packed), (sr.name, use_pallas)
+
+
 # ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
