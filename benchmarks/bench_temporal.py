@@ -25,6 +25,11 @@ docs/BENCHMARKS.md):
                       in-process + dense-vs-ring on a forced host mesh
 * mesh              — stacked vs temporal-parallel mesh execution on forced
                       host devices (subprocess; tracks scaling regressions)
+* plan_overhead     — GopherSession.plan cost (auto-selection + cost
+                      models, metadata only) vs executing the planned run
+* shared_staging    — run_many over 3 analytics (sssp, nhop, tracking):
+                      shared staging passes/bytes vs 3 independent runs,
+                      results asserted identical
 
 ``run(check=True)`` (CLI: ``--check``, also via ``benchmarks.run temporal
 --check``) re-measures and compares against the committed
@@ -171,6 +176,82 @@ def run(check: bool = False) -> None:
         "instances": I, "prefetch_depth": 2,
         "sync_s": t_sync, "async_s": t_async,
         "speedup": t_sync / max(t_async, 1e-12),
+    }
+
+    # ---- gopher session: plan overhead ------------------------------------
+    # planning is metadata-only (blocked structure + recorded maps + comm
+    # cost model); the row gates that it stays a rounding error next to
+    # the run it configures.
+    from repro.gopher import GopherSession
+
+    t0_sess = time.perf_counter()
+    sess_po = GopherSession(store, block_size=BENCH_GRAPH.block_size)
+    t_sess_init = time.perf_counter() - t0_sess
+    t_plan = _time(lambda: sess_po.plan("sssp", source=0))
+    plan_po = sess_po.plan("sssp", source=0)
+    t_planned_run = _time(lambda: sess_po.run(plan_po), repeats=2)
+    emit("temporal/gopher_plan", t_plan * 1e6,
+         f"staging={plan_po.staging.value};layout={plan_po.layout.value}")
+    emit("temporal/gopher_planned_run", t_planned_run * 1e6,
+         f"plan_frac={t_plan / max(t_planned_run, 1e-12):.4f}")
+    results["plan_overhead"] = {
+        "session_init_s": t_sess_init,
+        "plan_s": t_plan,
+        "run_s": t_planned_run,
+        "frac": t_plan / max(t_planned_run, 1e-12),
+    }
+
+    # ---- gopher session: shared staging (run_many) ------------------------
+    # three analytics over one collection: sssp + nhop share the latency
+    # batch, nhop's hop probe + tracking share the unit-weight batch, so
+    # the shared pass stages each distinct batch once while 3 independent
+    # runs stage 2x each.  The byte ratio is shape-derived (deterministic);
+    # results are asserted identical before timing counts.
+    def _sh_session():
+        return GopherSession(store_for("s4-i6", cache_slots=14),
+                             block_size=BENCH_GRAPH.block_size)
+
+    def _sh_plans(s):
+        return [s.plan("sssp", source=0),
+                s.plan("nhop", source=0, n_hops=6),
+                s.plan("tracking", plate=3, initial_vertex=0)]
+
+    s_sh = _sh_session()
+    t0 = time.perf_counter()
+    r_shared = s_sh.run_many(_sh_plans(s_sh))
+    t_shared = time.perf_counter() - t0
+    rep_sh = dict(s_sh.last_run_report)
+
+    t0 = time.perf_counter()
+    bytes_ind = passes_ind = 0
+    singles = []
+    for p in _sh_plans(_sh_session()):
+        s1 = _sh_session()
+        singles.append(s1.run(p))
+        bytes_ind += s1.last_run_report["staged_bytes"]
+        passes_ind += s1.last_run_report["staging_passes"]
+    t_indep = time.perf_counter() - t0
+    for a, b in zip(r_shared, singles):  # sharing must be invisible
+        if a.engine is not None and b.engine is not None:
+            assert np.array_equal(a.engine.values, b.engine.values)
+        for k in a.output:
+            assert np.array_equal(a.output[k], b.output[k]), k
+    ratio = bytes_ind / max(rep_sh["staged_bytes"], 1)
+    emit("temporal/shared_staging", t_shared * 1e6,
+         f"bytes_ratio={ratio:.2f}x;passes={rep_sh['staging_passes']}"
+         f"vs{passes_ind}")
+    emit("temporal/independent_staging", t_indep * 1e6,
+         f"speedup={t_indep / max(t_shared, 1e-12):.2f}x")
+    results["shared_staging"] = {
+        "analytics": rep_sh["analytics"],
+        "staged_bytes_shared": rep_sh["staged_bytes"],
+        "staged_bytes_independent": bytes_ind,
+        "staged_bytes_ratio": ratio,
+        "staging_passes_shared": rep_sh["staging_passes"],
+        "staging_passes_independent": passes_ind,
+        "shared_s": t_shared,
+        "independent_s": t_indep,
+        "speedup": t_indep / max(t_shared, 1e-12),
     }
 
     # ---- runner: per-instance pagerank loop vs one engine scan ------------
@@ -371,6 +452,10 @@ THRESHOLDS = {
     # deterministic (shape-derived): the acceptance targets themselves
     ("sparse", "staged_bytes_ratio"): ("min", 4.0, 0.9),
     ("sparse", "occupancy"): ("max", 0.25, None),
+    # gopher session: planning must stay a rounding error vs the run it
+    # configures; shared staging must amortize (byte ratio shape-derived)
+    ("plan_overhead", "frac"): ("max", 0.1, None),
+    ("shared_staging", "staged_bytes_ratio"): ("min", 1.5, 0.9),
 }
 
 

@@ -3,24 +3,27 @@
 1. Generate a synthetic time-series graph collection (TR-like, paper §VI-A).
 2. Deploy it to GoFS with temporal packing + subgraph binning (paper §V).
 3. Run temporal SSSP through the iBSP engine ON the GoFS store (Gopher).
-4. Run the same analytics on the TPU-adapted blocked engine and compare.
-5. One unified engine, all three iBSP patterns — under any comm backend.
-6. Double-buffered GoFS staging: slice reads overlap engine execution.
+4. The declarative session API: ``GopherSession.plan`` auto-selects
+   layout/comm/staging from the deployment's recorded metadata,
+   ``explain()`` shows the decisions + cost estimates, ``run()`` executes.
+5. The explicit engine, for contrast: the same analytic hand-assembled
+   from ``GoFSStore.load_blocked`` + ``TemporalEngine`` — what the
+   session automates (and must match bitwise).
+6. Shared staging: ``run_many`` executes three analytics staging each
+   distinct batch once (the Kairos-style shared-scan amortization —
+   SSSP and N-hop share the latency tiles outright).
 
   PYTHONPATH=src python examples/quickstart.py
   PYTHONPATH=src python examples/quickstart.py --comm host  # mesh-free
   PYTHONPATH=src python examples/quickstart.py --layout sparse
 
-``--comm`` swaps the boundary-exchange backend (dense | ring | host; see
-``repro.core.comm``) — identical results, different byte movement.
-``--layout sparse`` stages packed active tiles instead of dense template
-tensors (``repro.core.blocked.SparseBlocked``) — identical results,
-printing the measured tile occupancy.
+``--comm`` / ``--layout`` override the corresponding planned knobs
+(identical results either way — the plan records them as overrides).
 
-The paper-to-code map lives in docs/ARCHITECTURE.md; the engine's pattern
-contracts and runnable per-pattern snippets are in the docstrings of
-``repro.core.engine.TemporalEngine`` / ``SemiringProgram``, the comm
-backends' in ``repro.core.comm``, and the staging pipeline's in
+The paper-to-code map lives in docs/ARCHITECTURE.md; the session API's
+registry → planner → executor walk-through is in its "Gopher session
+API" section, and the runnable per-layer snippets are in the docstrings
+of ``repro.gopher.session``, ``repro.core.engine.TemporalEngine``, and
 ``repro.gofs.prefetch.SlicePrefetcher`` (all doctested — see
 tests/test_docs.py).
 """
@@ -31,13 +34,12 @@ import numpy as np
 
 from repro.configs.base import GraphConfig
 from repro.core.algorithms import sssp
-from repro.core.blocked import build_blocked
 from repro.core.generator import generate_collection
-from repro.core.partition import edge_cut, partition_graph
 from repro.gofs import GoFSStore, deploy_collection
+from repro.gopher import GopherSession
 
 
-def main(comm: str = "dense", layout: str = "dense") -> None:
+def main(comm=None, layout=None) -> None:
     cfg = GraphConfig(
         name="quickstart", num_vertices=2_000, avg_degree=3.0,
         num_instances=6, num_partitions=4, block_size=64,
@@ -51,14 +53,17 @@ def main(comm: str = "dense", layout: str = "dense") -> None:
 
     with tempfile.TemporaryDirectory() as root:
         print("== 2. deploy to GoFS", root)
-        meta = deploy_collection(tsg, cfg, root)
+        # record nonzero-tile maps for latency: the session's planner
+        # prices the sparse layout from these maps without a value read
+        meta = deploy_collection(tsg, cfg, root,
+                                 sparse_absent={"latency": np.inf})
         print(f"   partitions={meta['num_partitions']} "
               f"instances/slice={meta['instances_per_slice']} "
               f"bins/partition={meta['bins_per_partition']}")
 
         print("== 3. Gopher iBSP SSSP on GoFS (sequentially dependent)")
         store = GoFSStore(root, cache_slots=14, vertex_projection=(),
-                          edge_projection=("latency",))
+                          edge_projection=("latency", "active"))
         dists, res = sssp.run_host(store, source_vertex=0)
         d_host = np.full(tmpl.num_vertices, np.inf)
         for g, d in dists.items():
@@ -69,82 +74,71 @@ def main(comm: str = "dense", layout: str = "dense") -> None:
               f"GoFS read {store.stats.slices_read} slices "
               f"({store.cache.stats()['hit_rate']:.0%} cache hits)")
 
-        print("== 4. blocked (TPU-adapted) engine, same analytics")
-        assign = partition_graph(tmpl, cfg.num_partitions, seed=cfg.seed)
-        print(f"   edge cut: {edge_cut(tmpl, assign)}/{tmpl.num_edges}")
-        bg = build_blocked(tmpl, assign, cfg.block_size)
-        w = np.stack([tsg.edge_values(t, "latency") for t in range(len(tsg))])
-        d_blk, stats = sssp.run_blocked(bg, w, 0)
-        print(f"   supersteps/timestep: {stats['supersteps'].tolist()}")
+        print("== 4. declarative session API: plan -> explain -> run")
+        sess = GopherSession(store)
+        plan = sess.plan("sssp", source=0, comm=comm, layout=layout)
+        print("\n".join("   " + ln for ln in plan.explain().splitlines()))
+        r_sssp = sess.run(plan)
+        d_blk = r_sssp.output["final"]
         finite = np.isfinite(d_host)
         assert np.array_equal(np.isfinite(d_blk), finite)
         err = float(np.abs(d_blk[finite] - d_host[finite]).max())
-        print(f"   max |blocked - host| = {err:.2e}  ✓ engines agree")
+        print(f"   max |session - host| = {err:.2e}  ✓ engines agree")
 
-        print(f"== 5. unified temporal engine: one runner, all patterns "
-              f"(comm={comm}, layout={layout})")
+        print("== 5. the explicit engine, for contrast (what plan() automates)")
+        from repro.core.blocked import build_blocked
         from repro.core.engine import (
-            TemporalEngine, min_plus_program, pagerank_program, source_init,
+            TemporalEngine, min_plus_program, source_init,
         )
-        from repro.core.algorithms.pagerank import edge_weights_for_instances
+        from repro.core.partition import edge_cut, partition_graph
 
-        eng = TemporalEngine(bg, comm=comm, layout=layout)
-        # bulk staging: GoFS attribute slices -> (I, P, T, B, B) tensors
-        tiles, btiles = store.load_blocked(bg, "latency")
-        if layout == "sparse":
-            # packed active tiles: same result, O(nnz_tiles) staged bytes
+        assign = partition_graph(tmpl, cfg.num_partitions, seed=cfg.seed)
+        print(f"   edge cut: {edge_cut(tmpl, assign)}/{tmpl.num_edges}")
+        bg = build_blocked(tmpl, assign, cfg.block_size)
+        eng = TemporalEngine(bg, comm=plan.comm.value,
+                             layout=plan.layout.value)
+        if plan.layout.value == "sparse":
             sp = store.load_blocked(bg, "latency", layout="sparse")
             seq = eng.run(min_plus_program("sssp", init=source_init(0)),
                           sparse=sp, pattern="sequential")
-            dense_bytes = tiles.nbytes + btiles.nbytes
-            note = ("" if sp.staged_bytes() < dense_bytes else
-                    " (every latency is finite here, so every tile is "
-                    "live; the sparse win needs temporally sparse "
-                    "activity — see the BENCH_temporal.json sparse row)")
             print(f"   block-sparse staging: tile occupancy "
-                  f"{seq.occupancy:.1%}, staged bytes "
-                  f"{sp.staged_bytes():,} vs dense {dense_bytes:,}{note}")
+                  f"{seq.occupancy:.1%}, staged bytes {sp.staged_bytes():,}")
         else:
+            tiles, btiles = store.load_blocked(bg, "latency")
             seq = eng.run(min_plus_program("sssp", init=source_init(0)),
                           tiles=tiles, btiles=btiles, pattern="sequential")
-        assert np.allclose(seq.final[finite], d_blk[finite])
-        if comm != "dense":
-            # backend swap is invisible: bitwise-identical to the dense
-            # default (the d_blk reference above ran dense)
-            dense_seq = TemporalEngine(bg).run(
-                min_plus_program("sssp", init=source_init(0)),
-                tiles=tiles, btiles=btiles, pattern="sequential")
-            assert np.array_equal(seq.values, dense_seq.values)
-            print(f"   comm={comm} == dense bitwise  ✓ backend is invisible")
-        print(f"   sequential SSSP via engine: {seq.bsp_stats()}")
-        active = np.stack([tsg.edge_values(t, "active")
-                           for t in range(len(tsg))])
-        pw = edge_weights_for_instances(tmpl.src, active, tmpl.num_vertices)
-        ev = eng.run(pagerank_program(tmpl.num_vertices, iters=10), pw,
-                     pattern="eventually", merge="mean")
-        print(f"   eventually PageRank: top vertex over time = "
-              f"{int(ev.merged.argmax())}  ✓ one engine, three patterns")
+        assert np.array_equal(seq.values, r_sssp.engine.values)
+        print("   explicit engine == session bitwise  ✓ the session adds "
+              "decisions, not semantics")
+        print(f"   sequential SSSP stats: {seq.bsp_stats()}")
 
-        print("== 6. double-buffered staging: slice reads overlap execution")
-        stream = store.load_blocked_stream(bg, "latency", prefetch_depth=2,
-                                           layout=layout)
-        seq_async = eng.run(min_plus_program("sssp", init=source_init(0)),
-                            stream=stream, pattern="sequential")
-        assert np.array_equal(seq_async.values, seq.values)
-        print(f"   async staging over {len(tsg)} instances "
-              f"(chunk = {store.ipack}-instance time packs): results "
-              f"bitwise-identical to sync  ✓ staging is invisible")
+        print("== 6. shared staging: three analytics, one pass per batch")
+        plans = [
+            sess.plan("sssp", source=0, comm=comm, layout=layout),
+            sess.plan("nhop", source=0, n_hops=4, comm=comm, layout=layout),
+            sess.plan("pagerank", iters=10, comm=comm),
+        ]
+        many = sess.run_many(plans)
+        rep = sess.last_run_report
+        print(f"   {len(plans)} analytics "
+              f"({', '.join(rep['analytics'])}) staged in "
+              f"{rep['staging_passes']} passes, "
+              f"{rep['staged_bytes']:,} staged bytes")
+        assert np.array_equal(many[0].engine.values, r_sssp.engine.values)
+        top = int(many[2].output["ranks"][0].argmax())
+        print(f"   sssp identical to the solo run  ✓ sharing is invisible; "
+              f"PageRank top vertex (t=0): {top}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--comm", choices=("dense", "ring", "host"),
-                    default="dense",
-                    help="boundary-exchange backend (repro.core.comm)")
+                    default=None,
+                    help="override the planned boundary-exchange backend "
+                         "(repro.core.comm; default: planner-selected)")
     ap.add_argument("--layout", choices=("dense", "sparse"),
-                    default="dense",
-                    help="instance tile layout: dense template tensors or "
-                         "packed active tiles (repro.core.blocked"
-                         ".SparseBlocked)")
+                    default=None,
+                    help="override the planned tile layout "
+                         "(repro.core.blocked.SparseBlocked)")
     args = ap.parse_args()
     main(comm=args.comm, layout=args.layout)

@@ -5,27 +5,29 @@ depot evolves across 2-hour instances; the sequentially dependent iBSP
 carries distances between timesteps (a vertex only improves as new
 conditions are observed — incremental aggregation, §VI-A).
 
+The analytic is declared through the Gopher session API: the session
+partitions + blocks the in-memory collection, ``plan()`` resolves every
+execution knob (with ``--comm``/``--layout`` as overrides), and one
+``run()`` executes the whole sequential pattern.  An explicit
+``TemporalEngine`` block follows for contrast — the session must match it
+bitwise.
+
   PYTHONPATH=src python examples/temporal_sssp.py
   PYTHONPATH=src python examples/temporal_sssp.py --comm host   # mesh-free
   PYTHONPATH=src python examples/temporal_sssp.py --comm ring
   PYTHONPATH=src python examples/temporal_sssp.py --layout sparse
 
-``--comm`` swaps the boundary-exchange backend (repro.core.comm): min-plus
-results are bitwise identical under every backend — the script asserts it.
-``--layout sparse`` stages packed active tiles (only roads congested
-enough to matter occupy tile memory) and prints the measured occupancy;
-results are again bitwise identical — the script asserts that too.
+Min-plus results are bitwise identical under every backend and layout —
+the script asserts it.
 """
 import argparse
 
 import numpy as np
 
-from repro.core.algorithms import sssp
-from repro.core.blocked import build_blocked
 from repro.core.graph import (
     AttributeDef, GraphInstance, GraphTemplate, TimeSeriesGraph,
 )
-from repro.core.partition import partition_graph
+from repro.gopher import GopherSession
 
 
 def road_grid(n: int) -> GraphTemplate:
@@ -40,7 +42,7 @@ def road_grid(n: int) -> GraphTemplate:
     )
 
 
-def main(comm: str = "dense", layout: str = "dense") -> None:
+def main(comm=None, layout=None) -> None:
     n = 32
     tmpl = road_grid(n)
     rng = np.random.default_rng(0)
@@ -55,22 +57,34 @@ def main(comm: str = "dense", layout: str = "dense") -> None:
         ))
     tsg = TimeSeriesGraph(tmpl, instances)
 
-    assign = partition_graph(tmpl, 4)
-    bg = build_blocked(tmpl, assign, 64)
-    w = np.stack([tsg.edge_values(t, "travel_time") for t in range(len(tsg))])
-
     depot = 0
-    # ONE engine run executes the whole sequential pattern: the lax.scan
-    # carries the distance vector across the instance axis and returns every
-    # timestep's state (no O(T^2) re-runs to inspect intermediates).
-    from repro.core.engine import TemporalEngine, min_plus_program, source_init
+    # The declarative path: the session partitions + blocks the collection;
+    # ONE run executes the whole sequential pattern (the lax.scan carries
+    # the distance vector across the instance axis and returns every
+    # timestep's state — no O(T^2) re-runs to inspect intermediates).
+    # "sssp" is registered over the "latency" attribute; this template
+    # calls it "travel_time", so register a tiny alias analytic — the
+    # declarative API is extensible, not a closed enum.
+    from repro.gopher import REQUIRED, list_analytics, register_analytic
 
-    print(f"comm backend: {comm} (boundary exchange; see repro.core.comm)")
-    print(f"tile layout: {layout} (see repro.core.blocked)")
-    eng = TemporalEngine(bg, comm=comm, layout=layout)
-    res = eng.run(min_plus_program("sssp", init=source_init(depot)), w,
-                  pattern="sequential")
-    if layout == "sparse":
+    if "grid_sssp" not in list_analytics():
+        @register_analytic(
+            "grid_sssp", pattern="sequential", attr="travel_time",
+            zero_fill=np.inf, params={"source": REQUIRED},
+            postprocess=lambda ctx, res, **_: {"final": res.final},
+            describe="temporal SSSP over travel_time",
+        )
+        def _grid_sssp(ctx, *, source):
+            from repro.core.engine import min_plus_program, source_init
+
+            return min_plus_program("sssp", init=source_init(source))
+
+    sess = GopherSession(tsg, num_partitions=4, block_size=64)
+    plan = sess.plan("grid_sssp", source=depot, comm=comm, layout=layout)
+    print(plan.explain())
+    res_a = sess.run(plan)
+    res = res_a.engine
+    if plan.layout.value == "sparse":
         print(f"✓ block-sparse staging: measured tile occupancy "
               f"{res.occupancy:.1%}")
     print("t  reachable<40min  mean_dist  supersteps")
@@ -85,22 +99,26 @@ def main(comm: str = "dense", layout: str = "dense") -> None:
     fin = np.isfinite(d_first)
     assert np.all(dist[fin] <= d_first[fin] + 1e-5)
     print("✓ incremental aggregation: final distances <= first-instance distances")
-    # cross-check against the thin sssp.run_blocked declaration (which runs
-    # the DEFAULT dense backend: whatever --comm picked, the distances are
-    # bitwise identical — the backend only changes how the bytes move)
-    d_ref, _ = sssp.run_blocked(bg, w, depot)
-    assert np.allclose(dist[fin], d_ref[fin])
-    if comm != "dense" or layout != "dense":
-        res_dense = TemporalEngine(bg).run(
-            min_plus_program("sssp", init=source_init(depot)), w,
-            pattern="sequential")
-        assert np.array_equal(res.values, res_dense.values)
-        print(f"✓ comm={comm}/layout={layout} == dense bitwise on every "
-              f"timestep")
+
+    # Explicit-engine contrast: hand-assemble what plan() chose — the
+    # session adds decisions, not semantics, so values match bitwise.
+    from repro.core.blocked import build_blocked
+    from repro.core.engine import TemporalEngine, min_plus_program, source_init
+    from repro.core.partition import partition_graph
+
+    assign = partition_graph(tmpl, 4, seed=0)
+    bg = build_blocked(tmpl, assign, 64)
+    w = np.stack([tsg.edge_values(t, "travel_time") for t in range(len(tsg))])
+    eng = TemporalEngine(bg, comm=plan.comm.value, layout=plan.layout.value)
+    res_eng = eng.run(min_plus_program("sssp", init=source_init(depot)), w,
+                      pattern="sequential")
+    assert np.array_equal(res.values, res_eng.values)
+    print(f"✓ session (comm={plan.comm.value}, layout={plan.layout.value}) "
+          f"== explicit engine bitwise on every timestep")
     # async staging: instance k+1's tiles fill while instance k executes;
     # the sequential carry crosses chunk boundaries bitwise-identically
     eng_async = TemporalEngine(bg, staging="async", chunk_instances=3,
-                               comm=comm, layout=layout)
+                               comm=plan.comm.value, layout=plan.layout.value)
     res_async = eng_async.run(
         min_plus_program("sssp", init=source_init(depot)), w,
         pattern="sequential")
@@ -111,11 +129,11 @@ def main(comm: str = "dense", layout: str = "dense") -> None:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--comm", choices=("dense", "ring", "host"),
-                    default="dense",
-                    help="boundary-exchange backend (repro.core.comm)")
+                    default=None,
+                    help="override the planned boundary-exchange backend "
+                         "(repro.core.comm)")
     ap.add_argument("--layout", choices=("dense", "sparse"),
-                    default="dense",
-                    help="instance tile layout (packed active tiles vs "
-                         "dense template tensors)")
+                    default=None,
+                    help="override the planned tile layout")
     args = ap.parse_args()
     main(comm=args.comm, layout=args.layout)

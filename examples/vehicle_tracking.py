@@ -42,9 +42,14 @@ def main() -> None:
     print(f"  ({res.stats.supersteps} supersteps, "
           f"{res.stats.superstep_messages} cross-subgraph messages)")
 
-    # blocked engine (masked min-plus wavefront)
+    # blocked engine (masked min-plus wavefront) via the session API
+    from repro.gopher import GopherSession
+
     bg = build_blocked(tmpl, assign, cfg.block_size)
-    trace_blk = tracking.run_blocked(bg, plates, target, start, search_depth=6)
+    sess = GopherSession.from_blocked(bg, vertex_attrs={"plate": plates})
+    trace_blk = sess.run(sess.plan(
+        "tracking", plate=target, initial_vertex=start, search_depth=6,
+    )).output["trace"]
     print("blocked trace:", trace_blk)
     assert trace_host == trace_blk, "engines must produce the same trace"
     print(f"✓ traced through {len(trace_host)} of {len(tsg)} windows; "

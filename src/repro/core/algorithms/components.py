@@ -7,10 +7,13 @@ second independent-pattern application beside PageRank.
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 from repro.core.blocked import BlockedGraph
 from repro.core.semiring import INF
+from repro.gopher.registry import register_analytic
 
 
 def symmetrized_blocked(
@@ -29,6 +32,52 @@ def symmetrized_blocked(
     return build_blocked(tmpl2, bg.part_of, bg.block_size)
 
 
+def _components_weights(session, raw: np.ndarray) -> np.ndarray:
+    """Staging transform: (I, E) activity -> (I, 2E) min-plus weights over
+    the symmetrized (doubled) edge list — 0 on active edges (labels pass
+    freely both ways), INF elsewhere."""
+    w = np.where(np.asarray(raw) > 0, 0.0, INF).astype(np.float32)
+    return np.concatenate([w, w], axis=1)  # both orientations
+
+
+def _postprocess(ctx, res, **_params):
+    return {"labels": res.values.astype(np.int64)}
+
+
+@register_analytic(
+    "components",
+    pattern="independent",
+    attr="active",
+    zero_fill=INF,
+    graph="symmetrized",
+    params={"max_supersteps": 256},
+    weights=_components_weights,
+    postprocess=_postprocess,
+    describe="connected components per instance: min-label propagation "
+             "over the symmetrized active edges",
+)
+def _components_program(ctx, *, max_supersteps):
+    """Program factory for the ``"components"`` analytic."""
+    from repro.core.engine import label_init, min_plus_program
+
+    return min_plus_program(
+        "components", init=label_init(), max_supersteps=max_supersteps,
+    )
+
+
+def _session_labels(bg, src, dst, instance_active, mesh, use_pallas, comm):
+    from repro.gopher import GopherSession
+
+    sess = GopherSession.from_blocked(
+        bg, weights={"active": instance_active}, src=src, dst=dst,
+        mesh=mesh, use_pallas=use_pallas,
+    )
+    res = sess.run(sess.plan(
+        "components", layout="dense", comm=comm, staging="sync",
+    ))
+    return res.output["labels"]
+
+
 def run_blocked_temporal(
     bg: BlockedGraph,
     src: np.ndarray,
@@ -39,21 +88,17 @@ def run_blocked_temporal(
     use_pallas: bool = False,
     comm="dense",
 ) -> np.ndarray:
-    """Components of EVERY instance (independent pattern) through the
-    unified temporal engine.  ``comm`` selects the boundary exchange
-    backend (min-plus: bitwise identical across backends).  Returns
-    (I, V) int64 labels."""
-    from repro.core.engine import TemporalEngine, label_init, min_plus_program
-
-    bg2 = symmetrized_blocked(bg, src, dst)
-    w = np.where(instance_active > 0, 0.0, INF).astype(np.float32)
-    w2 = np.concatenate([w, w], axis=1)  # both orientations
-    eng = TemporalEngine(bg2, mesh=mesh, use_pallas=use_pallas, comm=comm)
-    prog = min_plus_program(
-        "components", init=label_init(), max_supersteps=256,
+    """Deprecated: use the Gopher session API —
+    ``GopherSession.from_blocked(bg, weights={"active": a}, src=src,
+    dst=dst).run(session.plan("components"))`` (``repro.gopher``).
+    Returns (I, V) int64 labels, identical to the session path."""
+    warnings.warn(
+        "components.run_blocked_temporal is deprecated; use repro.gopher."
+        "GopherSession (session.run(session.plan('components')))",
+        DeprecationWarning, stacklevel=2,
     )
-    res = eng.run(prog, w2, pattern="independent")
-    return res.values.astype(np.int64)
+    return _session_labels(bg, src, dst, instance_active, mesh, use_pallas,
+                           comm)
 
 
 def run_blocked(
@@ -66,11 +111,16 @@ def run_blocked(
     use_pallas: bool = False,
     comm="dense",
 ) -> np.ndarray:
-    """Min-label propagation over UNDIRECTED active edges of one instance.
-    Returns (V,) component labels (min vertex id in component)."""
-    labels = run_blocked_temporal(
-        bg, src, dst, np.asarray(active)[None], mesh=mesh,
-        use_pallas=use_pallas, comm=comm,
+    """Deprecated single-instance form of ``run_blocked_temporal`` (same
+    session path).  Returns (V,) component labels (min vertex id in
+    component)."""
+    warnings.warn(
+        "components.run_blocked is deprecated; use repro.gopher."
+        "GopherSession (session.run(session.plan('components')))",
+        DeprecationWarning, stacklevel=2,
+    )
+    labels = _session_labels(
+        bg, src, dst, np.asarray(active)[None], mesh, use_pallas, comm,
     )
     return labels[0]
 

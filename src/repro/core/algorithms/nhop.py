@@ -11,6 +11,7 @@ Host path: per-subgraph Bellman-Ford through the iBSP engine, merging via
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, Tuple
 
 import numpy as np
@@ -18,6 +19,7 @@ import numpy as np
 from repro.core.blocked import BlockedGraph
 from repro.core.ibsp import ComputeContext, InstanceProvider, MergeContext, run_ibsp
 from repro.core.semiring import INF
+from repro.gopher.registry import REQUIRED, register_analytic
 
 LATENCY_ATTR = "latency"
 
@@ -140,8 +142,42 @@ def run_host(
 
 
 # --------------------------------------------------------------------------
-# Blocked TPU implementation
+# Blocked TPU implementation: registered Gopher analytic (composite)
 # --------------------------------------------------------------------------
+
+@register_analytic(
+    "nhop",
+    pattern="eventually",
+    attr=LATENCY_ATTR,
+    zero_fill=INF,
+    params={"source": REQUIRED, "n_hops": 6, "bins": DEFAULT_BINS},
+    kind="composite",
+    describe="N-hop latency histogram: eventually dependent — concurrent "
+             "per-instance min-latency fixpoints + host-side Merge",
+)
+def _nhop_execute(ctx, *, source, n_hops, bins):
+    """Composite executor: the hop-count fixpoint runs ONCE over unit
+    weights (topology is instance-invariant, staged via the shared ones
+    batch), the per-instance min-latency fixpoints run under the plan's
+    pattern over the shared latency batch, and the Merge folds histograms
+    on the host."""
+    from repro.core.engine import min_plus_program, source_init
+
+    bins = np.asarray(bins, np.float64)
+    prog = min_plus_program("nhop", init=source_init(source))
+    # unweighted hop distance: one instance of all-ones weights
+    hops = ctx.run(prog, pattern="independent",
+                   staged=ctx.staged_ones()).values[0]
+    # min-latency distance per instance, then host-side Merge (histograms)
+    lat = ctx.run(prog, pattern=ctx.plan.pattern, staged=ctx.staged())
+    mask = hops == n_hops
+    hists = np.stack([
+        histogram(lat.values[i][mask], bins)
+        for i in range(lat.values.shape[0])
+    ])
+    return {"composite": hists.sum(0), "histograms": hists,
+            "__engine__": lat}
+
 
 def run_blocked(
     bg: BlockedGraph,
@@ -154,30 +190,28 @@ def run_blocked(
     use_pallas: bool = False,
     comm="dense",
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Eventually-dependent pattern through the unified temporal engine:
-    per-instance min-latency fixpoints run temporally concurrent (instances
-    over the mesh ``data`` axis when a mesh is given), the hop-count
-    fixpoint runs ONCE (topology is instance-invariant), and the Merge
-    folds per-instance histograms into the composite on the host.
-    ``comm`` selects the boundary exchange backend (min-plus: bitwise
-    identical across backends).
+    """Deprecated: use the Gopher session API —
+    ``GopherSession.from_blocked(bg, weights={"latency": w}).run(
+    session.plan("nhop", source=..., n_hops=...))`` (``repro.gopher``).
+    Pins the legacy knobs; results are identical to the session path.
 
     Returns (composite histogram, per-instance histograms (I, nbins))."""
-    from repro.core.engine import TemporalEngine, min_plus_program, source_init
+    warnings.warn(
+        "nhop.run_blocked is deprecated; use repro.gopher.GopherSession "
+        "(session.run(session.plan('nhop', source=..., n_hops=...)))",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro.gopher import GopherSession
 
-    I, E = instance_latency.shape
-    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas, comm=comm)
-    prog = min_plus_program("nhop", init=source_init(source_vertex))
-    # unweighted hop distance: one instance of all-ones weights
-    hops = eng.run(prog, np.ones((1, E), np.float32),
-                   pattern="independent").values[0]
-    # min-latency distance per instance, then host-side Merge (histograms)
-    lat = eng.run(prog, instance_latency, pattern="eventually")
-    mask = hops == n_hops
-    hists = np.stack([
-        histogram(lat.values[i][mask], bins) for i in range(I)
-    ])
-    return hists.sum(0), hists
+    sess = GopherSession.from_blocked(
+        bg, weights={LATENCY_ATTR: instance_latency},
+        mesh=mesh, use_pallas=use_pallas,
+    )
+    res = sess.run(sess.plan(
+        "nhop", source=source_vertex, n_hops=n_hops, bins=bins,
+        layout="dense", comm=comm, staging="sync",
+    ))
+    return res.output["composite"], res.output["histograms"]
 
 
 # --------------------------------------------------------------------------

@@ -13,12 +13,14 @@ without dangling-mass redistribution, ``iters`` fixed steps.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, Tuple
 
 import numpy as np
 
 from repro.core.blocked import BlockedGraph
 from repro.core.ibsp import ComputeContext, InstanceProvider, run_ibsp
+from repro.gopher.registry import register_analytic
 
 ACTIVE_ATTR = "active"
 
@@ -118,8 +120,41 @@ def run_host(
 
 
 # --------------------------------------------------------------------------
-# Blocked TPU implementation
+# Blocked TPU implementation: registered Gopher analytic
 # --------------------------------------------------------------------------
+
+def _pagerank_weights(session, raw: np.ndarray) -> np.ndarray:
+    """Staging transform: (I, E) activity -> outdegree-normalized edge
+    weights (named so the shared-staging key distinguishes it from the
+    raw attribute)."""
+    assert session.src is not None, \
+        "pagerank derives weights from topology: pass src= to from_blocked"
+    return edge_weights_for_instances(
+        session.src, np.asarray(raw), len(session.bg.part_of)
+    )
+
+
+def _postprocess(ctx, res, **_params):
+    return {"ranks": res.values}
+
+
+@register_analytic(
+    "pagerank",
+    pattern="independent",
+    attr=ACTIVE_ATTR,
+    zero_fill=0.0,
+    params={"damping": 0.85, "iters": 30},
+    weights=_pagerank_weights,
+    postprocess=_postprocess,
+    describe="per-instance PageRank over active edges: independent "
+             "pattern, fixed-count plus-mul iteration",
+)
+def _pagerank_program(ctx, *, damping, iters):
+    """Program factory for the ``"pagerank"`` analytic."""
+    from repro.core.engine import pagerank_program
+
+    return pagerank_program(ctx.num_vertices, damping=damping, iters=iters)
+
 
 def run_blocked(
     bg: BlockedGraph,
@@ -133,21 +168,29 @@ def run_blocked(
     use_pallas: bool = False,
     comm="dense",
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """PageRank on every instance (independent pattern) through the unified
-    temporal engine: batched staging, instances scanned on one device or
-    sharded over the mesh ``data`` axis.  ``comm`` selects the boundary
-    exchange backend (the plus-mul mesh ring reassociates the sum — expect
-    low-order float differences there; stacked/host are bitwise).
-    Returns (ranks (I, V), supersteps (I,))."""
-    from repro.core.engine import TemporalEngine, pagerank_program
-
-    w = edge_weights_for_instances(src, instance_active, num_vertices)
-    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas, comm=comm)
-    res = eng.run(
-        pagerank_program(num_vertices, damping=damping, iters=iters),
-        w, pattern="independent",
+    """Deprecated: use the Gopher session API —
+    ``GopherSession.from_blocked(bg, weights={"active": a}, src=src).run(
+    session.plan("pagerank", iters=...))`` (``repro.gopher``).  Pins the
+    legacy knobs (dense layout, sync staging); results are identical to
+    the session path.  Returns (ranks (I, V), supersteps (I,))."""
+    warnings.warn(
+        "pagerank.run_blocked is deprecated; use repro.gopher."
+        "GopherSession (session.run(session.plan('pagerank', ...)))",
+        DeprecationWarning, stacklevel=2,
     )
-    return res.values, res.stats["supersteps"]
+    from repro.gopher import GopherSession
+
+    assert num_vertices == len(bg.part_of), \
+        "num_vertices must match the blocked template"
+    sess = GopherSession.from_blocked(
+        bg, weights={ACTIVE_ATTR: instance_active}, src=src,
+        mesh=mesh, use_pallas=use_pallas,
+    )
+    res = sess.run(sess.plan(
+        "pagerank", damping=damping, iters=iters,
+        layout="dense", comm=comm, staging="sync",
+    ))
+    return res.output["ranks"], res.engine.stats["supersteps"]
 
 
 # --------------------------------------------------------------------------

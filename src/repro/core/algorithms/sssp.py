@@ -10,12 +10,15 @@ Two implementations share semantics:
 * ``compute``          — faithful host Compute: Dijkstra inside the subgraph
   (the paper's shared-memory-algorithm reuse), boundary relaxations via
   ``SendToSubgraph``, seed handoff via ``SendToNextTimeStep``.
-* ``run_blocked``      — TPU path: min-plus ``bsp_fixpoint`` per timestep,
-  scanned over instances carrying the distance vector.
+* the registered ``"sssp"`` analytic — TPU path through the Gopher
+  session API (``repro.gopher``): min-plus ``bsp_fixpoint`` per timestep,
+  scanned over instances carrying the distance vector.  ``run_blocked``
+  remains as a deprecated thin wrapper over the session.
 """
 from __future__ import annotations
 
 import heapq
+import warnings
 from typing import Any, Dict, List, Tuple
 
 import numpy as np
@@ -23,6 +26,7 @@ import numpy as np
 from repro.core.blocked import BlockedGraph
 from repro.core.ibsp import ComputeContext, InstanceProvider, run_ibsp
 from repro.core.semiring import INF
+from repro.gopher.registry import REQUIRED, register_analytic
 
 WEIGHT_ATTR = "latency"
 
@@ -128,8 +132,35 @@ def run_host(
 
 
 # --------------------------------------------------------------------------
-# Blocked TPU implementation
+# Blocked TPU implementation: registered Gopher analytic
 # --------------------------------------------------------------------------
+
+def _postprocess(ctx, res, **_params):
+    return {"final": res.final}
+
+
+@register_analytic(
+    "sssp",
+    pattern="sequential",
+    attr=WEIGHT_ATTR,
+    zero_fill=INF,
+    params={"source": REQUIRED, "subgraph_centric": True,
+            "max_supersteps": 64},
+    postprocess=_postprocess,
+    describe="temporal SSSP: sequentially dependent min-plus fixpoint, "
+             "distances carried between timesteps",
+)
+def _sssp_program(ctx, *, source, subgraph_centric, max_supersteps):
+    """Program factory for the ``"sssp"`` analytic: min-plus fixpoint
+    seeded at ``source``; the sequential pattern carries distances
+    across the instance axis (incremental aggregation)."""
+    from repro.core.engine import min_plus_program, source_init
+
+    return min_plus_program(
+        "sssp", init=source_init(source),
+        subgraph_centric=subgraph_centric, max_supersteps=max_supersteps,
+    )
+
 
 def run_blocked(
     bg: BlockedGraph,
@@ -142,23 +173,30 @@ def run_blocked(
     max_supersteps: int = 64,
     comm="dense",
 ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
-    """Temporal SSSP over all instances (sequential pattern) through the
-    unified temporal engine: one batched staging pass, then a ``lax.scan``
-    carrying the distance vector across the instance axis.  ``comm``
-    selects the boundary exchange backend (``repro.core.comm``); min-plus
-    results are bitwise identical across backends.
-
-    Returns (final distances (V,), stats per timestep).
+    """Deprecated: use the Gopher session API —
+    ``GopherSession.from_blocked(bg, weights={"latency": w}).run(
+    session.plan("sssp", source=...))`` (``repro.gopher``).  This wrapper
+    pins the legacy knobs (dense layout, sync staging) and returns
+    (final distances (V,), stats per timestep), bitwise identical to the
+    session path.
     """
-    from repro.core.engine import TemporalEngine, min_plus_program, source_init
-
-    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas, comm=comm)
-    prog = min_plus_program(
-        "sssp", init=source_init(source_vertex),
-        subgraph_centric=subgraph_centric, max_supersteps=max_supersteps,
+    warnings.warn(
+        "sssp.run_blocked is deprecated; use repro.gopher.GopherSession "
+        "(session.run(session.plan('sssp', source=...)))",
+        DeprecationWarning, stacklevel=2,
     )
-    res = eng.run(prog, instance_weights, pattern="sequential")
-    return res.final, res.stats
+    from repro.gopher import GopherSession
+
+    sess = GopherSession.from_blocked(
+        bg, weights={WEIGHT_ATTR: instance_weights},
+        mesh=mesh, use_pallas=use_pallas,
+    )
+    res = sess.run(sess.plan(
+        "sssp", source=source_vertex, subgraph_centric=subgraph_centric,
+        max_supersteps=max_supersteps,
+        layout="dense", comm=comm, staging="sync",
+    ))
+    return res.output["final"], res.engine.stats
 
 
 # --------------------------------------------------------------------------

@@ -14,6 +14,7 @@ vertices observing the plate.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -21,6 +22,7 @@ import numpy as np
 from repro.core.blocked import BlockedGraph
 from repro.core.ibsp import ComputeContext, InstanceProvider
 from repro.core.semiring import INF
+from repro.gopher.registry import REQUIRED, register_analytic
 
 PLATE_ATTR = "plate"  # int vertex attribute: vehicle id seen (-1 = none)
 
@@ -119,8 +121,47 @@ def run_host(
 
 
 # --------------------------------------------------------------------------
-# Blocked TPU implementation
+# Blocked TPU implementation: registered Gopher analytic (composite)
 # --------------------------------------------------------------------------
+
+@register_analytic(
+    "tracking",
+    pattern="sequential",
+    attr="__ones__",  # probes traverse topology, not attribute values
+    zero_fill=INF,
+    params={"plate": REQUIRED, "initial_vertex": REQUIRED,
+            "search_depth": 4},
+    kind="composite",
+    describe="vehicle tracking (Alg. 1): per-timestep bounded wavefront "
+             "probes, sightings handed to the next timestep",
+)
+def _tracking_execute(ctx, *, plate, initial_vertex, search_depth):
+    """Composite executor: the sequential dependence is data-dependent on
+    the host (the next timestep's seed is the argmin sighting), so each
+    timestep is one engine probe — a min-plus hop fixpoint from the last
+    sighting over the instance-invariant topology.  The unit-weight tiles
+    are staged ONCE via the shared ones batch (and device-put once by the
+    engine's staged cache); the jitted runner is cached across probes."""
+    from repro.core.engine import min_plus_program, source_init
+
+    staged = ctx.staged_ones()
+    plates = np.asarray(ctx.vertex_attr(PLATE_ATTR))
+    prog = min_plus_program("tracking_hops")
+    trace: List[Tuple[int, int]] = []
+    last = int(initial_vertex)
+    for t in range(plates.shape[0]):
+        hv = ctx.run(
+            prog, pattern="independent", staged=staged,
+            x0=source_init(last)(ctx.bg),
+        ).values[0]
+        cand = np.nonzero(
+            (hv <= search_depth) & (plates[t] == plate)
+        )[0]
+        if len(cand):
+            last = int(cand.min())
+            trace.append((t, last))
+    return {"trace": trace}
+
 
 def run_blocked(
     bg: BlockedGraph,
@@ -133,34 +174,25 @@ def run_blocked(
     use_pallas: bool = False,
     comm="dense",
 ) -> List[Tuple[int, int]]:
-    """Masked wavefront tracker through the unified temporal engine.
+    """Deprecated: use the Gopher session API —
+    ``GopherSession.from_blocked(bg, vertex_attrs={"plate": p}).run(
+    session.plan("tracking", plate=..., initial_vertex=...))``
+    (``repro.gopher``).  Returns [(timestep, vertex)], identical to the
+    session path."""
+    warnings.warn(
+        "tracking.run_blocked is deprecated; use repro.gopher."
+        "GopherSession (session.run(session.plan('tracking', ...)))",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro.gopher import GopherSession
 
-    The sequential dependence is data-dependent on the host (the next
-    timestep's seed is the argmin sighting, a host-side decision), so each
-    timestep is one engine probe: a min-plus hop fixpoint from the last
-    sighting over the instance-invariant topology (tiles staged ONCE, the
-    jitted runner cached across timesteps).  ``comm`` selects the boundary
-    exchange backend (min-plus: bitwise identical across backends).
-    Returns [(timestep, vertex)].
-    """
-    from repro.core.engine import TemporalEngine, min_plus_program, source_init
-
-    I, V = instance_plates.shape
-    E = len(bg.le_edge_id) + len(bg.re_edge_id)  # every edge local xor cut
-    eng = TemporalEngine(bg, mesh=mesh, use_pallas=use_pallas, comm=comm)
-    tiles, btiles = eng.stage(np.ones((1, E), np.float32), INF)
-    prog = min_plus_program("tracking_hops")
-    trace: List[Tuple[int, int]] = []
-    last = initial_vertex
-    for t in range(I):
-        hv = eng.run(
-            prog, tiles=tiles, btiles=btiles,
-            x0=source_init(last)(bg), pattern="independent",
-        ).values[0]
-        cand = np.nonzero(
-            (hv <= search_depth) & (instance_plates[t] == plate)
-        )[0]
-        if len(cand):
-            last = int(cand.min())
-            trace.append((t, last))
-    return trace
+    sess = GopherSession.from_blocked(
+        bg, vertex_attrs={PLATE_ATTR: instance_plates},
+        mesh=mesh, use_pallas=use_pallas,
+    )
+    res = sess.run(sess.plan(
+        "tracking", plate=plate, initial_vertex=initial_vertex,
+        search_depth=search_depth,
+        layout="dense", comm=comm, staging="sync",
+    ))
+    return res.output["trace"]

@@ -63,8 +63,10 @@ the host engine so the two paths are directly comparable.
 """
 from __future__ import annotations
 
+import weakref
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +84,17 @@ from repro.core.superstep import (
 )
 
 PATTERNS = ("sequential", "independent", "eventually")
+
+# staged-batch device cache entries kept per engine (LRU); each entry is one
+# staged instance collection, so a handful covers any run_many working set
+_STAGED_CACHE_SLOTS = 4
+
+
+def _device_put(x) -> jax.Array:
+    """Host buffer -> device array.  All staged-value uploads route through
+    this seam so tests (and the re-upload regression gate) can count them;
+    a no-op for arrays already on device."""
+    return jnp.asarray(x)
 
 
 # ---------------------------------------------------------------------------
@@ -226,6 +239,21 @@ class EngineResult:
             if self.pattern == "sequential" else 0,
             merge_messages=I if self.pattern == "eventually" else 0,
         )
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    """One analytic execution inside a shared-staging ``run_many`` pass.
+
+    Every spec in a pass executes over the SAME staged instance batch
+    (tiles are filled / device-put once, then each spec's jitted runner
+    consumes them), so the programs must agree on ``zero_fill`` — the one
+    property of the staged values an analytic can observe."""
+
+    program: SemiringProgram
+    pattern: str
+    x0: Optional[np.ndarray] = None  # overrides program.init(bg)
+    merge: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------
@@ -389,6 +417,11 @@ class TemporalEngine:
         ) + self._struct_tail
         self._runners: Dict[Any, Callable] = {}
         self._merge_fn: Optional[Callable] = None
+        # staged-batch device cache: host-array identity (weakly held) ->
+        # device arrays (see _cached_device) so repeated runs over one
+        # staged batch (run_many, tracking's probes, shared-staging
+        # sessions) upload once without extending the batch's lifetime
+        self._staged_device: "OrderedDict[Tuple[int, ...], Tuple[Tuple[weakref.ref, ...], Tuple[jax.Array, ...]]]" = OrderedDict()
 
     # ------------------------------------------------------------ staging
     def stage(
@@ -608,15 +641,42 @@ class TemporalEngine:
                 return run_fn(*args)
         return run_fn(*args)
 
-    def _dispatch_sparse(self, run_fn, sp: SparseBlocked, x0):
-        """Device-put a packed batch and dispatch the sparse runner."""
-        return self._dispatch(
-            run_fn,
-            jnp.asarray(sp.tiles), jnp.asarray(sp.btiles),
-            jnp.asarray(sp.rows), jnp.asarray(sp.cols),
-            jnp.asarray(sp.brows), jnp.asarray(sp.bcols),
-            x0, *self._struct_tail,
+    def _cached_device(self, host_arrays: Tuple[Any, ...]) -> Tuple[jax.Array, ...]:
+        """Device arrays for one staged batch, uploaded once per identity.
+
+        The boundary/tile structure of a staged graph is immutable once
+        handed to the engine, so the device copy is keyed on the ``id`` of
+        every host array (verified against weak references, so id reuse
+        cannot alias) and LRU-bounded to ``_STAGED_CACHE_SLOTS`` batches:
+        ``run_many`` over one staged collection — or tracking's repeated
+        probes over one tile set — re-uploads nothing.  Host batches are
+        held WEAKLY: once the caller drops a staged batch (e.g. a
+        ``run_many`` staging cache going out of scope) its entry — and
+        the device copy it pins — is purged on the next call, so the
+        cache never extends a batch's lifetime."""
+        for k in [k for k, (refs, _) in self._staged_device.items()
+                  if any(r() is None for r in refs)]:
+            del self._staged_device[k]
+        key = tuple(map(id, host_arrays))
+        hit = self._staged_device.get(key)
+        if hit is not None and all(r() is a for r, a in
+                                   zip(hit[0], host_arrays)):
+            self._staged_device.move_to_end(key)
+            return hit[1]
+        dev = tuple(_device_put(a) for a in host_arrays)
+        self._staged_device[key] = (
+            tuple(weakref.ref(a) for a in host_arrays), dev,
         )
+        while len(self._staged_device) > _STAGED_CACHE_SLOTS:
+            self._staged_device.popitem(last=False)
+        return dev
+
+    def _dispatch_sparse(self, run_fn, sp: SparseBlocked, x0):
+        """Device-put a packed batch (cached on identity) and dispatch."""
+        bufs = self._cached_device(
+            (sp.tiles, sp.btiles, sp.rows, sp.cols, sp.brows, sp.bcols)
+        )
+        return self._dispatch(run_fn, *bufs, x0, *self._struct_tail)
 
     def _merge_mean(self, xs):
         """On-device Merge over the full instance axis (async path).
@@ -631,71 +691,76 @@ class TemporalEngine:
                 return self._merge_fn(xs)
         return self._merge_fn(xs)
 
-    def _run_stream(self, program: SemiringProgram, pattern: str,
-                    merge: Optional[str], chunks):
+    def _run_stream_many(self, specs: Sequence[RunSpec], chunks, x0s):
         """Consume a chunk stream (SlicePrefetcher or any iterable of
-        StagedChunk): dispatch chunk *k* to the device, then pull chunk
-        *k+1* — whose slice reads + tile fills happen on the prefetcher's
-        background pool — while *k* executes (JAX dispatch is async).  The
-        sequential pattern carries the end state across chunk boundaries;
-        the eventually Merge folds once over the concatenated states.
+        StagedChunk) ONCE, feeding every spec's runner: each chunk is
+        device-put a single time, then dispatched to all N runners before
+        the next chunk is pulled — so slice reads + tile fills (on the
+        prefetcher's background pool) overlap the whole fan-out, and N
+        concurrent analytics cost one staging pass (the shared-scan
+        amortization behind ``GopherSession.run_many``).  Sequential
+        patterns carry their end state across chunk boundaries per spec;
+        eventually Merges fold once over the concatenated states.
         Sparse-layout chunks (packed tiles + per-instance index) dispatch
-        through the sparse runner; dense chunks through the dense one.
-        Returns (xs, final, merged, ss, lsw, occupancy | None)."""
-
-        def body(x0):
-            xs_p, ss_p, lsw_p = [], [], []
-            carry = x0
-            final = None
-            n_total = nnz_total = 0
-            sparse_seen = False
-            for ch in chunks:
-                # Aliasing (no copy) is safe ONLY because each chunk owns
-                # its buffers (see SlicePrefetcher): JAX's device put
-                # zero-copy-aliases aligned host buffers on CPU and defers
-                # the host read even under copy=True, so a reused staging
-                # buffer would be overwritten mid-execution.
-                seed = carry if pattern == "sequential" else x0
-                n = int(ch.tiles.shape[0])
-                if getattr(ch, "is_sparse", False):
-                    sparse_seen = True
-                    n_total += n
-                    nnz_total += int(ch.nnz.sum()) + int(ch.bnnz.sum())
-                    run_fn = self._runner(program, pattern, None, n,
-                                          sparse=True)
-                    xs, fin, _, ss, lsw = self._dispatch(
-                        run_fn, jnp.asarray(ch.tiles), jnp.asarray(ch.btiles),
-                        jnp.asarray(ch.rows), jnp.asarray(ch.cols),
-                        jnp.asarray(ch.brows), jnp.asarray(ch.bcols),
-                        seed, *self._struct_tail,
-                    )
-                else:
-                    n_total += n
-                    run_fn = self._runner(program, pattern, None, n)
-                    xs, fin, _, ss, lsw = self._dispatch(
-                        run_fn, jnp.asarray(ch.tiles), jnp.asarray(ch.btiles),
-                        seed, *self._struct,
-                    )
-                carry = final = fin
-                xs_p.append(xs)
-                ss_p.append(ss)
-                lsw_p.append(lsw)
-            assert final is not None, "empty instance stream"
-            xs = xs_p[0] if len(xs_p) == 1 else jnp.concatenate(xs_p)
-            ss = ss_p[0] if len(ss_p) == 1 else jnp.concatenate(ss_p)
-            lsw = lsw_p[0] if len(lsw_p) == 1 else jnp.concatenate(lsw_p)
-            if pattern == "eventually" and merge == "mean":
+        through the sparse runners; dense chunks through the dense ones.
+        Returns ([(xs, final, merged, ss, lsw)] per spec, occupancy | None).
+        """
+        N = len(specs)
+        xs_p: List[list] = [[] for _ in range(N)]
+        ss_p: List[list] = [[] for _ in range(N)]
+        lsw_p: List[list] = [[] for _ in range(N)]
+        carry = list(x0s)
+        final: List[Optional[jax.Array]] = [None] * N
+        n_total = nnz_total = 0
+        sparse_seen = False
+        for ch in chunks:
+            # Aliasing (no copy) is safe ONLY because each chunk owns
+            # its buffers (see SlicePrefetcher): JAX's device put
+            # zero-copy-aliases aligned host buffers on CPU and defers
+            # the host read even under copy=True, so a reused staging
+            # buffer would be overwritten mid-execution.
+            n = int(ch.tiles.shape[0])
+            n_total += n
+            is_sparse = bool(getattr(ch, "is_sparse", False))
+            if is_sparse:
+                sparse_seen = True
+                nnz_total += int(ch.nnz.sum()) + int(ch.bnnz.sum())
+                bufs = tuple(_device_put(a) for a in (
+                    ch.tiles, ch.btiles, ch.rows, ch.cols, ch.brows, ch.bcols
+                ))
+                tail = self._struct_tail
+            else:
+                bufs = (_device_put(ch.tiles), _device_put(ch.btiles))
+                tail = self._struct
+            for k, s in enumerate(specs):
+                seed = carry[k] if s.pattern == "sequential" else x0s[k]
+                run_fn = self._runner(s.program, s.pattern, None, n,
+                                      sparse=is_sparse)
+                xs, fin, _, ss, lsw = self._dispatch(
+                    run_fn, *bufs, seed, *tail
+                )
+                carry[k] = final[k] = fin
+                xs_p[k].append(xs)
+                ss_p[k].append(ss)
+                lsw_p[k].append(lsw)
+        outs = []
+        for k, s in enumerate(specs):
+            assert final[k] is not None, "empty instance stream"
+            xs = xs_p[k][0] if len(xs_p[k]) == 1 else jnp.concatenate(xs_p[k])
+            ss = ss_p[k][0] if len(ss_p[k]) == 1 else jnp.concatenate(ss_p[k])
+            lsw = lsw_p[k][0] if len(lsw_p[k]) == 1 \
+                else jnp.concatenate(lsw_p[k])
+            if s.pattern == "eventually" and s.merge == "mean":
                 merged = self._merge_mean(xs)
             else:
-                merged = jnp.zeros_like(final)
-            occ = None
-            if sparse_seen:
-                total = n_total * (int(self.bg.n_tiles.sum())
-                                   + int(self.bg.n_btiles.sum()))
-                occ = nnz_total / total if total else 0.0
-            return xs, final, merged, ss, lsw, occ
-
-        return body
+                merged = jnp.zeros_like(final[k])
+            outs.append((xs, final[k], merged, ss, lsw))
+        occ = None
+        if sparse_seen:
+            total = n_total * (int(self.bg.n_tiles.sum())
+                               + int(self.bg.n_btiles.sum()))
+            occ = nnz_total / total if total else 0.0
+        return outs, occ
 
     # ----------------------------------------------------------------- run
     def run(
@@ -736,9 +801,47 @@ class TemporalEngine:
         report the measured active-tile fraction in ``result.occupancy``.
         See the class docstring for pattern contracts.
         """
-        assert pattern in PATTERNS, pattern
-        assert merge is None or pattern == "eventually", \
-            "merge is the eventually-dependent Merge step; use pattern='eventually'"
+        return self.run_many(
+            [RunSpec(program, pattern, x0=x0, merge=merge)],
+            instance_weights, tiles=tiles, btiles=btiles, sparse=sparse,
+            stream=stream, staging=staging,
+        )[0]
+
+    def run_many(
+        self,
+        specs: Sequence[RunSpec],
+        instance_weights: Optional[np.ndarray] = None,
+        *,
+        tiles: Optional[jax.Array] = None,
+        btiles: Optional[jax.Array] = None,
+        sparse: Optional[SparseBlocked] = None,
+        stream=None,
+        staging: Optional[str] = None,
+    ) -> List[EngineResult]:
+        """Execute N :class:`RunSpec` over ONE staged instance collection.
+
+        The staging sources are the same as :meth:`run`, but the staged
+        batch is materialized (and device-put) exactly once and every
+        spec's runner consumes it — N concurrent analytics for one
+        staging pass.  With ``stream=`` the sharing goes all the way to
+        disk: a single prefetch pass feeds all N runners chunk by chunk
+        (see ``_run_stream_many``).  Programs must agree on ``zero_fill``
+        (the one property of the staged values an analytic observes);
+        everything else — pattern, fixpoint vs iterate, x0, merge — may
+        differ per spec.  Results are bitwise identical to running each
+        spec alone."""
+        specs = list(specs)
+        assert specs, "run_many needs at least one RunSpec"
+        for s in specs:
+            assert s.pattern in PATTERNS, s.pattern
+            assert s.merge is None or s.pattern == "eventually", \
+                "merge is the eventually-dependent Merge step; " \
+                "use pattern='eventually'"
+        zero_fills = {s.program.zero_fill for s in specs}
+        assert len(zero_fills) == 1, \
+            f"programs disagree on zero_fill ({zero_fills}); they cannot " \
+            f"share one staged batch — split into separate run_many calls"
+        zero_fill = zero_fills.pop()
         staging = staging or self.staging
         # pre-staged batches carry their own layout: sparse= flips a dense
         # engine to the sparse runner for this call, tiles=/btiles= flip a
@@ -751,10 +854,14 @@ class TemporalEngine:
             layout = "dense"
         else:
             layout = self.layout
-        if x0 is None:
-            assert program.init is not None, "program has no init; pass x0"
-            x0 = program.init(self.bg)
-        x0 = jnp.asarray(x0, jnp.float32)
+        x0s = []
+        for s in specs:
+            x0 = s.x0
+            if x0 is None:
+                assert s.program.init is not None, \
+                    f"program {s.program.name!r} has no init; pass x0"
+                x0 = s.program.init(self.bg)
+            x0s.append(jnp.asarray(x0, jnp.float32))
         occ: Optional[float] = None
 
         if (stream is None and staging == "async" and tiles is None
@@ -775,43 +882,54 @@ class TemporalEngine:
                 d = self._data_size()
                 chunk = max(1, -(-chunk // d)) * d
             stream = SlicePrefetcher.from_weights(
-                self.bg, w, zero=program.zero_fill,
+                self.bg, w, zero=zero_fill,
                 prefetch_depth=self.prefetch_depth, chunk_instances=chunk,
                 layout=layout,
             )
 
         if stream is not None:
-            xs, final, merged, ss, lsw, occ = self._run_stream(
-                program, pattern, merge, stream
-            )(x0)
+            outs, occ = self._run_stream_many(specs, stream, x0s)
         elif layout == "sparse":
             if sparse is None:
                 assert instance_weights is not None, \
                     "need instance_weights, a SparseBlocked batch, or stream"
-                sparse = self.stage_sparse(instance_weights,
-                                           program.zero_fill)
+                sparse = self.stage_sparse(instance_weights, zero_fill)
             occ = sparse.occupancy()
-            run_fn = self._runner(program, pattern, merge,
-                                  sparse.num_instances, sparse=True)
-            xs, final, merged, ss, lsw = self._dispatch_sparse(
-                run_fn, sparse, x0
-            )
+            outs = []
+            for s, x0 in zip(specs, x0s):
+                run_fn = self._runner(s.program, s.pattern, s.merge,
+                                      sparse.num_instances, sparse=True)
+                outs.append(self._dispatch_sparse(run_fn, sparse, x0))
         else:
             if tiles is None or btiles is None:
                 assert instance_weights is not None, \
                     "need instance_weights, tiles+btiles, or stream"
-                tiles, btiles = self.stage(instance_weights,
-                                           program.zero_fill)
-            run_fn = self._runner(program, pattern, merge,
-                                  int(tiles.shape[0]))
-            xs, final, merged, ss, lsw = self._dispatch(
-                run_fn, tiles, btiles, x0, *self._struct
-            )
+                tiles, btiles = self.stage(instance_weights, zero_fill)
+            elif not (isinstance(tiles, jax.Array)
+                      and isinstance(btiles, jax.Array)):
+                # host-staged dense batch: upload once per identity
+                tiles, btiles = self._cached_device((tiles, btiles))
+            outs = []
+            for s, x0 in zip(specs, x0s):
+                run_fn = self._runner(s.program, s.pattern, s.merge,
+                                      int(tiles.shape[0]))
+                outs.append(self._dispatch(
+                    run_fn, tiles, btiles, x0, *self._struct
+                ))
 
+        return [
+            self._wrap_result(s.pattern, s.merge, out, occ)
+            for s, out in zip(specs, outs)
+        ]
+
+    def _wrap_result(self, pattern: str, merge: Optional[str], out,
+                     occ: Optional[float]) -> EngineResult:
+        """Gather device outputs back to global vertex order + stats."""
+        xs, final, merged, ss, lsw = out
         bg = self.bg
         xs = np.asarray(xs)
         values = np.stack([bg.gather_vertex(xs[i]) for i in range(xs.shape[0])])
-        result = EngineResult(
+        return EngineResult(
             pattern=pattern,
             values=values,
             final=bg.gather_vertex(np.asarray(final)),
@@ -826,4 +944,3 @@ class TemporalEngine:
             _n_parts=bg.n_parts,
             _num_vertices=len(bg.part_of),
         )
-        return result

@@ -76,6 +76,7 @@ def _write_tile_maps(
     tmpl = tsg.template
     bg = build_blocked(tmpl, assign, cfg.block_size)
     n_inst = len(tsg)
+    n_valid = int(bg.n_tiles.sum()) + int(bg.n_btiles.sum())
     for name, absent in sparse_absent.items():
         tmpl.edge_attr(name)  # KeyError on unknown attribute
         arrs: Dict[str, np.ndarray] = {
@@ -85,12 +86,21 @@ def _write_tile_maps(
             "absent": np.asarray(absent, np.float64),
             "n_packs": np.asarray(n_packs, np.int64),
         }
+        n_active = 0
         for k in range(n_packs):
             t0, t1 = k * ipack, min((k + 1) * ipack, n_inst)
             w = np.stack([tsg.edge_values(t, name) for t in range(t0, t1)])
             act_l, act_b = bg.active_tile_maps(w, zero=float(absent))
+            n_active += int(act_l.sum()) + int(act_b.sum())
             arrs[f"local_{k}"] = act_l.astype(np.uint8)
             arrs[f"boundary_{k}"] = act_b.astype(np.uint8)
+        # collection-wide active-tile fraction: the planner's layout
+        # decision needs only this scalar, recorded so a reader can price
+        # the sparse layout without touching a single value slice — even
+        # when its own BlockedGraph differs from the deployment's
+        arrs["occupancy"] = np.asarray(
+            n_active / max(1, n_inst * n_valid), np.float64
+        )
         write_array_slice(os.path.join(root, tile_map_name(name)), arrs)
 
 

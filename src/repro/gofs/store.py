@@ -288,6 +288,36 @@ class GoFSStore(InstanceProvider):
             act_b[j] = maps[f"boundary_{k}"][r].astype(bool)
         return act_l, act_b
 
+    def tile_occupancy(
+        self, bg, name: str, *, zero: float = np.inf
+    ) -> Optional[float]:
+        """Active-tile fraction of the visible collection for an edge
+        attribute, computed from the deployment-recorded tile maps ALONE —
+        no value slice is read, so a planner can price the sparse layout
+        (``repro.gopher``) before staging anything.
+
+        Preference order: per-pack maps matching the caller's ``bg``
+        (exact, respects a temporal filter); else the deployment-recorded
+        collection-wide ``occupancy`` scalar (an estimate when the
+        caller's blocked structure differs from the deployment's); else
+        ``None`` — activity unknown without reading values."""
+        acts = self._recorded_activity(
+            bg, name, zero, range(self.num_timesteps())
+        )
+        if acts is None:
+            maps = self.edge_tile_maps(name)
+            if (maps is not None and "occupancy" in maps
+                    and float(maps["absent"]) == float(zero)):
+                return float(maps["occupancy"])
+            return None
+        act_l, act_b = acts
+        denom = self.num_timesteps() * (
+            int(bg.n_tiles.sum()) + int(bg.n_btiles.sum())
+        )
+        if denom == 0:
+            return 0.0
+        return float(int(act_l.sum()) + int(act_b.sum())) / denom
+
     def sparse_buckets(
         self, bg, name: str, *, zero: float = np.inf
     ) -> Optional[Tuple[int, int]]:

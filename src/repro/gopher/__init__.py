@@ -1,0 +1,35 @@
+"""Gopher session API — the declarative entry point (paper §III–V).
+
+``GopherSession`` wraps one time-series graph collection (a deployed
+``GoFSStore``, an in-memory ``TimeSeriesGraph``, or pre-blocked arrays)
+behind three verbs: ``plan`` (auto-tuned, costed, explainable execution
+plans for registered analytics), ``run`` (execute one plan), and
+``run_many`` (execute several with shared staging — one
+``load_blocked``/prefetch pass feeding N engine runners).
+
+Registry → planner → executor; see docs/ARCHITECTURE.md ("Gopher session
+API") for the diagrams and auto-selection tables.
+"""
+from repro.gopher.planner import ExecutionPlan, PlanChoice, SPARSE_OCCUPANCY_MAX
+from repro.gopher.registry import (
+    Analytic,
+    REQUIRED,
+    get_analytic,
+    list_analytics,
+    register_analytic,
+)
+from repro.gopher.session import AnalyticResult, GopherSession, PlanContext
+
+__all__ = [
+    "Analytic",
+    "AnalyticResult",
+    "ExecutionPlan",
+    "GopherSession",
+    "PlanChoice",
+    "PlanContext",
+    "REQUIRED",
+    "SPARSE_OCCUPANCY_MAX",
+    "get_analytic",
+    "list_analytics",
+    "register_analytic",
+]

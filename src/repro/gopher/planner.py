@@ -1,0 +1,285 @@
+"""Execution planning: turn a declared analytic into costed engine knobs.
+
+``GopherSession.plan(...)`` produces an :class:`ExecutionPlan` — every
+knob the execution machinery exposes (tile layout, comm backend, staging
+mode, placement), each resolved either by the caller (``source ==
+"override"``) or by the planner's cost models (``source == "auto"``),
+with the reasoning and byte estimates attached.  Plans are plain data:
+deterministic for a given collection (the planner reads only recorded
+metadata — per-pack tile maps, blocked structure, mesh shape — never a
+value slice), comparable with ``==``, and renderable with
+:meth:`ExecutionPlan.explain` before anything executes.
+
+Auto-selection rules (each individually overridable):
+
+==========  ==============================================================
+knob        rule
+==========  ==============================================================
+layout      recorded/measured tile occupancy ``<= 25%`` -> ``sparse``
+            (the `BENCH_temporal.json` crossover); above, or unknown
+            without reading values -> ``dense`` (always correct)
+comm        mesh given -> ``repro.launch.mesh.recommended_comm`` with the
+            REAL cut (``boundary_nnz``): DCI exchange axes and a large
+            cut -> ``ring``, else ``dense``; no mesh -> ``dense`` (the
+            stacked in-process fold; ``"host"`` targets mesh-free
+            multi-process clusters and stays an explicit override)
+staging     store-backed raw-attribute analytics -> ``async`` (slice
+            reads overlap execution); in-memory weights, derived-weight
+            transforms, and composite analytics -> ``sync``
+placement   mesh given -> shard partitions over ``model_axes`` and
+            temporally concurrent instances over ``data_axis``;
+            else stacked
+==========  ==============================================================
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+# occupancy at or below which the packed active-tile layout wins (the
+# measured crossover regime — see the `sparse` row of BENCH_temporal.json
+# and the selection table in docs/ARCHITECTURE.md)
+SPARSE_OCCUPANCY_MAX = 0.25
+
+
+@dataclass(frozen=True)
+class PlanChoice:
+    """One resolved knob: value + who chose it + why.
+
+    >>> str(PlanChoice("sparse", "auto", "occupancy 12.5% <= 25%"))
+    'sparse [auto] occupancy 12.5% <= 25%'
+    """
+
+    value: Any
+    source: str  # "auto" | "override"
+    reason: str
+
+    def __str__(self) -> str:
+        return f"{self.value} [{self.source}] {self.reason}"
+
+
+def choice(value: Any, reason: str) -> PlanChoice:
+    return PlanChoice(value, "auto", reason)
+
+
+def override(value: Any) -> PlanChoice:
+    return PlanChoice(value, "override", "caller override")
+
+
+def _norm_param(v: Any) -> Any:
+    """Plan params must compare/render cleanly: arrays become tuples."""
+    if isinstance(v, np.ndarray):
+        return tuple(v.tolist())
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    return v
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """A fully resolved, costed execution of one analytic.
+
+    Immutable and deterministic: planning the same analytic against the
+    same collection yields an ``==``-equal plan (regression-tested), so a
+    plan doubles as a reproducible record of *how* a result was computed
+    — :class:`~repro.gopher.session.AnalyticResult` carries it along.
+    """
+
+    analytic: str
+    pattern: str
+    merge: Optional[str]
+    params: Tuple[Tuple[str, Any], ...]  # resolved, sorted by name
+    graph: str  # "template" | "symmetrized"
+    layout: PlanChoice  # "dense" | "sparse"
+    comm: PlanChoice  # "dense" | "ring" | "host"
+    staging: PlanChoice  # "sync" | "async"
+    placement: PlanChoice  # "stacked" | mesh descriptor string
+    estimates: Tuple[Tuple[str, Any], ...]  # cost-model outputs, sorted
+
+    @property
+    def param_dict(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+    @property
+    def estimate_dict(self) -> Dict[str, Any]:
+        return dict(self.estimates)
+
+    def explain(self) -> str:
+        """Render the plan: decisions, their provenance, and the cost
+        estimates — the paper's 'platform picks the execution' made
+        inspectable (``run_graph --explain`` prints exactly this)."""
+        est = self.estimate_dict
+        lines = [
+            f"ExecutionPlan: {self.analytic} (pattern={self.pattern}"
+            + (f", merge={self.merge}" if self.merge else "") + ")",
+            "  params: " + (", ".join(
+                f"{k}={v!r}" for k, v in self.params) or "(none)"),
+            f"  graph: {self.graph}"
+            + (f" — {est['num_vertices']} vertices, "
+               f"{est['n_parts']} partitions x block {est['block_size']}, "
+               f"cut {est['boundary_nnz']} published vertices"
+               if "num_vertices" in est else ""),
+        ]
+        for knob in ("layout", "comm", "staging", "placement"):
+            c: PlanChoice = getattr(self, knob)
+            lines.append(f"  {knob:<9} = {c.value!s:<8} [{c.source}] "
+                         f"{c.reason}")
+        byte_lines = []
+        if "staged_bytes_dense" in est:
+            s = f"    staged bytes: dense {est['staged_bytes_dense']:,}"
+            if est.get("staged_bytes_sparse") is not None:
+                s += (f" | sparse ~{est['staged_bytes_sparse']:,} "
+                      f"(occupancy {est['occupancy']:.1%})")
+            elif est.get("occupancy") is not None:
+                s += f" (occupancy {est['occupancy']:.1%})"
+            else:
+                s += " (activity unknown without reading values)"
+            byte_lines.append(s)
+        if "exchange_bytes_per_device" in est:
+            byte_lines.append(
+                f"    boundary exchange/superstep: "
+                f"{est['exchange_kind']} moves "
+                f"{est['exchange_bytes_per_device']:,.0f} B/device in "
+                f"{est['exchange_hops']} hop(s) "
+                f"({est['n_parts']} partitions, "
+                f"{est['boundary_nnz']} published vertices)")
+        if byte_lines:
+            lines.append("  estimates:")
+            lines.extend(byte_lines)
+        return "\n".join(lines)
+
+
+def plan_analytic(
+    analytic,
+    resolved_params: Dict[str, Any],
+    *,
+    bg,
+    mesh,
+    model_axes: Tuple[str, ...],
+    store_backed: bool,
+    occupancy: Optional[float],
+    sparse_buckets: Optional[Tuple[int, int]],
+    num_instances: int,
+    pattern: Optional[str] = None,
+    merge: Optional[str] = None,
+    layout: Optional[str] = None,
+    comm: Optional[str] = None,
+    staging: Optional[str] = None,
+) -> ExecutionPlan:
+    """Resolve every knob for one analytic (see module docstring rules).
+
+    ``occupancy``/``sparse_buckets`` come from recorded tile maps or an
+    in-memory activity scan — ``None`` means unknown without reading
+    values, which the planner treats as 'stay dense'."""
+    from repro.dist.collectives import boundary_exchange_bytes
+    from repro.launch.mesh import recommended_comm
+
+    pattern = pattern or analytic.pattern
+    assert pattern in ("sequential", "independent", "eventually"), pattern
+    merge = merge if merge is not None else analytic.merge
+    if merge is not None and pattern != "eventually":
+        raise ValueError(
+            f"merge={merge!r} is the eventually-dependent Merge; "
+            f"pattern {pattern!r} has none")
+
+    # ---- layout ----------------------------------------------------------
+    if layout is not None:
+        lay = override(layout)
+    elif occupancy is None:
+        lay = choice("dense", "tile activity unknown without reading "
+                              "values — dense is always correct")
+    elif occupancy <= SPARSE_OCCUPANCY_MAX:
+        lay = choice("sparse",
+                     f"recorded tile occupancy {occupancy:.1%} <= "
+                     f"{SPARSE_OCCUPANCY_MAX:.0%} — packed active tiles "
+                     f"cut staged bytes and SpMV work")
+    else:
+        lay = choice("dense",
+                     f"recorded tile occupancy {occupancy:.1%} > "
+                     f"{SPARSE_OCCUPANCY_MAX:.0%} — packing would buy "
+                     f"little over template tiles")
+
+    # ---- comm ------------------------------------------------------------
+    nnz = int(bg.boundary_nnz)
+    if comm is not None:
+        cm = override(comm)
+    elif mesh is None:
+        cm = choice("dense", "stacked in-process fold (no mesh; 'host' "
+                             "targets mesh-free multi-process clusters)")
+    else:
+        rec = recommended_comm(mesh, model_axes, boundary_nnz=nnz)
+        cm = choice(rec,
+                    f"recommended_comm over exchange axes {model_axes} "
+                    f"with boundary_nnz={nnz}")
+
+    # ---- staging ---------------------------------------------------------
+    if staging is not None:
+        st = override(staging)
+    elif not store_backed:
+        st = choice("sync", "weights already in memory — nothing to "
+                            "overlap but the tile fill")
+    elif analytic.composite:
+        st = choice("sync", "composite analytic re-reads its staged "
+                            "tiles across runs — staged once via the "
+                            "shared cache")
+    elif analytic.weights is not None:
+        st = choice("sync", f"derived weights ({analytic.transform_name}) "
+                            f"need the full attribute matrix before "
+                            f"staging")
+    else:
+        st = choice("async", "streaming from the GoFS store — slice "
+                             "reads + fills overlap execution")
+
+    # ---- placement -------------------------------------------------------
+    if mesh is None:
+        pl = choice("stacked", "no mesh — partitions stacked on one "
+                               "device, instances scanned")
+    else:
+        shape = dict(zip(mesh.axis_names, mesh.shape.values())) \
+            if hasattr(mesh.shape, "values") else dict(mesh.shape)
+        pl = choice(f"mesh{shape}",
+                    f"partitions over {model_axes}; temporally concurrent "
+                    f"patterns shard instances over the data axis")
+
+    # ---- estimates -------------------------------------------------------
+    B = bg.block_size
+    dense_bytes = int(num_instances * bg.n_parts
+                      * (bg.t_max + bg.tb_max) * B * B * 4)
+    sparse_bytes = None
+    if sparse_buckets is not None:
+        kb, kbb = sparse_buckets
+        sparse_bytes = int(num_instances * bg.n_parts
+                           * ((kb + kbb) * (B * B * 4 + 8)))
+    ex = boundary_exchange_bytes(bg.num_boundary, bg.n_parts, cm.value,
+                                 boundary_nnz=nnz)
+    estimates = {
+        "num_vertices": int(len(bg.part_of)),
+        "num_instances": int(num_instances),
+        "n_parts": int(bg.n_parts),
+        "block_size": int(B),
+        "boundary_nnz": nnz,
+        "occupancy": occupancy,
+        "staged_bytes_dense": dense_bytes,
+        "staged_bytes_sparse": sparse_bytes,
+        "exchange_kind": ex["kind"],
+        "exchange_hops": int(ex["hops"]),
+        "exchange_bytes_per_device": float(ex["bytes_per_device"]),
+    }
+    return ExecutionPlan(
+        analytic=analytic.name,
+        pattern=pattern,
+        merge=merge,
+        params=tuple(sorted(
+            (k, _norm_param(v)) for k, v in resolved_params.items()
+        )),
+        graph=analytic.graph,
+        layout=lay,
+        comm=cm,
+        staging=st,
+        placement=pl,
+        estimates=tuple(sorted(estimates.items())),
+    )

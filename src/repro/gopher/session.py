@@ -1,0 +1,687 @@
+"""GopherSession: the declarative entry point for temporal graph analytics.
+
+The paper positions Gopher as a *programming abstraction*: the user says
+WHAT to compute over the time-series collection, the platform (co-designed
+with GoFS) decides HOW.  ``GopherSession`` is that contract for this
+repo's execution machinery — one object wrapping a data source, with
+three verbs:
+
+* ``plan(analytic, **params)`` — resolve a registered analytic
+  (:mod:`repro.gopher.registry`) into a costed
+  :class:`~repro.gopher.planner.ExecutionPlan`: tile layout from the
+  recorded occupancy, comm backend from the real cut size, staging mode
+  from the source, placement from the mesh — every choice overridable
+  and rendered by ``plan.explain()`` before anything runs.
+* ``run(plan)`` — execute one plan, returning an
+  :class:`AnalyticResult` (the engine outputs + the plan that produced
+  them).
+* ``run_many([plans])`` — execute several plans over the SAME collection
+  with **shared staging**: analytics whose staged batches coincide
+  (same graph variant, attribute, transform, semiring zero, layout)
+  stage tiles once — one ``load_blocked``/prefetch pass feeding N engine
+  runners — the shared-scan amortization concurrent temporal queries
+  need (cf. Kairos in PAPERS.md).
+
+Data sources (all expose the same verbs):
+
+* a :class:`~repro.gofs.store.GoFSStore` — the deployed collection; the
+  blocked structure is reconstructed from the stored topology slices,
+  attributes stream from disk;
+* a :class:`~repro.core.graph.TimeSeriesGraph` — an in-memory collection
+  (examples, generators); the session partitions and blocks it;
+* :meth:`GopherSession.from_blocked` — a pre-built
+  :class:`~repro.core.blocked.BlockedGraph` plus raw ``(I, E)`` weight
+  matrices (what the legacy ``run_blocked`` wrappers use).
+
+>>> import numpy as np
+>>> from repro.core.blocked import build_blocked
+>>> from repro.core.graph import GraphTemplate
+>>> from repro.gopher import GopherSession
+>>> tmpl = GraphTemplate(num_vertices=4,
+...     src=np.array([0, 1, 2, 0]), dst=np.array([1, 2, 3, 2]))
+>>> bg = build_blocked(tmpl, np.array([0, 0, 1, 1]), block_size=2)
+>>> sess = GopherSession.from_blocked(
+...     bg, weights={"latency": np.ones((2, 4), np.float32)})
+>>> plan = sess.plan("sssp", source=0)     # every knob auto-selected
+>>> (plan.layout.value, plan.comm.value, plan.staging.value,
+...  plan.placement.value)
+('dense', 'dense', 'sync', 'stacked')
+>>> sess.run(plan).output["final"]
+array([0., 1., 1., 2.], dtype=float32)
+>>> both = sess.run_many([plan, sess.plan("sssp", source=1)])  # shared staging
+>>> both[1].output["final"]
+array([inf,  0.,  1.,  2.], dtype=float32)
+>>> sess.last_run_report["staging_passes"]  # two analytics, one staging
+1
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.blocked import BlockedGraph, SparseBlocked, pow2_bucket
+from repro.core.engine import EngineResult, RunSpec, TemporalEngine
+from repro.gopher.planner import ExecutionPlan, plan_analytic
+from repro.gopher.registry import Analytic, get_analytic
+
+ONES_ATTR = "__ones__"  # pseudo-attribute: unit weights on every edge
+
+
+# ---------------------------------------------------------------------------
+# Staged batches + the shared-staging cache
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StagedBatch:
+    """One materialized instance batch (dense tensors or a packed sparse
+    batch) plus the host bytes it cost — the unit ``run_many`` shares."""
+
+    layout: str
+    tiles: Optional[np.ndarray] = None  # dense (I, P, T, B, B)
+    btiles: Optional[np.ndarray] = None  # dense (I, P, Tb, B, B)
+    sp: Optional[SparseBlocked] = None  # sparse packed batch
+    nbytes: int = 0
+
+
+class _StagingCache:
+    """Per-``run_many`` cache of staged batches, keyed on
+    (graph variant, attribute, transform, zero_fill, layout).
+
+    Every miss is one staging pass; the counters are the shared-staging
+    accounting the ``shared_staging`` bench row gates on."""
+
+    def __init__(self):
+        self.entries: Dict[Tuple, Any] = {}
+        self.staged_bytes = 0  # host tile/index bytes materialized
+        self.staging_passes = 0  # distinct batch materializations
+
+    def staged(self, key: Tuple, maker: Callable[[], StagedBatch]) -> StagedBatch:
+        if key not in self.entries:
+            batch = maker()
+            self.staged_bytes += batch.nbytes
+            self.staging_passes += 1
+            self.entries[key] = batch
+        return self.entries[key]
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AnalyticResult:
+    """An executed plan: analytic-specific outputs + provenance.
+
+    ``output`` holds the analytic's payload (``final`` distances for
+    SSSP, ``ranks`` for PageRank, ``labels``, ``composite`` histograms,
+    ``trace`` ...); ``engine`` the underlying
+    :class:`~repro.core.engine.EngineResult` of the main run (``None``
+    only for analytics with no single main run); ``plan`` the exact
+    execution that produced them."""
+
+    plan: ExecutionPlan
+    engine: Optional[EngineResult]
+    output: Dict[str, Any] = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Execution context handed to program factories / composite executors
+# ---------------------------------------------------------------------------
+
+class PlanContext:
+    """What a registered analytic sees at execution time: the blocked
+    structure, template arrays, raw attributes, and ``run`` — all staging
+    routed through the shared cache so composite analytics amortize with
+    their neighbors."""
+
+    def __init__(self, session: "GopherSession", plan: ExecutionPlan,
+                 analytic: Analytic, cache: _StagingCache):
+        self.session = session
+        self.plan = plan
+        self.analytic = analytic
+        self.cache = cache
+        self.params = plan.param_dict
+
+    # ---- graph access ----------------------------------------------------
+    @property
+    def bg(self) -> BlockedGraph:
+        return self.session._blocked(self.plan.graph)
+
+    @property
+    def num_vertices(self) -> int:
+        return int(len(self.session.bg.part_of))
+
+    @property
+    def num_instances(self) -> int:
+        return self.session.num_instances
+
+    @property
+    def num_edges(self) -> int:
+        return self.session.num_edges
+
+    @property
+    def src(self) -> np.ndarray:
+        return self.session.src
+
+    @property
+    def dst(self) -> np.ndarray:
+        return self.session.dst
+
+    # ---- staged data -----------------------------------------------------
+    def staged(self) -> StagedBatch:
+        """The analytic's MAIN staged batch (attr/transform/zero from the
+        registry, layout from the plan) via the shared cache."""
+        return self.session._staged(
+            self.cache, self.analytic, self.plan.layout.value
+        )
+
+    def staged_ones(self) -> StagedBatch:
+        """Unit weights on every template edge, one instance — the
+        topology-only batch hop-count fixpoints and probe traversals use
+        (dense: every edge is live)."""
+        return self.session._staged_ones(self.cache)
+
+    def vertex_attr(self, name: str) -> np.ndarray:
+        """(I, V) vertex attribute matrix for the visible collection."""
+        return self.session._vertex_attr(name)
+
+    # ---- execution -------------------------------------------------------
+    def run(self, program, *, pattern: Optional[str] = None,
+            merge: Optional[str] = None, x0: Optional[np.ndarray] = None,
+            staged: Optional[StagedBatch] = None) -> EngineResult:
+        """One engine run over a staged batch under this plan's engine
+        configuration (comm/placement).  Defaults: the plan's pattern and
+        merge, the analytic's main staged batch."""
+        staged = staged if staged is not None else self.staged()
+        pattern = pattern or self.plan.pattern
+        merge = merge if merge is not None else (
+            self.plan.merge if pattern == "eventually" else None)
+        engine = self.session._engine(self.plan.graph, self.plan.comm.value)
+        spec = RunSpec(program, pattern, x0=x0, merge=merge)
+        return self.session._dispatch_specs(engine, [spec], staged)[0]
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+
+class GopherSession:
+    """Declarative session over one time-series graph collection.
+
+    See the module docstring for the data sources and verbs.  Placement
+    is session-level (``mesh``/``data_axis``/``model_axes``/
+    ``use_pallas``), analytics and their knobs are plan-level."""
+
+    def __init__(
+        self,
+        source=None,
+        *,
+        num_partitions: Optional[int] = None,
+        block_size: Optional[int] = None,
+        seed: int = 0,
+        mesh=None,
+        data_axis: str = "data",
+        model_axes: Tuple[str, ...] = ("model",),
+        use_pallas: bool = False,
+        bg: Optional[BlockedGraph] = None,
+        src: Optional[np.ndarray] = None,
+        dst: Optional[np.ndarray] = None,
+        weights: Optional[Dict[str, np.ndarray]] = None,
+        vertex_attrs: Optional[Dict[str, np.ndarray]] = None,
+    ):
+        from repro.core.graph import TimeSeriesGraph
+        from repro.gofs.store import GoFSStore
+
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.model_axes = tuple(model_axes)
+        self.use_pallas = use_pallas
+        self.store: Optional[GoFSStore] = None
+        self.tsg: Optional[TimeSeriesGraph] = None
+        self._weights = dict(weights or {})
+        self._vertex_attrs = dict(vertex_attrs or {})
+        self._engines: Dict[Tuple[str, str], TemporalEngine] = {}
+        self._bg_variants: Dict[str, BlockedGraph] = {}
+        self._w_cache: Dict[Tuple, np.ndarray] = {}
+        self._activity_cache: Dict[Tuple, Tuple] = {}
+        self.last_run_report: Dict[str, Any] = {}
+
+        if isinstance(source, GoFSStore):
+            self.store = source
+            s, d, assign = _store_template_arrays(source)
+            self.src, self.dst = s, d
+            bsz = block_size or _store_block_size(source) or 64
+            tmpl = _template_of(int(source.meta["num_vertices"]), s, d)
+            from repro.core.blocked import build_blocked
+
+            self.bg = build_blocked(tmpl, assign, bsz)
+            self.num_instances = source.num_timesteps()
+            self.num_edges = int(source.meta["num_edges"])
+        elif isinstance(source, TimeSeriesGraph):
+            self.tsg = source
+            tmpl = source.template
+            from repro.core.blocked import build_blocked
+            from repro.core.partition import partition_graph
+
+            assign = partition_graph(tmpl, num_partitions or 4, seed=seed)
+            self.src, self.dst = tmpl.src, tmpl.dst
+            self.bg = build_blocked(tmpl, assign, block_size or 64)
+            self.num_instances = len(source)
+            self.num_edges = int(tmpl.num_edges)
+        elif bg is not None:
+            self.bg = bg
+            self.src, self.dst = src, dst
+            self.num_edges = len(bg.le_edge_id) + len(bg.re_edge_id)
+            n_i = [np.asarray(w).shape[0] if np.asarray(w).ndim > 1 else 1
+                   for w in self._weights.values()]
+            n_i += [np.asarray(v).shape[0]
+                    for v in self._vertex_attrs.values()]
+            assert n_i, "from_blocked needs weights= or vertex_attrs="
+            self.num_instances = max(n_i)
+        else:
+            raise TypeError(
+                "GopherSession needs a GoFSStore, a TimeSeriesGraph, or "
+                "GopherSession.from_blocked(bg, weights=...)")
+        self._bg_variants["template"] = self.bg
+
+    @classmethod
+    def from_blocked(
+        cls,
+        bg: BlockedGraph,
+        *,
+        weights: Optional[Dict[str, np.ndarray]] = None,
+        vertex_attrs: Optional[Dict[str, np.ndarray]] = None,
+        src: Optional[np.ndarray] = None,
+        dst: Optional[np.ndarray] = None,
+        **kw,
+    ) -> "GopherSession":
+        """Session over a pre-built blocked structure + raw ``(I, E)``
+        attribute matrices (``weights``) and ``(I, V)`` vertex matrices
+        (``vertex_attrs``).  ``src``/``dst`` (template edge endpoints)
+        are only needed by analytics that derive weights from topology
+        (PageRank's outdegree normalization, components' symmetrized
+        graph)."""
+        return cls(None, bg=bg, weights=weights, vertex_attrs=vertex_attrs,
+                   src=src, dst=dst, **kw)
+
+    # ------------------------------------------------------------ planning
+    def plan(
+        self,
+        analytic: str,
+        *,
+        pattern: Optional[str] = None,
+        merge: Optional[str] = None,
+        layout: Optional[str] = None,
+        comm: Optional[str] = None,
+        staging: Optional[str] = None,
+        **params,
+    ) -> ExecutionPlan:
+        """Resolve ``analytic`` into a costed :class:`ExecutionPlan`.
+
+        Every knob (``layout``/``comm``/``staging``, plus ``pattern`` and
+        ``merge`` for program analytics) defaults to the planner's
+        auto-selection — pass a value to override; the plan records which
+        happened and why (``plan.explain()``).  Planning never reads a
+        value slice: activity comes from deployment-recorded tile maps
+        (stores) or an in-memory scan (arrays)."""
+        assert layout in (None, "dense", "sparse"), layout
+        assert comm in (None, "dense", "ring", "host"), comm
+        assert staging in (None, "sync", "async"), staging
+        a = get_analytic(analytic)
+        resolved = a.resolve_params(params)
+        # activity only matters to the layout decision; an override skips
+        # the scan (estimates then omit occupancy)
+        occupancy, buckets = (None, None) if layout is not None \
+            else self._plan_activity(a)
+        return plan_analytic(
+            a, resolved,
+            bg=self._blocked(a.graph),
+            mesh=self.mesh,
+            model_axes=self.model_axes,
+            store_backed=self.store is not None,
+            occupancy=occupancy,
+            sparse_buckets=buckets,
+            num_instances=self.num_instances,
+            pattern=pattern, merge=merge,
+            layout=layout, comm=comm, staging=staging,
+        )
+
+    def explain(self, analytic: str, **kw) -> str:
+        """``plan(...).explain()`` in one call."""
+        return self.plan(analytic, **kw).explain()
+
+    # ----------------------------------------------------------- execution
+    def run(self, plan, **params) -> AnalyticResult:
+        """Execute one plan (or plan an analytic by name and execute it)."""
+        if isinstance(plan, str):
+            plan = self.plan(plan, **params)
+        else:
+            assert not params, "params belong to plan(); got a built plan"
+        return self.run_many([plan])[0]
+
+    def run_many(self, plans: Sequence[ExecutionPlan]) -> List[AnalyticResult]:
+        """Execute several plans over this collection with shared staging.
+
+        Plans whose staged batches coincide (same graph variant,
+        attribute, weight transform, semiring zero, and layout) stage
+        tiles ONCE; program analytics sharing a batch additionally share
+        one :meth:`TemporalEngine.run_many` pass — for async store-backed
+        groups that is a single disk prefetch pass feeding N runners.
+        Results come back in plan order, bitwise identical to running
+        each plan alone; ``session.last_run_report`` records the staging
+        economy (bytes, passes)."""
+        plans = list(plans)
+        cache = _StagingCache()
+        results: List[Optional[AnalyticResult]] = [None] * len(plans)
+        resolved = [get_analytic(p.analytic) for p in plans]
+
+        # staging keys composite analytics will pull from the cache — a
+        # program group sharing one of these must stage through the cache
+        # (not a private stream) or the sharing is lost
+        composite_keys = {
+            self._main_key(a, p.layout.value)
+            for a, p in zip(resolved, plans) if a.composite
+        }
+
+        # ---- program analytics: group by (staging key, comm) -------------
+        groups: Dict[Tuple, List[int]] = {}
+        for i, (a, p) in enumerate(zip(resolved, plans)):
+            if not a.composite:
+                key = self._main_key(a, p.layout.value) + (p.comm.value,)
+                groups.setdefault(key, []).append(i)
+        # a staging key split across comm backends must stage via the
+        # cache (a private stream per group would re-read the disk)
+        skey_groups: Dict[Tuple, int] = {}
+        for key in groups:
+            skey_groups[key[:-1]] = skey_groups.get(key[:-1], 0) + 1
+        for key, idxs in groups.items():
+            skey, comm = key[:-1], key[-1]
+            graph, attr, transform, zero, layout = skey
+            specs = []
+            for i in idxs:
+                ctx = PlanContext(self, plans[i], resolved[i], cache)
+                program = resolved[i].make_program(
+                    ctx, **plans[i].param_dict)
+                specs.append(RunSpec(program, plans[i].pattern,
+                                     merge=plans[i].merge))
+            engine = self._engine(graph, comm)
+            stream_ok = (
+                self.store is not None
+                and transform == "raw" and attr != ONES_ATTR
+                and graph == "template"
+                and skey not in composite_keys
+                and skey_groups[skey] == 1
+                and skey not in cache.entries
+                and all(plans[i].staging.value == "async" for i in idxs)
+            )
+            if stream_ok:
+                # ONE disk prefetch pass feeds all N runners; chunk bytes
+                # are counted by the wrapper so the staging economy report
+                # is comparable with the cache path
+                stream = self.store.load_blocked_stream(
+                    self.bg, attr, zero=zero, layout=layout)
+                cache.staging_passes += 1
+                outs = engine.run_many(
+                    specs, stream=_counted_chunks(stream, cache))
+            else:
+                # any member analytic materializes the same batch (the
+                # transform rides in the group key)
+                staged = self._staged(cache, resolved[idxs[0]], layout)
+                outs = self._dispatch_specs(engine, specs, staged)
+            for i, res in zip(idxs, outs):
+                results[i] = self._wrap(plans[i], resolved[i], res, cache)
+
+        # ---- composite analytics (draw from the same cache) --------------
+        for i, (a, p) in enumerate(zip(resolved, plans)):
+            if a.composite:
+                ctx = PlanContext(self, p, a, cache)
+                payload = a.execute(ctx, **p.param_dict)
+                engine_res = payload.pop("__engine__", None)
+                results[i] = AnalyticResult(plan=p, engine=engine_res,
+                                            output=payload)
+
+        self.last_run_report = {
+            "staged_bytes": cache.staged_bytes,
+            "staging_passes": cache.staging_passes,
+            "analytics": [p.analytic for p in plans],
+        }
+        return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------ internals
+    def _wrap(self, plan: ExecutionPlan, a: Analytic, res: EngineResult,
+              cache: _StagingCache) -> AnalyticResult:
+        payload: Dict[str, Any] = {}
+        if a.postprocess is not None:
+            ctx = PlanContext(self, plan, a, cache)
+            payload = a.postprocess(ctx, res, **plan.param_dict)
+        return AnalyticResult(plan=plan, engine=res, output=payload)
+
+    def _dispatch_specs(self, engine: TemporalEngine,
+                        specs: List[RunSpec],
+                        staged: StagedBatch) -> List[EngineResult]:
+        if staged.layout == "sparse":
+            return engine.run_many(specs, sparse=staged.sp)
+        return engine.run_many(specs, tiles=staged.tiles,
+                               btiles=staged.btiles)
+
+    def _engine(self, graph: str, comm: str) -> TemporalEngine:
+        key = (graph, comm)
+        if key not in self._engines:
+            self._engines[key] = TemporalEngine(
+                self._blocked(graph), mesh=self.mesh,
+                data_axis=self.data_axis, model_axes=self.model_axes,
+                use_pallas=self.use_pallas, comm=comm,
+            )
+        return self._engines[key]
+
+    def _blocked(self, graph: str) -> BlockedGraph:
+        if graph not in self._bg_variants:
+            assert graph == "symmetrized", graph
+            assert self.src is not None and self.dst is not None, \
+                "symmetrized-graph analytics need template src/dst " \
+                "(pass src=/dst= to from_blocked)"
+            from repro.core.algorithms.components import symmetrized_blocked
+
+            self._bg_variants[graph] = symmetrized_blocked(
+                self.bg, self.src, self.dst)
+        return self._bg_variants[graph]
+
+    # ---- raw + transformed weights ---------------------------------------
+    def _raw(self, attr: str) -> np.ndarray:
+        """(I, E) raw edge-attribute matrix (cached per attribute)."""
+        key = ("raw", attr)
+        if key in self._w_cache:
+            return self._w_cache[key]
+        if attr == ONES_ATTR:
+            w = np.ones((1, self.num_edges), np.float32)
+        elif self.store is not None:
+            w = self.store.edge_attr_matrix(attr)
+        elif self.tsg is not None:
+            w = np.stack([
+                np.asarray(self.tsg.edge_values(t, attr), np.float32)
+                for t in range(self.num_instances)
+            ])
+        else:
+            try:
+                w = np.asarray(self._weights[attr], np.float32)
+            except KeyError:
+                raise KeyError(
+                    f"session has no weights for attribute {attr!r}; "
+                    f"available: {sorted(self._weights)}") from None
+            if w.ndim == 1:
+                w = w[None]
+        self._w_cache[key] = w
+        return w
+
+    def _vertex_attr(self, name: str) -> np.ndarray:
+        key = ("vattr", name)
+        if key in self._w_cache:
+            return self._w_cache[key]
+        if self.store is not None:
+            v = self.store.vertex_attr_matrix(name)
+        elif self.tsg is not None:
+            v = np.stack([
+                np.asarray(self.tsg.vertex_values(t, name))
+                for t in range(self.num_instances)
+            ])
+        else:
+            try:
+                v = np.asarray(self._vertex_attrs[name])
+            except KeyError:
+                raise KeyError(
+                    f"session has no vertex attribute {name!r}; "
+                    f"available: {sorted(self._vertex_attrs)}") from None
+        self._w_cache[key] = v
+        return v
+
+    def _staged_weights(self, a: Analytic) -> np.ndarray:
+        """The analytic's transformed (I, E') staging weights (cached)."""
+        key = ("w", a.graph, a.attr, a.transform_name)
+        if key in self._w_cache:
+            return self._w_cache[key]
+        raw = self._raw(a.attr)
+        w = raw if a.weights is None else a.weights(self, raw)
+        self._w_cache[key] = w
+        return w
+
+    # ---- staging ----------------------------------------------------------
+    def _main_key(self, a: Analytic, layout: str) -> Tuple:
+        return (a.graph, a.attr, a.transform_name, float(a.zero_fill),
+                layout)
+
+    def cache_staged(self, cache: _StagingCache, skey: Tuple) -> StagedBatch:
+        graph, attr, transform, zero, layout = skey
+
+        def maker() -> StagedBatch:
+            bg = self._blocked(graph)
+            if (self.store is not None and transform == "raw"
+                    and graph == "template" and attr != ONES_ATTR):
+                out = self.store.load_blocked(bg, attr, zero=zero,
+                                              layout=layout)
+                if layout == "sparse":
+                    return StagedBatch(layout=layout, sp=out,
+                                       nbytes=out.staged_bytes())
+                tiles, btiles = out
+                return StagedBatch(layout=layout, tiles=tiles,
+                                   btiles=btiles,
+                                   nbytes=tiles.nbytes + btiles.nbytes)
+            w = self._staged_weights_by_key(graph, attr, transform)
+            if layout == "sparse":
+                sp = bg.stage_sparse(w, zero=zero)
+                return StagedBatch(layout=layout, sp=sp,
+                                   nbytes=sp.staged_bytes())
+            tiles = bg.fill_local_batch(w, zero=zero)
+            btiles = bg.fill_boundary_batch(w, zero=zero)
+            return StagedBatch(layout=layout, tiles=tiles, btiles=btiles,
+                               nbytes=tiles.nbytes + btiles.nbytes)
+
+        return cache.staged(skey, maker)
+
+    def _staged_weights_by_key(self, graph: str, attr: str,
+                               transform: str) -> np.ndarray:
+        key = ("w", graph, attr, transform)
+        if key in self._w_cache:
+            return self._w_cache[key]
+        assert transform == "raw", \
+            f"transform {transform!r} must be materialized via its analytic"
+        return self._raw(attr)
+
+    def _staged(self, cache: _StagingCache, a: Analytic,
+                layout: str) -> StagedBatch:
+        self._staged_weights(a)  # materialize the transform into _w_cache
+        return self.cache_staged(cache, self._main_key(a, layout))
+
+    def _staged_ones(self, cache: _StagingCache) -> StagedBatch:
+        from repro.core.semiring import INF
+
+        return self.cache_staged(
+            cache, ("template", ONES_ATTR, "raw", float(INF), "dense"))
+
+    # ---- planning inputs ---------------------------------------------------
+    def _plan_activity(self, a: Analytic):
+        """(occupancy, pow2 buckets) for the analytic's main staging —
+        from recorded tile maps (stores: no value read) or an in-memory
+        activity scan (arrays); (None, None) when unknowable cheaply."""
+        key = (a.graph, a.attr, a.transform_name, float(a.zero_fill))
+        if key in self._activity_cache:
+            return self._activity_cache[key]
+        bg = self._blocked(a.graph)
+        if self.store is not None:
+            if a.weights is None and a.graph == "template":
+                occ = self.store.tile_occupancy(bg, a.attr,
+                                                zero=a.zero_fill)
+                buckets = self.store.sparse_buckets(bg, a.attr,
+                                                    zero=a.zero_fill)
+            else:
+                occ, buckets = None, None  # needs a value read: stay dense
+        else:
+            w = self._staged_weights(a)
+            act_l, act_b = bg.active_tile_maps(w, zero=a.zero_fill)
+            denom = w.shape[0] * (int(bg.n_tiles.sum())
+                                  + int(bg.n_btiles.sum()))
+            occ = (float(int(act_l.sum()) + int(act_b.sum())) / denom
+                   if denom else 0.0)
+            buckets = (
+                pow2_bucket(int(act_l.sum(-1).max()) if act_l.size else 0),
+                pow2_bucket(int(act_b.sum(-1).max()) if act_b.size else 0),
+            )
+        self._activity_cache[key] = (occ, buckets)
+        return occ, buckets
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _counted_chunks(stream, cache: _StagingCache):
+    """Pass chunks through, accounting their staged bytes so streamed and
+    cached staging report comparably."""
+    for ch in stream:
+        n = ch.tiles.nbytes + ch.btiles.nbytes
+        for a in (ch.rows, ch.cols, ch.brows, ch.bcols):
+            if a is not None:
+                n += a.nbytes
+        cache.staged_bytes += n
+        yield ch
+
+
+def _template_of(num_vertices: int, src: np.ndarray, dst: np.ndarray):
+    from repro.core.graph import GraphTemplate
+
+    return GraphTemplate(num_vertices=num_vertices, src=src, dst=dst)
+
+
+def _store_template_arrays(store):
+    """Reconstruct (src, dst, partition assignment) in template order from
+    the stored topology slices — the session's blocked structure needs no
+    regeneration of the original collection (every edge is local XOR
+    remote in exactly one subgraph)."""
+    V = int(store.meta["num_vertices"])
+    E = int(store.meta["num_edges"])
+    src = np.full(E, -1, np.int64)
+    dst = np.full(E, -1, np.int64)
+    assign = np.zeros(V, np.int32)
+    for g in store.subgraph_ids():
+        topo = store.get_topology(g)
+        assign[topo.vertices] = topo.pid
+        if len(topo.local_edge_id):
+            src[topo.local_edge_id] = topo.vertices[topo.local_src]
+            dst[topo.local_edge_id] = topo.vertices[topo.local_dst]
+        if len(topo.remote_edge_id):
+            src[topo.remote_edge_id] = topo.vertices[topo.remote_src]
+            dst[topo.remote_edge_id] = topo.remote_dst_vertex
+    assert (src >= 0).all() and (dst >= 0).all(), \
+        "store topology does not cover every template edge"
+    return src, dst, assign
+
+
+def _store_block_size(store) -> Optional[int]:
+    """Deployment-recorded block size, when any tile map was recorded
+    (deterministic: first attribute in sorted order)."""
+    for name in sorted(store.meta.get("sparse_absent", {})):
+        maps = store.edge_tile_maps(name)
+        if maps is not None:
+            return int(maps["block_size"])
+    return None

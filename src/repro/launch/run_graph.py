@@ -5,10 +5,14 @@ deployment (the paper's end-to-end path).
       --deploy /tmp/gofs --source 0
 
 Apps: sssp (sequential), pagerank (independent), nhop (eventually),
-tracking (sequential, Alg. 1), cc (independent).  ``--engine blocked`` runs
-the TPU-adapted blocked engine instead of the faithful host engine;
-``--comm dense|ring|host`` picks its boundary-exchange backend
-(repro.core.comm — identical results, different byte movement).
+tracking (sequential, Alg. 1), cc (independent).
+
+``--engine blocked`` runs the TPU-adapted path through the declarative
+Gopher session API (``repro.gopher``): the session reconstructs the
+blocked structure straight from the deployed topology slices and
+auto-selects layout/comm/staging — pass ``--comm``/``--layout``/
+``--staging`` to override any knob, and ``--explain`` to print the chosen
+plan with its cost estimates WITHOUT executing anything.
 """
 from __future__ import annotations
 
@@ -19,10 +23,8 @@ import time
 import numpy as np
 
 from repro.configs import get_graph_config
-from repro.core.algorithms import components, nhop, pagerank, sssp, tracking
-from repro.core.blocked import build_blocked
+from repro.core.algorithms import nhop, pagerank, sssp, tracking
 from repro.core.generator import generate_collection
-from repro.core.partition import discover_subgraphs, edge_cut, partition_graph
 from repro.gofs import GoFSStore, deploy_collection
 
 
@@ -39,6 +41,45 @@ def ensure_deployment(size: str, root: str, cache_slots: int):
     )
 
 
+def session_plan(store, cfg, args):
+    """Build the declarative session + plan for the chosen app."""
+    from repro.gopher import GopherSession
+
+    sess = GopherSession(store, block_size=cfg.block_size)
+    knobs = dict(comm=args.comm, layout=args.layout, staging=args.staging)
+    if args.app == "sssp":
+        plan = sess.plan("sssp", source=args.source, **knobs)
+    elif args.app == "pagerank":
+        plan = sess.plan("pagerank", iters=10, **knobs)
+    elif args.app == "nhop":
+        plan = sess.plan("nhop", source=args.source, n_hops=6, **knobs)
+    elif args.app == "tracking":
+        plan = sess.plan("tracking", plate=args.plate,
+                         initial_vertex=args.source, **knobs)
+    else:  # cc
+        plan = sess.plan("components", **knobs)
+    return sess, plan
+
+
+def report_blocked(app: str, res) -> None:
+    out = res.output
+    if app == "sssp":
+        dist = out["final"]
+        ss = res.engine.stats["supersteps"].tolist()
+        print(f"[gopher] SSSP reached {int(np.isfinite(dist).sum())}; "
+              f"supersteps/timestep={ss}")
+    elif app == "pagerank":
+        print(f"[gopher] PageRank top vertex (t=0): "
+              f"{int(out['ranks'][0].argmax())}")
+    elif app == "nhop":
+        print(f"[gopher] N-hop composite: {out['composite']}")
+    elif app == "tracking":
+        print(f"[gopher] track: {out['trace']}")
+    else:
+        counts = [len(np.unique(l)) for l in out["labels"]]
+        print(f"[gopher] components per instance: {counts}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="sssp",
@@ -50,14 +91,27 @@ def main() -> None:
     ap.add_argument("--plate", type=int, default=3)
     ap.add_argument("--cache-slots", type=int, default=14)
     ap.add_argument("--workers", type=int, default=0)
-    ap.add_argument("--comm", default="dense",
+    ap.add_argument("--comm", default=None,
                     choices=["dense", "ring", "host"],
-                    help="blocked-engine boundary exchange (repro.core.comm)")
+                    help="override the planned boundary-exchange backend "
+                         "(repro.core.comm; default: planner-selected)")
+    ap.add_argument("--layout", default=None, choices=["dense", "sparse"],
+                    help="override the planned tile layout")
+    ap.add_argument("--staging", default=None, choices=["sync", "async"],
+                    help="override the planned staging mode")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the execution plan (auto-selected knobs + "
+                         "cost estimates) and exit without executing")
     args = ap.parse_args()
 
     cfg, store = ensure_deployment(args.size, args.deploy, args.cache_slots)
-    t0 = time.time()
 
+    if args.explain:
+        sess, plan = session_plan(store, cfg, args)
+        print(plan.explain())
+        return
+
+    t0 = time.time()
     if args.engine == "host":
         if args.app == "sssp":
             dist, res = sssp.run_host(store, args.source, workers=args.workers)
@@ -81,39 +135,10 @@ def main() -> None:
         else:
             raise SystemExit("cc requires --engine blocked")
     else:
-        # blocked engine needs template arrays: regenerate deterministically
-        tsg = generate_collection(cfg)
-        tmpl = tsg.template
-        assign = partition_graph(tmpl, cfg.num_partitions, seed=cfg.seed)
-        bg = build_blocked(tmpl, assign, cfg.block_size)
-        I = len(tsg)
-        if args.app == "sssp":
-            w = np.stack([tsg.edge_values(t, "latency") for t in range(I)])
-            dist, stats = sssp.run_blocked(bg, w, args.source,
-                                           comm=args.comm)
-            print(f"[gopher] SSSP reached {int(np.isfinite(dist).sum())}; "
-                  f"supersteps/timestep={stats['supersteps'].tolist()}")
-        elif args.app == "pagerank":
-            a = np.stack([tsg.edge_values(t, "active") for t in range(I)])
-            ranks, iters = pagerank.run_blocked(
-                bg, tmpl.src, a, num_vertices=tmpl.num_vertices, iters=10,
-                comm=args.comm)
-            print(f"[gopher] PageRank top vertex (t=0): {int(ranks[0].argmax())}")
-        elif args.app == "nhop":
-            w = np.stack([tsg.edge_values(t, "latency") for t in range(I)])
-            comp, per = nhop.run_blocked(bg, w, args.source, n_hops=6,
-                                         comm=args.comm)
-            print(f"[gopher] N-hop composite: {comp}")
-        elif args.app == "tracking":
-            plates = np.stack([tsg.vertex_values(t, "plate") for t in range(I)])
-            trace = tracking.run_blocked(bg, plates, args.plate,
-                                         args.source, comm=args.comm)
-            print(f"[gopher] track: {trace}")
-        else:
-            a = tsg.edge_values(0, "active")
-            labels = components.run_blocked(bg, tmpl.src, tmpl.dst, a,
-                                            comm=args.comm)
-            print(f"[gopher] components: {len(np.unique(labels))}")
+        sess, plan = session_plan(store, cfg, args)
+        print(plan.explain())
+        res = sess.run(plan)
+        report_blocked(args.app, res)
 
     print(f"[gopher] {args.app}/{args.engine} done in {time.time()-t0:.1f}s; "
           f"GoFS stats: {store.snapshot_stats()}")

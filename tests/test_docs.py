@@ -59,7 +59,8 @@ def test_named_module_paths_exist(md):
     "modname",
     ["repro.core.engine", "repro.core.comm", "repro.core.blocked",
      "repro.gofs.prefetch", "repro.dist.collectives",
-     "repro.launch.mesh"],
+     "repro.launch.mesh", "repro.gopher.session", "repro.gopher.registry",
+     "repro.gopher.planner"],
 )
 def test_docstring_examples_run(modname):
     """The per-pattern snippets documented on TemporalEngine /

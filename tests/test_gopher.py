@@ -1,0 +1,448 @@
+"""Gopher session API: registry, planner, and shared-staging executor.
+
+Contracts pinned here:
+
+* registry — duplicate registration and unknown analytics/params error
+  loudly; the five stock algorithms are registered.
+* planner — plans are deterministic (same store root -> ``==`` plans) and
+  never read a value slice when store-backed; auto-selection picks sparse
+  at low recorded occupancy and falls back to dense when activity is
+  unknowable.
+* executor — the auto-selected plan reproduces the explicit-kwarg engine
+  BITWISE for min-plus across all three iBSP patterns x both layouts x
+  all three comm backends; ``run_many`` shares staging (fewer passes,
+  fewer bytes) with identical results.
+* engine — the staged-batch device cache re-uploads nothing when the
+  same staged graph is reused (regression: counts ``_device_put`` calls).
+* legacy — every ``run_blocked`` wrapper fires ``DeprecationWarning`` and
+  matches its pre-session result.
+"""
+import numpy as np
+import pytest
+
+import repro.core.engine as engine_mod
+from repro.core.blocked import build_blocked
+from repro.core.engine import (
+    RunSpec,
+    TemporalEngine,
+    min_plus_program,
+    pagerank_program,
+    source_init,
+)
+from repro.core.generator import generate_collection
+from repro.core.graph import GraphTemplate
+from repro.core.partition import partition_graph
+from repro.core.semiring import INF
+from repro.gopher import (
+    GopherSession,
+    REQUIRED,
+    get_analytic,
+    list_analytics,
+    register_analytic,
+)
+
+from tests.conftest import TINY
+
+
+# --------------------------------------------------------------------------
+# fixtures
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny(tiny_collection):
+    tsg = tiny_collection
+    tmpl = tsg.template
+    assign = partition_graph(tmpl, TINY.num_partitions, seed=TINY.seed)
+    bg = build_blocked(tmpl, assign, TINY.block_size)
+    I = len(tsg)
+    w = np.stack([tsg.edge_values(t, "latency") for t in range(I)])
+    active = np.stack([tsg.edge_values(t, "active") for t in range(I)])
+    plates = np.stack([tsg.vertex_values(t, "plate") for t in range(I)])
+    return tsg, tmpl, bg, w, active, plates
+
+
+@pytest.fixture(scope="module")
+def sparse_store_root(tiny_collection, tmp_path_factory):
+    """Deployment with recorded tile maps for latency (sparse staging)."""
+    from repro.gofs import deploy_collection
+
+    root = str(tmp_path_factory.mktemp("gofs_gopher"))
+    deploy_collection(tiny_collection, TINY, root,
+                      sparse_absent={"latency": np.inf})
+    return root
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+def test_stock_analytics_registered():
+    assert {"sssp", "pagerank", "components", "nhop", "tracking"} \
+        <= set(list_analytics())
+
+
+def test_duplicate_registration_rejected():
+    from repro.gopher.registry import _REGISTRY
+
+    try:
+        @register_analytic("_dup_probe", pattern="sequential",
+                           attr="latency", zero_fill=INF)
+        def _p1(ctx):
+            raise NotImplementedError
+
+        with pytest.raises(ValueError, match="already registered"):
+            @register_analytic("_dup_probe", pattern="sequential",
+                               attr="latency", zero_fill=INF)
+            def _p2(ctx):
+                raise NotImplementedError
+    finally:
+        # the registry is module-global; leaking the probe would make the
+        # registry doctest (exact list_analytics output) order-dependent
+        _REGISTRY.pop("_dup_probe", None)
+
+
+def test_unknown_analytic_lists_registered():
+    with pytest.raises(KeyError, match="sssp"):
+        get_analytic("ssssp")
+
+
+def test_param_validation(tiny):
+    _, _, bg, w, _, _ = tiny
+    sess = GopherSession.from_blocked(bg, weights={"latency": w})
+    with pytest.raises(TypeError, match="unknown parameter"):
+        sess.plan("sssp", source=0, sources=1)
+    with pytest.raises(TypeError, match="required parameter"):
+        sess.plan("sssp")
+
+
+# --------------------------------------------------------------------------
+# planner
+# --------------------------------------------------------------------------
+
+def test_plan_deterministic_from_store(sparse_store_root):
+    from repro.gofs import GoFSStore
+
+    p1 = GopherSession(GoFSStore(sparse_store_root)).plan("sssp", source=0)
+    p2 = GopherSession(GoFSStore(sparse_store_root)).plan("sssp", source=0)
+    assert p1 == p2
+    assert p1.explain() == p2.explain()
+
+
+def test_plan_reads_no_value_slice(sparse_store_root):
+    """Planning is metadata-only: no attribute value slice is opened."""
+    from repro.gofs import GoFSStore
+
+    store = GoFSStore(sparse_store_root)
+    sess = GopherSession(store)  # reads templates + metadata
+    store.reset_stats()
+    sess.plan("sssp", source=0)
+    sess.plan("nhop", source=0)
+    # the only array slice planning may touch is the tile map
+    assert store.stats.slices_read <= 1
+
+
+def test_auto_layout_thresholds(tiny):
+    _, tmpl, bg, w, _, _ = tiny
+    # dense weights: every tile live -> dense layout
+    sess = GopherSession.from_blocked(bg, weights={"latency": w})
+    plan = sess.plan("sssp", source=0)
+    assert plan.layout.value == "dense" and plan.layout.source == "auto"
+    # mask to a sliver of edges -> low occupancy -> sparse layout
+    wl = np.where(np.arange(w.shape[1])[None, :] % 16 == 0, w, np.inf)
+    sess_lo = GopherSession.from_blocked(
+        bg, weights={"latency": wl.astype(np.float32)})
+    plan_lo = sess_lo.plan("sssp", source=0)
+    occ = plan_lo.estimate_dict["occupancy"]
+    if occ <= 0.25:  # structure-dependent; assert consistency either way
+        assert plan_lo.layout.value == "sparse"
+    else:
+        assert plan_lo.layout.value == "dense"
+    # override always wins
+    assert sess.plan("sssp", source=0,
+                     layout="sparse").layout.source == "override"
+
+
+def test_plan_explain_mentions_choices(tiny):
+    _, _, bg, w, _, _ = tiny
+    sess = GopherSession.from_blocked(bg, weights={"latency": w})
+    text = sess.explain("sssp", source=0)
+    for needle in ("layout", "comm", "staging", "placement",
+                   "boundary exchange", "staged bytes"):
+        assert needle in text, text
+
+
+def test_plan_unknown_activity_stays_dense(sparse_store_root):
+    """No tile map for 'active' -> occupancy unknowable -> dense."""
+    from repro.gofs import GoFSStore
+
+    sess = GopherSession(GoFSStore(sparse_store_root))
+    plan = sess.plan("pagerank")
+    assert plan.layout.value == "dense"
+    assert plan.estimate_dict["occupancy"] is None
+
+
+# --------------------------------------------------------------------------
+# executor: auto plan == hand-configured engine, bitwise (min-plus)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern", ["sequential", "independent",
+                                     "eventually"])
+@pytest.mark.parametrize("layout", ["dense", "sparse"])
+def test_session_matches_engine_bitwise(tiny, pattern, layout):
+    _, _, bg, w, _, _ = tiny
+    merge = "mean" if pattern == "eventually" else None
+    sess = GopherSession.from_blocked(bg, weights={"latency": w})
+    plan = sess.plan("sssp", source=0, pattern=pattern, merge=merge,
+                     layout=layout)
+    res = sess.run(plan)
+    eng = TemporalEngine(bg, layout=layout)
+    ref = eng.run(min_plus_program(
+        "sssp", init=source_init(0)), w, pattern=pattern, merge=merge)
+    assert np.array_equal(res.engine.values, ref.values)
+    assert np.array_equal(res.engine.final, ref.final)
+    if merge:
+        assert np.array_equal(res.engine.merged, ref.merged)
+
+
+@pytest.mark.parametrize("comm", ["dense", "ring", "host"])
+@pytest.mark.parametrize("layout", ["dense", "sparse"])
+def test_session_matches_engine_across_comms(tiny, comm, layout):
+    _, _, bg, w, _, _ = tiny
+    sess = GopherSession.from_blocked(bg, weights={"latency": w})
+    res = sess.run(sess.plan("sssp", source=0, comm=comm, layout=layout))
+    ref = TemporalEngine(bg, comm=comm, layout=layout).run(
+        min_plus_program("sssp", init=source_init(0)), w,
+        pattern="sequential")
+    assert np.array_equal(res.engine.values, ref.values)
+
+
+def test_store_session_matches_in_memory(sparse_store_root, tiny):
+    """The store-backed session (blocked structure reconstructed from
+    topology slices) reproduces the in-memory engine bitwise — auto plan
+    included (async staging, recorded-map layout)."""
+    from repro.gofs import GoFSStore
+
+    _, _, bg, w, _, _ = tiny
+    sess = GopherSession(GoFSStore(sparse_store_root))
+    plan = sess.plan("sssp", source=0)
+    assert plan.staging.value == "async"  # streaming from the store
+    res = sess.run(plan)
+    ref = TemporalEngine(bg).run(
+        min_plus_program("sssp", init=source_init(0)), w,
+        pattern="sequential")
+    assert np.array_equal(res.output["final"], ref.final)
+    assert np.array_equal(res.engine.values, ref.values)
+
+
+# --------------------------------------------------------------------------
+# run_many: shared staging
+# --------------------------------------------------------------------------
+
+def test_run_many_shares_staging_bitwise(tiny):
+    _, _, bg, w, _, plates = tiny
+    sess = GopherSession.from_blocked(
+        bg, weights={"latency": w}, vertex_attrs={"plate": plates})
+    plans = [
+        sess.plan("sssp", source=0),
+        sess.plan("sssp", source=1, pattern="independent"),
+        sess.plan("nhop", source=0, n_hops=3),
+        sess.plan("tracking", plate=3, initial_vertex=0),
+    ]
+    rs = sess.run_many(plans)
+    shared = dict(sess.last_run_report)
+    # sssp + sssp + nhop share the latency batch; nhop's hop probe and
+    # tracking share the unit-weight batch -> exactly two staging passes
+    assert shared["staging_passes"] == 2
+    # identical to independent executions
+    singles = []
+    bytes_indep = 0
+    for p in plans:
+        s2 = GopherSession.from_blocked(
+            bg, weights={"latency": w}, vertex_attrs={"plate": plates})
+        singles.append(s2.run(p))
+        bytes_indep += s2.last_run_report["staged_bytes"]
+    assert bytes_indep > shared["staged_bytes"]
+    for got, ref in zip(rs, singles):
+        if got.engine is not None:
+            assert np.array_equal(got.engine.values, ref.engine.values)
+        assert set(got.output) == set(ref.output)
+        for k in got.output:
+            assert np.array_equal(got.output[k], ref.output[k]), k
+
+
+def test_run_many_streamed_group(sparse_store_root):
+    """N async program plans over one attribute: ONE prefetch pass feeds
+    N runners; results match per-plan runs bitwise."""
+    from repro.gofs import GoFSStore
+
+    sess = GopherSession(GoFSStore(sparse_store_root))
+    plans = [sess.plan("sssp", source=0), sess.plan("sssp", source=1)]
+    assert all(p.staging.value == "async" for p in plans)
+    rs = sess.run_many(plans)
+    assert sess.last_run_report["staging_passes"] == 1
+    for p, r in zip(plans, rs):
+        ref = GopherSession(GoFSStore(sparse_store_root)).run(p)
+        assert np.array_equal(r.engine.values, ref.engine.values)
+
+
+def test_run_many_mixed_comm_shares_staging(sparse_store_root):
+    """One staging key split across comm backends still stages once
+    (via the cache, not one private stream per backend)."""
+    from repro.gofs import GoFSStore
+
+    sess = GopherSession(GoFSStore(sparse_store_root))
+    plans = [sess.plan("sssp", source=0),
+             sess.plan("sssp", source=1, comm="host")]
+    rs = sess.run_many(plans)
+    assert sess.last_run_report["staging_passes"] == 1
+    ref = GopherSession(GoFSStore(sparse_store_root)).run(plans[0])
+    assert np.array_equal(rs[0].engine.values, ref.engine.values)
+
+
+def test_engine_run_many_matches_run(tiny):
+    """Engine-level hook: N specs over one staged batch == N runs."""
+    _, tmpl, bg, w, active, _ = tiny
+    from repro.core.algorithms.pagerank import edge_weights_for_instances
+
+    eng = TemporalEngine(bg)
+    pw = edge_weights_for_instances(tmpl.src, active, tmpl.num_vertices)
+    prog = pagerank_program(tmpl.num_vertices, iters=5)
+    specs = [RunSpec(prog, "independent"),
+             RunSpec(prog, "eventually", merge="mean")]
+    many = eng.run_many(specs, pw)
+    one_a = eng.run(prog, pw, pattern="independent")
+    one_b = eng.run(prog, pw, pattern="eventually", merge="mean")
+    assert np.array_equal(many[0].values, one_a.values)
+    assert np.array_equal(many[1].values, one_b.values)
+    assert np.array_equal(many[1].merged, one_b.merged)
+
+
+def test_engine_run_many_rejects_mixed_zero_fill(tiny):
+    _, tmpl, bg, w, _, _ = tiny
+    eng = TemporalEngine(bg)
+    specs = [RunSpec(min_plus_program("a", init=source_init(0)),
+                     "sequential"),
+             RunSpec(pagerank_program(tmpl.num_vertices, iters=2),
+                     "independent")]
+    with pytest.raises(AssertionError, match="zero_fill"):
+        eng.run_many(specs, w)
+
+
+# --------------------------------------------------------------------------
+# engine staged-batch device cache (no re-upload on reuse)
+# --------------------------------------------------------------------------
+
+def _count_device_puts(monkeypatch):
+    calls = []
+    orig = engine_mod._device_put
+
+    def counted(x):
+        calls.append(1)
+        return orig(x)
+
+    monkeypatch.setattr(engine_mod, "_device_put", counted)
+    return calls
+
+
+def test_sparse_batch_uploaded_once(tiny, monkeypatch):
+    _, _, bg, w, _, _ = tiny
+    eng = TemporalEngine(bg, layout="sparse")
+    prog = min_plus_program("sssp", init=source_init(0))
+    sp = eng.stage_sparse(w, prog.zero_fill)
+    calls = _count_device_puts(monkeypatch)
+    eng.run(prog, sparse=sp, pattern="sequential")
+    first = len(calls)
+    assert first == 6  # tiles, btiles, rows, cols, brows, bcols
+    eng.run(prog, sparse=sp, pattern="independent")
+    eng.run(min_plus_program("sssp2", init=source_init(1)), sparse=sp,
+            pattern="sequential")
+    assert len(calls) == first, "staged sparse batch was re-uploaded"
+
+
+def test_dense_host_batch_uploaded_once(tiny, monkeypatch):
+    _, _, bg, w, _, _ = tiny
+    eng = TemporalEngine(bg)
+    prog = min_plus_program("sssp", init=source_init(0))
+    tiles = bg.fill_local_batch(w)
+    btiles = bg.fill_boundary_batch(w)
+    calls = _count_device_puts(monkeypatch)
+    r1 = eng.run(prog, tiles=tiles, btiles=btiles, pattern="sequential")
+    assert len(calls) == 2  # tiles, btiles
+    r2 = eng.run(prog, tiles=tiles, btiles=btiles, pattern="sequential")
+    assert len(calls) == 2, "staged dense batch was re-uploaded"
+    assert np.array_equal(r1.values, r2.values)
+
+
+# --------------------------------------------------------------------------
+# legacy wrappers: deprecation + parity
+# --------------------------------------------------------------------------
+
+def test_run_blocked_wrappers_deprecated_and_identical(tiny):
+    from repro.core.algorithms import (
+        components, nhop, pagerank, sssp, tracking,
+    )
+
+    _, tmpl, bg, w, active, plates = tiny
+
+    with pytest.warns(DeprecationWarning, match="sssp.run_blocked"):
+        d, stats = sssp.run_blocked(bg, w, 0)
+    ref = TemporalEngine(bg).run(
+        min_plus_program("sssp", init=source_init(0)), w,
+        pattern="sequential")
+    assert np.array_equal(d, ref.final)
+    assert np.array_equal(stats["supersteps"], ref.stats["supersteps"])
+
+    with pytest.warns(DeprecationWarning, match="pagerank.run_blocked"):
+        ranks, _ = pagerank.run_blocked(
+            bg, tmpl.src, active, num_vertices=tmpl.num_vertices, iters=5)
+    from repro.core.algorithms.pagerank import edge_weights_for_instances
+
+    pw = edge_weights_for_instances(tmpl.src, active, tmpl.num_vertices)
+    ref_pr = TemporalEngine(bg).run(
+        pagerank_program(tmpl.num_vertices, iters=5), pw,
+        pattern="independent")
+    assert np.array_equal(ranks, ref_pr.values)
+
+    with pytest.warns(DeprecationWarning, match="components"):
+        labels = components.run_blocked(bg, tmpl.src, tmpl.dst, active[0])
+    from repro.core.algorithms.components import oracle as cc_oracle
+
+    assert np.array_equal(
+        labels, cc_oracle(tmpl.src, tmpl.dst, active[0],
+                          tmpl.num_vertices).astype(np.float32))
+
+    with pytest.warns(DeprecationWarning, match="nhop.run_blocked"):
+        comp, hists = nhop.run_blocked(bg, w, 0, n_hops=3)
+    assert comp.sum() == hists.sum()
+
+    with pytest.warns(DeprecationWarning, match="tracking.run_blocked"):
+        trace = tracking.run_blocked(bg, plates, 3, 0)
+    assert isinstance(trace, list)
+
+
+# --------------------------------------------------------------------------
+# GoFS occupancy stats (planner input, no value read)
+# --------------------------------------------------------------------------
+
+def test_tile_occupancy_from_maps(sparse_store_root, tiny):
+    from repro.gofs import GoFSStore
+
+    _, _, bg, w, _, _ = tiny
+    store = GoFSStore(sparse_store_root)
+    occ = store.tile_occupancy(bg, "latency")
+    # maps-only value matches a full-value activity scan
+    act_l, act_b = bg.active_tile_maps(w, zero=np.inf)
+    denom = w.shape[0] * (int(bg.n_tiles.sum()) + int(bg.n_btiles.sum()))
+    assert occ == pytest.approx(
+        (int(act_l.sum()) + int(act_b.sum())) / denom)
+    # no recorded map for this attribute -> unknown
+    assert store.tile_occupancy(bg, "active", zero=0.0) is None
+    # mismatched blocked structure falls back to the recorded scalar
+    bg2 = build_blocked(
+        GraphTemplate(num_vertices=len(bg.part_of),
+                      src=tiny[1].src, dst=tiny[1].dst),
+        partition_graph(tiny[1], TINY.num_partitions, seed=TINY.seed),
+        TINY.block_size * 2,
+    )
+    occ2 = store.tile_occupancy(bg2, "latency")
+    assert occ2 is not None and 0.0 < occ2 <= 1.0

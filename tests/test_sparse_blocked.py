@@ -351,6 +351,8 @@ def test_bench_check_gate(tmp_path):
         "pagerank_runner": {"speedup": 2.0},
         "sparse": {"step_speedup": 4.0, "staged_bytes_ratio": 4.6,
                    "occupancy": 0.125},
+        "plan_overhead": {"frac": 0.001},
+        "shared_staging": {"staged_bytes_ratio": 2.0},
     }
     p = str(tmp_path / "base.json")
     with open(p, "w") as f:
