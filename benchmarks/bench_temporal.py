@@ -10,7 +10,25 @@ docs/BENCHMARKS.md):
                       GoFSStore.load_blocked bulk slice path
 * async_staging     — end-to-end (GoFS stage + engine run): one-shot sync
                       staging vs the double-buffered SlicePrefetcher stream
-                      (slice reads + tile fills overlap device execution)
+                      (slice reads + tile fills overlap device execution).
+                      On a single-core box with page-cached files both
+                      halves are CPU-bound, so this row records ~1.0x —
+                      the staging-bound regime lives in the next row
+* async_staging_bound — the same pipeline against a store with emulated
+                      per-slice read latency (the paper's remote-disk
+                      regime, where GoFS slices arrive from 12 hosts):
+                      a deep prefetch window + parallel read workers
+                      overlap the I/O waits with execution for a real
+                      wall-clock win (sleeps burn no CPU, so the overlap
+                      is measurable even single-core)
+* delta_staging     — full sparse value loads vs the deploy-time delta
+                      chain (deduplicated tile payload pools) on a
+                      slowly-varying collection: bytes moved from the
+                      store + load time, bitwise parity asserted
+* warm_start        — cold fixpoints vs warm-started ones (instance t
+                      seeded from t-1's converged state) on a
+                      monotone-tightening chain workload: supersteps
+                      saved + wall-clock speedup, bitwise parity asserted
 * pagerank_runner   — per-instance device_graph + pagerank_run loop vs one
                       engine run scanning the staged (I, ...) tensors
 * sparse            — dense vs block-sparse layout on a banded-activity
@@ -38,6 +56,7 @@ rewriting it; any violation exits nonzero.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import subprocess
@@ -46,7 +65,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import BENCH_GRAPH, emit, store_for
+from benchmarks.common import BENCH_GRAPH, deployments, emit, store_for
 from repro.core.blocked import build_blocked
 from repro.core.engine import (
     TemporalEngine,
@@ -55,13 +74,67 @@ from repro.core.engine import (
     source_init,
 )
 from repro.core.generator import generate_collection
+from repro.core.graph import GraphTemplate, TimeSeriesGraph
 from repro.core.partition import partition_graph
+from repro.core.semiring import INF
 from repro.core.algorithms.pagerank import (
     edge_weights_for_instance,
     edge_weights_for_instances,
 )
+from repro.gofs import deploy_collection
+from repro.gofs.slices import read_array_slice
+from repro.gofs.store import GoFSStore
 
 OUT_JSON = "BENCH_temporal.json"
+
+
+class _SlowStore(GoFSStore):
+    """GoFSStore with emulated per-slice read latency.
+
+    The paper's GoFS serves slices from the local disks of 12 hosts; on
+    this box every file is page-cached, so reads cost ~0 wall-clock and
+    the prefetch pipeline has nothing to hide.  Sleeping inside the cache
+    loader (cache misses only) restores the remote-read regime without
+    burning CPU — which is also why the overlap shows up even on a
+    single-core machine."""
+
+    io_delay_s = 0.05
+
+    def _load(self, pid, slice_name):
+        path = os.path.join(self.root, f"part_{pid}", slice_name)
+
+        def loader():
+            time.sleep(self.io_delay_s)
+            return read_array_slice(path, self.stats)
+
+        return self.cache.get(f"{pid}/{slice_name}", loader)
+
+
+def _delta_collection(cfg) -> TimeSeriesGraph:
+    """Bench-scale slowly-varying collection: localized sparse support,
+    ~1/8 of the live edges tightening per step — most tiles are bitwise
+    unchanged between consecutive instances (the delta chain's regime)."""
+    col = generate_collection(cfg)
+    src = np.asarray(col.template.src)
+    dst = np.asarray(col.template.dst)
+    rng = np.random.default_rng(0)
+    live = (src < 512) & (dst < 512)
+    w = np.where(live, np.asarray(col.edge_values(0, "latency"), np.float32),
+                 np.float32(INF)).astype(np.float32)
+    ws = [w]
+    idx = np.nonzero(live)[0]
+    for _t in range(1, len(col)):
+        w = ws[-1].copy()
+        band = rng.choice(idx, size=max(1, len(idx) // 8), replace=False)
+        w[band] = (w[band] * 0.7).astype(np.float32)
+        ws.append(w)
+    insts = []
+    for t in range(len(col)):
+        gi = col.instances[t]
+        ev = dict(gi.edge_values)
+        ev["latency"] = ws[t]
+        insts.append(dataclasses.replace(gi, edge_values=ev))
+    return TimeSeriesGraph(template=col.template, instances=insts)
 
 
 def _time(fn, repeats: int = 3) -> float:
@@ -176,6 +249,117 @@ def run(check: bool = False) -> None:
         "instances": I, "prefetch_depth": 2,
         "sync_s": t_sync, "async_s": t_async,
         "speedup": t_sync / max(t_async, 1e-12),
+    }
+
+    # ---- async staging, staging-bound: emulated remote-slice latency ------
+    # s4-i1 (one instance per pack) maximizes slice count; cache_slots=0
+    # forces every read through the delayed loader.  A depth-4 window with
+    # 4 read workers keeps 3 chunks' reads in flight concurrently — the
+    # sleeps overlap each other AND the engine run, so the pipeline wins
+    # ~2x while the sync path pays every wait serially.
+    _, root_i1 = deployments()["s4-i1"]
+    slow = _SlowStore(root_i1, cache_slots=0)
+
+    def bnd_sync():
+        tiles, btiles = slow.load_blocked(bg, "latency")
+        return eng_t.run(prog, tiles=tiles, btiles=btiles,
+                         pattern="sequential")
+
+    def bnd_async():
+        stream = slow.load_blocked_stream(
+            bg, "latency", prefetch_depth=4, chunk_instances=2,
+            num_workers=4)
+        return eng_t.run(prog, pattern="sequential", stream=stream)
+
+    ra, rb = bnd_sync(), bnd_async()
+    assert np.array_equal(ra.values, rb.values)  # staging must be invisible
+    t_bsync = _time(bnd_sync, repeats=2)
+    t_basync = _time(bnd_async, repeats=2)
+    emit("temporal/e2e_sync_staging_bound", t_bsync * 1e6,
+         f"io_delay_s={_SlowStore.io_delay_s}")
+    emit("temporal/e2e_async_staging_bound", t_basync * 1e6,
+         f"speedup={t_bsync / max(t_basync, 1e-12):.2f}x")
+    results["async_staging_bound"] = {
+        "instances": I, "io_delay_s": _SlowStore.io_delay_s,
+        "prefetch_depth": 4, "chunk_instances": 2, "num_workers": 4,
+        "sync_s": t_bsync, "async_s": t_basync,
+        "speedup": t_bsync / max(t_basync, 1e-12),
+    }
+
+    # ---- delta staging: full sparse loads vs the deploy-time delta chain --
+    # slowly-varying collection deployed once (skip-if-exists, like
+    # common.deployments); c0 cache so timings pay real reads.  The byte
+    # ratio is deterministic (recorded chain vs staged shapes).
+    cfg_d = dataclasses.replace(BENCH_GRAPH, name="tr-bench-delta")
+    root_d = "/tmp/gofs_bench_delta"
+    if not os.path.exists(os.path.join(root_d, "collection.json")):
+        deploy_collection(_delta_collection(cfg_d), cfg_d, root_d,
+                          sparse_absent={"latency": INF})
+    store_d = GoFSStore(root_d, cache_slots=0)
+    full = store_d.load_blocked(bg, "latency", zero=INF, layout="sparse",
+                                delta=False)
+    dlt = store_d.load_blocked(bg, "latency", zero=INF, layout="sparse",
+                               delta=True)
+    # reconstruction must be bitwise-invisible before any byte counts
+    assert np.array_equal(np.asarray(full.tiles), np.asarray(dlt.tiles))
+    assert np.array_equal(np.asarray(full.btiles), np.asarray(dlt.btiles))
+    assert full.source_bytes is None and dlt.source_bytes is not None
+    t_dfull = _time(lambda: store_d.load_blocked(
+        bg, "latency", zero=INF, layout="sparse", delta=False))
+    t_ddelta = _time(lambda: store_d.load_blocked(
+        bg, "latency", zero=INF, layout="sparse", delta=True))
+    dratio, dmono = store_d.delta_stats("latency", zero=INF)
+    bytes_full = full.staged_bytes()
+    bratio = bytes_full / max(dlt.source_bytes, 1)
+    emit("temporal/delta_staging_full", t_dfull * 1e6,
+         f"bytes={bytes_full}")
+    emit("temporal/delta_staging_delta", t_ddelta * 1e6,
+         f"bytes_ratio={bratio:.2f}x;unique_ratio={dratio:.3f}")
+    results["delta_staging"] = {
+        "instances": I, "occupancy": full.occupancy(),
+        "delta_unique_ratio": dratio, "delta_monotone": dmono,
+        "staged_bytes_full": bytes_full,
+        "source_bytes_delta": dlt.source_bytes,
+        "staged_bytes_ratio": bratio,
+        "full_load_s": t_dfull, "delta_load_s": t_ddelta,
+        "load_speedup": t_dfull / max(t_ddelta, 1e-12),
+    }
+
+    # ---- warm start: cold fixpoints vs t-1-seeded ones --------------------
+    # chain graph whose every block hop crosses partitions: a cold SSSP
+    # fixpoint needs ~V/B supersteps per instance, while the warm seed is
+    # already converged up to the slowly-tightening tail — the incremental
+    # recompute the delta chain makes worth exploiting.
+    Vw, Bw, Pw, Iw = 2048, 32, 4, 12
+    tmpl_w = GraphTemplate(num_vertices=Vw, src=np.arange(Vw - 1),
+                           dst=np.arange(1, Vw))
+    bg_w = build_blocked(tmpl_w, (np.arange(Vw) // Bw) % Pw, Bw)
+    w_w = np.ones((Iw, Vw - 1), np.float32)
+    for t in range(1, Iw):
+        w_w[t] = w_w[t - 1]
+        w_w[t, -32:] *= 0.9  # tail tightens: monotone-improving
+    prog_w = min_plus_program("sssp", init=source_init(0),
+                              max_supersteps=256)
+    eng_w = TemporalEngine(bg_w)
+    cold = eng_w.run(prog_w, w_w, pattern="independent")
+    warm = eng_w.run(prog_w, w_w, pattern="independent", warm_start=True)
+    assert np.array_equal(cold.values, warm.values)  # warm is exact here
+    saved = warm.supersteps_saved()
+    t_cold = _time(lambda: eng_w.run(prog_w, w_w, pattern="independent"))
+    t_warm = _time(lambda: eng_w.run(prog_w, w_w, pattern="independent",
+                                     warm_start=True))
+    emit("temporal/warm_start_cold", t_cold * 1e6,
+         f"supersteps={int(cold.stats['supersteps'].sum())}")
+    emit("temporal/warm_start_warm", t_warm * 1e6,
+         f"speedup={t_cold / max(t_warm, 1e-12):.2f}x;"
+         f"saved={int(saved.sum())}")
+    results["warm_start"] = {
+        "instances": Iw, "num_vertices": Vw,
+        "supersteps_cold": int(cold.stats["supersteps"].sum()),
+        "supersteps_warm": int(warm.stats["supersteps"].sum()),
+        "supersteps_saved": int(saved.sum()),
+        "cold_s": t_cold, "warm_s": t_warm,
+        "speedup": t_cold / max(t_warm, 1e-12),
     }
 
     # ---- gopher session: plan overhead ------------------------------------
@@ -447,6 +631,17 @@ THRESHOLDS = {
     ("staging", "speedup"): ("min", 1.3, 0.5),
     ("gofs_staging", "speedup"): ("min", 50.0, None),
     ("async_staging", "speedup"): ("min", 0.5, None),
+    # staging-bound variant: deterministic sleeps dominate the sync path,
+    # so the overlap win is stable run-to-run (~2x measured single-core)
+    ("async_staging_bound", "speedup"): ("min", 1.5, 0.6),
+    # deterministic (recorded chain vs staged shapes): the acceptance
+    # target for the delta dedupe — and the load must not get slower
+    ("delta_staging", "staged_bytes_ratio"): ("min", 2.0, 0.9),
+    ("delta_staging", "load_speedup"): ("min", 0.8, None),
+    # warm-started fixpoints: supersteps saved is deterministic, the
+    # wall-clock win tracks it (~9x measured)
+    ("warm_start", "speedup"): ("min", 1.5, 0.5),
+    ("warm_start", "supersteps_saved"): ("min", 100.0, 0.9),
     ("pagerank_runner", "speedup"): ("min", 1.3, 0.5),
     ("sparse", "step_speedup"): ("min", 1.5, 0.5),
     # deterministic (shape-derived): the acceptance targets themselves

@@ -145,6 +145,9 @@ def _postprocess(ctx, res, **_params):
     zero_fill=0.0,
     params={"damping": 0.85, "iters": 30},
     weights=_pagerank_weights,
+    # outdegree normalization reads one instance's activity row at a
+    # time — safe to apply chunk-wise on the prefetcher thread
+    rowwise=True,
     postprocess=_postprocess,
     describe="per-instance PageRank over active edges: independent "
              "pattern, fixed-count plus-mul iteration",

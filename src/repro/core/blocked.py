@@ -84,6 +84,11 @@ class SparseBlocked:
     bnnz: np.ndarray  # (I, P) int32 active boundary tiles
     total_tiles: int  # template valid local tiles, summed over partitions
     total_btiles: int  # template valid boundary tiles
+    # bytes actually materialized from the backing store, when that is less
+    # than ``staged_bytes()`` — a delta-encoded GoFS read decodes each unique
+    # tile payload once and reconstructs repeats by RAM gather (gofs.store).
+    # None = fully materialized (source == staged).
+    source_bytes: Optional[int] = None
 
     @property
     def num_instances(self) -> int:
@@ -302,6 +307,55 @@ class BlockedGraph:
             act[ii, tile_key[ll]] = True
         return act.reshape(I, self.n_parts, t_count)
 
+    def pack_tile_index(
+        self, act: np.ndarray, rc: np.ndarray, *,
+        bucket: Optional[int] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Active-tile mask (I, P, T) -> packed index (rows, cols, nnz, slot).
+
+        ``slot[i, p, t]`` is the packed position of template tile ``t``
+        (valid where ``act``), assigned in template order so the packed
+        subset keeps the col-major contiguous-output-runs invariant the
+        Pallas kernel needs.  Shared by the sparse fill below and the GoFS
+        delta-chain reconstruction (repro.gofs.store), which must agree
+        slot-for-slot for delta reads to be bitwise-identical."""
+        I, P, t_count = act.shape
+        nnz = act.sum(-1, dtype=np.int32)  # (I, P)
+        max_nnz = int(nnz.max()) if nnz.size else 0
+        K = int(bucket) if bucket is not None else pow2_bucket(max_nnz)
+        assert K >= max_nnz, \
+            f"bucket {K} < max active tiles {max_nnz} (stale tile map?)"
+        slot = np.cumsum(act, axis=-1, dtype=np.int64) - 1  # valid where act
+        rows = np.full((I, P, K), -1, np.int32)
+        cols = np.full((I, P, K), -1, np.int32)
+        ii, pp, tt = np.nonzero(act)
+        ss = slot[ii, pp, tt]
+        rows[ii, pp, ss] = rc[pp, tt, 0]
+        cols[ii, pp, ss] = rc[pp, tt, 1]
+        return rows, cols, nnz, slot
+
+    def pack_payload_tiles(
+        self, ref: np.ndarray, payloads: np.ndarray, rc: np.ndarray,
+        zero: float, *, bucket: Optional[int] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Reconstruct a packed batch from a delta-encoded tile chain.
+
+        ``ref`` (I, P, T) int32 indexes each active template-tile slot into
+        the deduplicated ``payloads`` (U, B, B) pool (-1 = inactive); the
+        gather is a RAM copy, so a payload shared by many instances is
+        decoded from the store only once.  Returns (vals, rows, cols, nnz)
+        exactly as ``fill_local_batch_sparse`` would for the full weights.
+        """
+        B = self.block_size
+        act = ref >= 0
+        rows, cols, nnz, slot = self.pack_tile_index(act, rc, bucket=bucket)
+        I, P, K = rows.shape
+        vals = np.full((I, P, K, B, B), zero, np.float32)
+        ii, pp, tt = np.nonzero(act)
+        ss = slot[ii, pp, tt]
+        vals[ii, pp, ss] = payloads[ref[ii, pp, tt]]
+        return vals, rows, cols, nnz
+
     def _fill_batch_sparse(
         self, w: np.ndarray, zero: float, part: np.ndarray,
         flat: np.ndarray, edge_id: np.ndarray, t_count: int,
@@ -316,20 +370,8 @@ class BlockedGraph:
         if act is None:
             act = self._active_tiles(w, zero, part, flat, edge_id, t_count)
         assert act.shape == (I, P, t_count), act.shape
-        nnz = act.sum(-1, dtype=np.int32)  # (I, P)
-        max_nnz = int(nnz.max()) if nnz.size else 0
-        K = int(bucket) if bucket is not None else pow2_bucket(max_nnz)
-        assert K >= max_nnz, \
-            f"bucket {K} < max active tiles {max_nnz} (stale tile map?)"
-        # packed slot of each active tile, in template (col-major) order —
-        # the subset keeps the sorted-cols invariant the kernel relies on
-        slot = np.cumsum(act, axis=-1, dtype=np.int64) - 1  # valid where act
-        rows = np.full((I, P, K), -1, np.int32)
-        cols = np.full((I, P, K), -1, np.int32)
-        ii, pp, tt = np.nonzero(act)
-        ss = slot[ii, pp, tt]
-        rows[ii, pp, ss] = rc[pp, tt, 0]
-        cols[ii, pp, ss] = rc[pp, tt, 1]
+        rows, cols, nnz, slot = self.pack_tile_index(act, rc, bucket=bucket)
+        K = rows.shape[2]
         if out is None:
             vals = np.full(I * P * K * B2, zero, np.float32)
         else:

@@ -220,9 +220,21 @@ class EngineResult:
     merged: Optional[np.ndarray]  # (V,) Merge output (eventually + on-device)
     stats: Dict[str, np.ndarray]  # {"supersteps": (I,), "local_sweeps": (I,)}
     occupancy: Optional[float] = None  # active-tile fraction (sparse layout)
+    warm_start: bool = False  # fixpoints seeded from the previous instance
     _n_published: int = 0  # boundary vertices published per superstep
     _n_parts: int = 0
     _num_vertices: int = 0
+
+    def supersteps_saved(self) -> Optional[np.ndarray]:
+        """Per-instance supersteps the warm seed saved, relative to the
+        cold-seeded FIRST instance (which has no predecessor and always
+        pays the full fixpoint — the natural in-run cold baseline for a
+        slowly varying collection).  ``None`` unless the run was
+        warm-started."""
+        if not self.warm_start:
+            return None
+        ss = self.stats["supersteps"]
+        return np.maximum(0, int(ss[0]) - ss.astype(np.int64))
 
     def bsp_stats(self) -> BSPStats:
         """The host engine's accounting shape (run_ibsp comparability):
@@ -254,6 +266,22 @@ class RunSpec:
     pattern: str
     x0: Optional[np.ndarray] = None  # overrides program.init(bg)
     merge: Optional[str] = None
+    # seed instance t's fixpoint from instance t-1's converged state
+    # instead of x0 (incremental recompute).  EXACT for monotone
+    # semirings on monotone-improving collections (min-plus where no
+    # edge's weight ever increases between consecutive instances — see
+    # docs/ARCHITECTURE.md for the contract and proof sketch); fixed-
+    # iterate programs (plus-mul PageRank) silently fall back to a cold
+    # start, where the seed would change the result.  No-op for the
+    # sequential pattern, which already carries state by definition.
+    warm_start: bool = False
+
+    def effective_warm(self) -> bool:
+        """Warm seeding actually applies: requested AND the program is a
+        fixpoint (iterate programs run a fixed count of non-idempotent
+        steps — a warm seed would change their result, so they cold
+        start)."""
+        return self.warm_start and self.program.kind == "fixpoint"
 
 
 # ---------------------------------------------------------------------------
@@ -477,14 +505,21 @@ class TemporalEngine:
     # ------------------------------------------------------------- runners
     def _scan_instances(self, program: SemiringProgram, pattern: str,
                         x0, tiles, btiles, struct,
-                        comm: Optional[CommBackend] = None, idx=None):
+                        comm: Optional[CommBackend] = None, idx=None,
+                        warm: bool = False):
         """Scan the instance axis on the local shard.  Returns
         (xs (I, P_l, Vp), final (P_l, Vp), ss (I,), lsw (I,)).
 
         ``idx=None`` (dense): ``struct`` is the full 8-tuple with the
         template tile index.  Sparse: ``struct`` is the 4-tuple tail and
         ``idx`` the per-instance (rows, cols, brows, bcols) packed index,
-        scanned alongside the tile values."""
+        scanned alongside the tile values.
+
+        ``warm=True`` seeds each instance's fixpoint from the previous
+        instance's converged state rather than ``x0`` — for monotone
+        fixpoints on slowly varying collections the chain converges in
+        far fewer supersteps and to the identical state (RunSpec.warm_start
+        documents the exactness contract)."""
         comm = self.comm if comm is None else comm
 
         def step(carry, tb):
@@ -494,7 +529,7 @@ class TemporalEngine:
             else:
                 tiles_l, btiles_l, rows_l, cols_l, brows_l, bcols_l = tb
                 s = (rows_l, cols_l, brows_l, bcols_l) + struct
-            seed = carry if pattern == "sequential" else x0
+            seed = carry if (pattern == "sequential" or warm) else x0
             x, (ss, lsw) = self._run_instance(
                 program, seed, tiles_l, btiles_l, s, comm
             )
@@ -505,16 +540,17 @@ class TemporalEngine:
         return xs, final, ss, lsw
 
     def _make_stacked_runner(self, program: SemiringProgram, pattern: str,
-                             merge: Optional[str], sparse: bool = False):
+                             merge: Optional[str], sparse: bool = False,
+                             warm: bool = False):
         def run_dense(tiles, btiles, x0, *struct):
             return finish(*self._scan_instances(
-                program, pattern, x0, tiles, btiles, struct
+                program, pattern, x0, tiles, btiles, struct, warm=warm
             ))
 
         def run_sparse(tiles, btiles, rows, cols, brows, bcols, x0, *struct):
             return finish(*self._scan_instances(
                 program, pattern, x0, tiles, btiles, struct,
-                idx=(rows, cols, brows, bcols),
+                idx=(rows, cols, brows, bcols), warm=warm,
             ))
 
         def finish(xs, final, ss, lsw):
@@ -536,7 +572,7 @@ class TemporalEngine:
 
     def _make_mesh_runner(self, program: SemiringProgram, pattern: str,
                           merge: Optional[str], n_instances: int,
-                          sparse: bool = False):
+                          sparse: bool = False, warm: bool = False):
         from jax.sharding import PartitionSpec as P_
 
         mesh = self.mesh
@@ -549,7 +585,12 @@ class TemporalEngine:
         # correct (every data group computes the same states; the Merge
         # psum normalizes by the psum'd instance count).
         temporal = pattern in ("independent", "eventually")
-        shard_instances = (temporal and n_instances % self._data_size() == 0
+        # warm-started fixpoints chain state from instance t-1 to t, so the
+        # instance axis cannot be data-sharded (a shard's first instance
+        # would lose its predecessor); replicated instances keep the chain
+        # intact on every data group and stay bitwise-correct.
+        shard_instances = (temporal and not warm
+                           and n_instances % self._data_size() == 0
                            and n_instances >= self._data_size())
         # data-sharded instances run data-dependent superstep loops
         # concurrently; backends with globally scheduled collectives (the
@@ -573,7 +614,7 @@ class TemporalEngine:
 
         def local_dense(tiles, btiles, x0, *struct):
             xs, final, ss, lsw = self._scan_instances(
-                program, pattern, x0, tiles, btiles, struct, comm
+                program, pattern, x0, tiles, btiles, struct, comm, warm=warm
             )
             return xs, final, merged_of(xs, final), ss, lsw
 
@@ -581,7 +622,7 @@ class TemporalEngine:
                          *struct):
             xs, final, ss, lsw = self._scan_instances(
                 program, pattern, x0, tiles, btiles, struct, comm,
-                idx=(rows, cols, brows, bcols),
+                idx=(rows, cols, brows, bcols), warm=warm,
             )
             return xs, final, merged_of(xs, final), ss, lsw
 
@@ -621,16 +662,16 @@ class TemporalEngine:
 
     def _runner(self, program: SemiringProgram, pattern: str,
                 merge: Optional[str], n_instances: int,
-                sparse: bool = False):
-        key = (program, pattern, merge, n_instances, sparse)
+                sparse: bool = False, warm: bool = False):
+        key = (program, pattern, merge, n_instances, sparse, warm)
         if key not in self._runners:
             if self.mesh is None:
                 self._runners[key] = self._make_stacked_runner(
-                    program, pattern, merge, sparse
+                    program, pattern, merge, sparse, warm=warm
                 )
             else:
                 self._runners[key] = self._make_mesh_runner(
-                    program, pattern, merge, n_instances, sparse
+                    program, pattern, merge, n_instances, sparse, warm=warm
                 )
         return self._runners[key]
 
@@ -733,9 +774,14 @@ class TemporalEngine:
                 bufs = (_device_put(ch.tiles), _device_put(ch.btiles))
                 tail = self._struct
             for k, s in enumerate(specs):
-                seed = carry[k] if s.pattern == "sequential" else x0s[k]
+                warm_k = s.effective_warm()
+                # warm chunks chain exactly like sequential: the carry is
+                # the last instance's converged state, which seeds the
+                # next chunk's first instance inside the runner's scan
+                seed = carry[k] if (s.pattern == "sequential" or warm_k) \
+                    else x0s[k]
                 run_fn = self._runner(s.program, s.pattern, None, n,
-                                      sparse=is_sparse)
+                                      sparse=is_sparse, warm=warm_k)
                 xs, fin, _, ss, lsw = self._dispatch(
                     run_fn, *bufs, seed, *tail
                 )
@@ -776,6 +822,7 @@ class TemporalEngine:
         merge: Optional[str] = None,
         stream=None,
         staging: Optional[str] = None,
+        warm_start: bool = False,
     ) -> EngineResult:
         """Execute ``program`` over the instance collection.
 
@@ -802,7 +849,8 @@ class TemporalEngine:
         See the class docstring for pattern contracts.
         """
         return self.run_many(
-            [RunSpec(program, pattern, x0=x0, merge=merge)],
+            [RunSpec(program, pattern, x0=x0, merge=merge,
+                     warm_start=warm_start)],
             instance_weights, tiles=tiles, btiles=btiles, sparse=sparse,
             stream=stream, staging=staging,
         )[0]
@@ -898,7 +946,8 @@ class TemporalEngine:
             outs = []
             for s, x0 in zip(specs, x0s):
                 run_fn = self._runner(s.program, s.pattern, s.merge,
-                                      sparse.num_instances, sparse=True)
+                                      sparse.num_instances, sparse=True,
+                                      warm=s.effective_warm())
                 outs.append(self._dispatch_sparse(run_fn, sparse, x0))
         else:
             if tiles is None or btiles is None:
@@ -912,18 +961,20 @@ class TemporalEngine:
             outs = []
             for s, x0 in zip(specs, x0s):
                 run_fn = self._runner(s.program, s.pattern, s.merge,
-                                      int(tiles.shape[0]))
+                                      int(tiles.shape[0]),
+                                      warm=s.effective_warm())
                 outs.append(self._dispatch(
                     run_fn, tiles, btiles, x0, *self._struct
                 ))
 
         return [
-            self._wrap_result(s.pattern, s.merge, out, occ)
+            self._wrap_result(s.pattern, s.merge, out, occ,
+                              warm=s.effective_warm())
             for s, out in zip(specs, outs)
         ]
 
     def _wrap_result(self, pattern: str, merge: Optional[str], out,
-                     occ: Optional[float]) -> EngineResult:
+                     occ: Optional[float], warm: bool = False) -> EngineResult:
         """Gather device outputs back to global vertex order + stats."""
         xs, final, merged, ss, lsw = out
         bg = self.bg
@@ -940,6 +991,7 @@ class TemporalEngine:
                 "local_sweeps": np.asarray(lsw),
             },
             occupancy=occ,
+            warm_start=warm,
             _n_published=int(bg.n_out.sum()),
             _n_parts=bg.n_parts,
             _num_vertices=len(bg.part_of),

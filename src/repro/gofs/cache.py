@@ -23,11 +23,27 @@ class SliceCache:
     def __init__(self, slots: int = 14):
         self.slots = slots
         self._data: "OrderedDict[str, Any]" = OrderedDict()
+        self._pinned: Dict[str, Any] = {}
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
-    def get(self, key: str, loader: Callable[[], Any]) -> Any:
+    def get(self, key: str, loader: Callable[[], Any],
+            pin: bool = False) -> Any:
+        """``pin=True`` keeps the value resident outside the LRU slots —
+        for metadata-grade slices (tile maps, delta payload pools) that
+        every staging pass re-derives from; they must survive ``slots=0``
+        (the c0 configuration disables *value* caching, not metadata)."""
+        if pin:
+            with self._lock:
+                if key in self._pinned:
+                    self.hits += 1
+                    return self._pinned[key]
+                self.misses += 1
+            val = loader()
+            with self._lock:
+                self._pinned.setdefault(key, val)
+                return self._pinned[key]
         if self.slots <= 0:
             with self._lock:
                 self.misses += 1
@@ -48,6 +64,7 @@ class SliceCache:
     def clear(self) -> None:
         with self._lock:
             self._data.clear()
+            self._pinned.clear()
 
     def stats(self) -> Dict[str, float]:
         total = self.hits + self.misses
@@ -56,4 +73,5 @@ class SliceCache:
             "misses": self.misses,
             "hit_rate": self.hits / total if total else 0.0,
             "resident": len(self._data),
+            "pinned": len(self._pinned),
         }

@@ -27,6 +27,23 @@ layout="sparse")`` consumes these maps to emit packed
 :class:`~repro.core.blocked.SparseBlocked` tensors without re-scanning
 the values, and ``load_blocked_stream`` uses them to pin a stream-wide
 pow2 tile bucket before any value slice is read.
+
+Delta tile chain (written alongside the tile maps): the paper's
+time-series graphs vary slowly, so consecutive instances share most of
+their packed tile *contents*.  Deployment content-hashes every active
+(instance, partition, tile) block into a deduplicated payload pool and
+stores one ``delta_<attr>.npz`` slice at the root: ``payloads_local`` /
+``payloads_boundary`` (U, B, B) unique tile values plus ``ref_local``
+(I, P, T) / ``ref_boundary`` (I, P, Tb) int32 maps from each active
+template-tile slot to its payload id (-1 = inactive).  A tile unchanged
+since instance *t-1* resolves to the same payload id — stored once,
+referenced I times.  Two summary scalars ride in the (metadata-sized)
+``tilemap_<attr>.npz`` so ``GopherSession.plan`` can price delta staging
+without opening the payload slice: ``delta_unique_ratio`` (unique
+payloads / active tile-instances) and ``delta_monotone`` (1 iff every
+instance's values are elementwise <= the previous instance's — the
+warm-start exactness precondition for min-plus, see
+docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 
@@ -54,6 +71,33 @@ def tile_map_name(attr: str) -> str:
     return f"tilemap_{attr}"
 
 
+def delta_slice_name(attr: str) -> str:
+    return f"delta_{attr}"
+
+
+def _intern_tiles(
+    vals: np.ndarray,
+    act: np.ndarray,
+    pool: Dict[bytes, int],
+    payloads: List[np.ndarray],
+    ref_out: np.ndarray,
+) -> None:
+    """Content-hash the active tiles of one dense pack fill into the
+    payload pool, writing payload ids into ``ref_out`` (rows, P, T) in
+    place.  Exact-bytes dedup: two tiles share a payload iff their float32
+    contents are bitwise identical."""
+    ii, pp, tt = np.nonzero(act)
+    for i, p, t in zip(ii.tolist(), pp.tolist(), tt.tolist()):
+        tile = np.ascontiguousarray(vals[i, p, t])
+        key = tile.tobytes()
+        pid = pool.get(key)
+        if pid is None:
+            pid = len(payloads)
+            pool[key] = pid
+            payloads.append(tile)
+        ref_out[i, p, t] = pid
+
+
 def _write_tile_maps(
     tsg: TimeSeriesGraph,
     cfg: GraphConfig,
@@ -70,12 +114,17 @@ def _write_tile_maps(
     ``block_size``, so a reader can verify its ``BlockedGraph`` matches
     the deployment's) plus, per time pack *k*, ``local_k``
     (rows, P, T) and ``boundary_k`` (rows, P, Tb) uint8 active-tile maps
-    relative to the attribute's declared absent value."""
+    relative to the attribute's declared absent value.
+
+    Alongside each tile map, one ``delta_<attr>.npz`` payload slice
+    records the deduplicated tile chain (module docstring): unique tile
+    contents once, plus per-instance payload references."""
     from repro.core.blocked import build_blocked
 
     tmpl = tsg.template
     bg = build_blocked(tmpl, assign, cfg.block_size)
     n_inst = len(tsg)
+    B = int(bg.block_size)
     n_valid = int(bg.n_tiles.sum()) + int(bg.n_btiles.sum())
     for name, absent in sparse_absent.items():
         tmpl.edge_attr(name)  # KeyError on unknown attribute
@@ -86,6 +135,14 @@ def _write_tile_maps(
             "absent": np.asarray(absent, np.float64),
             "n_packs": np.asarray(n_packs, np.int64),
         }
+        pool_l: Dict[bytes, int] = {}
+        pool_b: Dict[bytes, int] = {}
+        pay_l: List[np.ndarray] = []
+        pay_b: List[np.ndarray] = []
+        ref_l = np.full((n_inst, bg.n_parts, bg.t_max), -1, np.int32)
+        ref_b = np.full((n_inst, bg.n_parts, bg.tb_max), -1, np.int32)
+        monotone = True
+        prev_w: Optional[np.ndarray] = None
         n_active = 0
         for k in range(n_packs):
             t0, t1 = k * ipack, min((k + 1) * ipack, n_inst)
@@ -94,6 +151,16 @@ def _write_tile_maps(
             n_active += int(act_l.sum()) + int(act_b.sum())
             arrs[f"local_{k}"] = act_l.astype(np.uint8)
             arrs[f"boundary_{k}"] = act_b.astype(np.uint8)
+            # ---- delta chain: dedup active tile contents across time -----
+            dl = bg.fill_local_batch(w, zero=float(absent))
+            db = bg.fill_boundary_batch(w, zero=float(absent))
+            _intern_tiles(dl, act_l, pool_l, pay_l, ref_l[t0:t1])
+            _intern_tiles(db, act_b, pool_b, pay_b, ref_b[t0:t1])
+            for j in range(t1 - t0):
+                wj = np.asarray(w[j], np.float32)
+                if prev_w is not None:
+                    monotone = monotone and bool(np.all(wj <= prev_w))
+                prev_w = wj
         # collection-wide active-tile fraction: the planner's layout
         # decision needs only this scalar, recorded so a reader can price
         # the sparse layout without touching a single value slice — even
@@ -101,7 +168,34 @@ def _write_tile_maps(
         arrs["occupancy"] = np.asarray(
             n_active / max(1, n_inst * n_valid), np.float64
         )
+        # delta summary scalars (planner-facing; payloads stay in the
+        # separate delta slice so planning never pays the value bytes)
+        n_unique = len(pay_l) + len(pay_b)
+        arrs["delta_unique_ratio"] = np.asarray(
+            n_unique / max(1, n_active), np.float64
+        )
+        arrs["delta_monotone"] = np.asarray(int(monotone), np.int64)
         write_array_slice(os.path.join(root, tile_map_name(name)), arrs)
+        write_array_slice(
+            os.path.join(root, delta_slice_name(name)),
+            {
+                "tiles_rc": bg.tiles_rc,
+                "btiles_rc": bg.btiles_rc,
+                "block_size": np.asarray(bg.block_size, np.int64),
+                "absent": np.asarray(absent, np.float64),
+                "n_instances": np.asarray(n_inst, np.int64),
+                "payloads_local": (
+                    np.stack(pay_l) if pay_l
+                    else np.zeros((0, B, B), np.float32)
+                ),
+                "payloads_boundary": (
+                    np.stack(pay_b) if pay_b
+                    else np.zeros((0, B, B), np.float32)
+                ),
+                "ref_local": ref_l,
+                "ref_boundary": ref_b,
+            },
+        )
 
 
 def deploy_collection(

@@ -88,6 +88,11 @@ class StagedChunk:
     bcols: Optional[np.ndarray] = None  # (count, P, Kb)
     nnz: Optional[np.ndarray] = None  # (count, P) active local tiles
     bnnz: Optional[np.ndarray] = None  # (count, P) active boundary tiles
+    # bytes materialized from the store for this chunk, when less than the
+    # arrays' nbytes — a delta-chain reconstruction decodes each unique
+    # tile payload once per chunk (GoFSStore.load_blocked_stream).  None =
+    # fully materialized.
+    staged_bytes: Optional[int] = None
 
     @property
     def is_sparse(self) -> bool:
@@ -115,7 +120,7 @@ class SlicePrefetcher:
     def __init__(
         self,
         bg,
-        reader: Reader,
+        reader: Optional[Reader],
         num_instances: int,
         *,
         zero: float,
@@ -125,10 +130,13 @@ class SlicePrefetcher:
         layout: str = "dense",
         bucket: Optional[int] = None,
         bbucket: Optional[int] = None,
+        transform: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+        stage_fn: Optional[Callable[[int, int], StagedChunk]] = None,
     ):
         assert prefetch_depth >= 1, "prefetch_depth must be >= 1"
         assert chunk_instances >= 1 and num_workers >= 1
         assert layout in ("dense", "sparse"), layout
+        assert reader is not None or stage_fn is not None
         self.bg = bg
         self.reader = reader
         self.num_instances = int(num_instances)
@@ -144,6 +152,16 @@ class SlicePrefetcher:
         self.layout = layout
         self.bucket = bucket
         self.bbucket = bbucket
+        # ``transform``: applied to each chunk's (n, E) rows on the POOL
+        # thread before the fill — row-wise derived weights (e.g.
+        # PageRank's outdegree normalization) stream chunk-wise instead of
+        # forcing a full (I, E) materialization up front.  Must be
+        # per-instance independent: transform(w[s:e]) == transform(w)[s:e].
+        # ``stage_fn``: replaces the read+fill entirely (e.g. the store's
+        # delta-chain reconstruction); the windowing/cancellation machinery
+        # is unchanged.
+        self.transform = transform
+        self.stage_fn = stage_fn
         self._spans: List[Tuple[int, int]] = [
             (s, min(s + self.chunk_instances, self.num_instances))
             for s in range(0, self.num_instances, self.chunk_instances)
@@ -191,7 +209,12 @@ class SlicePrefetcher:
         consumer's execution)."""
         s, e = span
         n = e - s
+        if self.stage_fn is not None:
+            return self.stage_fn(s, e)
         w = self.reader(s, e)
+        if self.transform is not None:
+            w = np.asarray(self.transform(w), np.float32)
+            assert w.shape[0] == n, (w.shape, n)
         if self.layout == "sparse":
             out_l = out_b = None
             if self.bucket is not None and self.bbucket is not None:

@@ -18,7 +18,7 @@ from repro.core.graph import AttributeDef
 from repro.core.ibsp import InstanceProvider, SubgraphInstance
 from repro.core.subgraph import SubgraphTopology
 from repro.gofs.cache import SliceCache
-from repro.gofs.layout import attr_slice_name, tile_map_name
+from repro.gofs.layout import attr_slice_name, delta_slice_name, tile_map_name
 from repro.gofs.slices import ReadStats, read_array_slice, read_json_slice
 
 
@@ -253,7 +253,8 @@ class GoFSStore(InstanceProvider):
         if not os.path.exists(path + ".npz"):
             return None
         return self.cache.get(
-            f"tilemap/{name}", lambda: read_array_slice(path, self.stats)
+            f"tilemap/{name}", lambda: read_array_slice(path, self.stats),
+            pin=True,  # metadata-grade: survives the c0 (slots=0) config
         )
 
     def _recorded_activity(
@@ -337,8 +338,121 @@ class GoFSStore(InstanceProvider):
         bmax = int(act_b.sum(-1).max()) if act_b.size else 0
         return pow2_bucket(lmax), pow2_bucket(bmax)
 
+    # -------------------------------------------------- delta tile chain
+    def edge_delta_index(self, name: str) -> Optional[Dict[str, np.ndarray]]:
+        """The deployment-recorded delta tile chain for an edge attribute
+        (``repro.gofs.layout`` module docstring): deduplicated payload
+        pools + per-instance payload references.  ``None`` when the
+        deployment recorded none or the slice is unreadable (corrupt /
+        truncated) — readers then fall back to the full value slices."""
+        path = os.path.join(self.root, delta_slice_name(name))
+        if not os.path.exists(path + ".npz"):
+            return None
+        try:
+            # pinned: the payload pool IS the staging working set — one
+            # decode feeds every chunk of every stream (c0 exempts it)
+            return self.cache.get(
+                f"delta/{name}",
+                lambda: read_array_slice(path, self.stats), pin=True,
+            )
+        except (OSError, ValueError, KeyError, EOFError):
+            return None
+
+    def _delta_chain(
+        self, bg, name: str, zero: float, t_indices: Sequence[int],
+    ) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+        """Validated (ref_local, ref_boundary, payloads_local,
+        payloads_boundary) for the visible-instance subset, or ``None``
+        when the chain is absent, stale (recorded against a different
+        blocked structure / absent value than the caller's), or corrupt
+        (refs out of pool range, shape drift) — the same
+        validate-or-fallback contract as ``_recorded_activity``."""
+        d = self.edge_delta_index(name)
+        if d is None:
+            return None
+        try:
+            if float(d["absent"]) != float(zero):
+                return None
+            if int(d["block_size"]) != bg.block_size:
+                return None
+            if (d["tiles_rc"].shape != bg.tiles_rc.shape
+                    or not np.array_equal(d["tiles_rc"], bg.tiles_rc)
+                    or d["btiles_rc"].shape != bg.btiles_rc.shape
+                    or not np.array_equal(d["btiles_rc"], bg.btiles_rc)):
+                return None
+            B = bg.block_size
+            n_total = int(d["n_instances"])
+            ref_l, ref_b = d["ref_local"], d["ref_boundary"]
+            pay_l, pay_b = d["payloads_local"], d["payloads_boundary"]
+            if ref_l.shape != (n_total, bg.n_parts, bg.t_max):
+                return None
+            if ref_b.shape != (n_total, bg.n_parts, bg.tb_max):
+                return None
+            if pay_l.ndim != 3 or pay_l.shape[1:] != (B, B):
+                return None
+            if pay_b.ndim != 3 or pay_b.shape[1:] != (B, B):
+                return None
+            if ref_l.size and int(ref_l.max()) >= len(pay_l):
+                return None
+            if ref_b.size and int(ref_b.max()) >= len(pay_b):
+                return None
+            idx = [self._t_map[i] for i in t_indices]
+            if idx and max(idx) >= n_total:
+                return None
+            return (ref_l[idx].astype(np.int64), ref_b[idx].astype(np.int64),
+                    np.asarray(pay_l, np.float32),
+                    np.asarray(pay_b, np.float32))
+        except (KeyError, ValueError, TypeError):
+            return None
+
+    def delta_stats(
+        self, name: str, *, zero: Optional[float] = None
+    ) -> Tuple[Optional[float], Optional[bool]]:
+        """Deploy-recorded delta summary for an edge attribute, read from
+        the tile-map METADATA slice alone (planning never opens the
+        payload slice): (unique-payload / active-tile-instance ratio,
+        monotone-nonincreasing flag).  (None, None) when not recorded or
+        recorded against a different absent value than ``zero``."""
+        maps = self.edge_tile_maps(name)
+        if maps is None or "delta_unique_ratio" not in maps:
+            return None, None
+        if zero is not None and float(maps["absent"]) != float(zero):
+            return None, None
+        return (float(maps["delta_unique_ratio"]),
+                bool(int(maps["delta_monotone"])))
+
+    def _stage_delta(self, bg, zero: float, chain):
+        """Packed batch reconstructed from a validated delta chain: each
+        unique payload's bytes enter RAM once (from the pinned pool) and
+        fan out by gather.  Bitwise-identical to the full sparse fill —
+        the payloads were recorded from the same fill at deploy time and
+        ``pack_tile_index`` assigns the same slots."""
+        from repro.core.blocked import SparseBlocked
+
+        ref_l, ref_b, pay_l, pay_b = chain
+        tiles, rows, cols, nnz = bg.pack_payload_tiles(
+            ref_l, pay_l, bg.tiles_rc, zero)
+        btiles, brows, bcols, bnnz = bg.pack_payload_tiles(
+            ref_b, pay_b, bg.btiles_rc, zero)
+        B2 = bg.block_size * bg.block_size
+        uniq = (len(np.unique(ref_l[ref_l >= 0]))
+                + len(np.unique(ref_b[ref_b >= 0])))
+        src_bytes = int(uniq) * B2 * 4 + int(
+            rows.nbytes + cols.nbytes + brows.nbytes + bcols.nbytes
+        )
+        return SparseBlocked(
+            block_size=bg.block_size,
+            tiles=tiles, btiles=btiles,
+            rows=rows, cols=cols, brows=brows, bcols=bcols,
+            nnz=nnz, bnnz=bnnz,
+            total_tiles=int(bg.n_tiles.sum()),
+            total_btiles=int(bg.n_btiles.sum()),
+            source_bytes=src_bytes,
+        )
+
     def load_blocked(
-        self, bg, name: str, *, zero: float = np.inf, layout: str = "dense"
+        self, bg, name: str, *, zero: float = np.inf, layout: str = "dense",
+        delta: Optional[bool] = None,
     ):
         """Stage an edge attribute straight into blocked instance tensors.
 
@@ -347,10 +461,23 @@ class GoFSStore(InstanceProvider):
         packed :class:`~repro.core.blocked.SparseBlocked` batch holding
         only each instance's active tiles; the deployment-recorded
         per-pack tile maps (``sparse_absent=`` at deploy time) skip the
-        activity re-scan when they match ``bg`` and ``zero``."""
+        activity re-scan when they match ``bg`` and ``zero``.
+
+        ``delta``: ``None``/``True`` reconstruct the sparse batch from the
+        recorded delta tile chain when one validates against ``bg`` and
+        ``zero`` (bitwise-identical, unique tile bytes decoded once,
+        ``SparseBlocked.source_bytes`` reports the dedup); a stale or
+        corrupt chain falls back to the full value slices.  ``False``
+        never touches the chain."""
         assert layout in ("dense", "sparse"), layout
-        w = self.edge_attr_matrix(name)
         if layout == "sparse":
+            if delta is not False:
+                chain = self._delta_chain(
+                    bg, name, zero, range(self.num_timesteps())
+                )
+                if chain is not None:
+                    return self._stage_delta(bg, zero, chain)
+            w = self.edge_attr_matrix(name)
             acts = self._recorded_activity(
                 bg, name, zero, range(self.num_timesteps())
             )
@@ -358,6 +485,7 @@ class GoFSStore(InstanceProvider):
             return bg.stage_sparse(
                 w, zero=zero, act_local=act_l, act_boundary=act_b,
             )
+        w = self.edge_attr_matrix(name)
         return bg.fill_local_batch(w, zero=zero), \
             bg.fill_boundary_batch(w, zero=zero)
 
@@ -371,6 +499,8 @@ class GoFSStore(InstanceProvider):
         chunk_instances: Optional[int] = None,
         num_workers: int = 1,
         layout: str = "dense",
+        delta: Optional[bool] = None,
+        transform=None,
     ):
         """Streaming variant of ``load_blocked``: a
         :class:`~repro.gofs.prefetch.SlicePrefetcher` yielding instance
@@ -387,12 +517,60 @@ class GoFSStore(InstanceProvider):
         pow2 bucket is pinned from the maps up front (one jit shape for
         the whole stream, no value read needed), else each chunk buckets
         itself.
+
+        ``delta``: as in ``load_blocked`` — a validated delta tile chain
+        makes each chunk a payload-pool reconstruction (unique tile bytes
+        staged once per chunk, reported via ``StagedChunk.staged_bytes``)
+        with no per-chunk value-slice reads; stale/corrupt chains fall
+        back to the full read+fill path.  ``transform``: per-instance
+        row-wise derived weights computed chunk-wise on the prefetch pool
+        (see :class:`~repro.gofs.prefetch.SlicePrefetcher`); transformed
+        values bypass the delta chain and recorded buckets, which describe
+        the RAW attribute.
         """
-        from repro.gofs.prefetch import SlicePrefetcher
+        from repro.core.blocked import pow2_bucket
+        from repro.gofs.prefetch import SlicePrefetcher, StagedChunk
 
         assert layout in ("dense", "sparse"), layout
+        chunk = int(chunk_instances or self.ipack)
+        if layout == "sparse" and delta is not False and transform is None:
+            chain = self._delta_chain(
+                bg, name, zero, range(self.num_timesteps())
+            )
+            if chain is not None:
+                ref_l, ref_b, pay_l, pay_b = chain
+                # stream-wide pow2 buckets straight from the refs: exact,
+                # and identical to the bulk delta load's bucket choice
+                lnnz = (ref_l >= 0).sum(-1)
+                bnz = (ref_b >= 0).sum(-1)
+                buck = pow2_bucket(int(lnnz.max()) if lnnz.size else 0)
+                bbuck = pow2_bucket(int(bnz.max()) if bnz.size else 0)
+                B2 = bg.block_size * bg.block_size
+
+                def stage_delta_chunk(s: int, e: int) -> StagedChunk:
+                    rl, rb = ref_l[s:e], ref_b[s:e]
+                    tiles, rows, cols, nnz = bg.pack_payload_tiles(
+                        rl, pay_l, bg.tiles_rc, zero, bucket=buck)
+                    btiles, brows, bcols, bn = bg.pack_payload_tiles(
+                        rb, pay_b, bg.btiles_rc, zero, bucket=bbuck)
+                    uniq = (len(np.unique(rl[rl >= 0]))
+                            + len(np.unique(rb[rb >= 0])))
+                    staged = int(uniq) * B2 * 4 + int(
+                        rows.nbytes + cols.nbytes
+                        + brows.nbytes + bcols.nbytes)
+                    return StagedChunk(
+                        start=s, count=e - s, tiles=tiles, btiles=btiles,
+                        rows=rows, cols=cols, brows=brows, bcols=bcols,
+                        nnz=nnz, bnnz=bn, staged_bytes=staged)
+
+                return SlicePrefetcher(
+                    bg, None, self.num_timesteps(), zero=zero,
+                    prefetch_depth=prefetch_depth, chunk_instances=chunk,
+                    num_workers=num_workers, layout=layout,
+                    stage_fn=stage_delta_chunk,
+                )
         bucket = bbucket = None
-        if layout == "sparse":
+        if layout == "sparse" and transform is None:
             buckets = self.sparse_buckets(bg, name, zero=zero)
             if buckets is not None:
                 bucket, bbucket = buckets
@@ -402,11 +580,12 @@ class GoFSStore(InstanceProvider):
             self.num_timesteps(),
             zero=zero,
             prefetch_depth=prefetch_depth,
-            chunk_instances=int(chunk_instances or self.ipack),
+            chunk_instances=chunk,
             num_workers=num_workers,
             layout=layout,
             bucket=bucket,
             bbucket=bbucket,
+            transform=transform,
         )
 
     # ---------------- internals -------------------------------------------

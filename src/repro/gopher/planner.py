@@ -23,9 +23,20 @@ comm        mesh given -> ``repro.launch.mesh.recommended_comm`` with the
             cut -> ``ring``, else ``dense``; no mesh -> ``dense`` (the
             stacked in-process fold; ``"host"`` targets mesh-free
             multi-process clusters and stays an explicit override)
-staging     store-backed raw-attribute analytics -> ``async`` (slice
-            reads overlap execution); in-memory weights, derived-weight
-            transforms, and composite analytics -> ``sync``
+staging     store-backed analytics -> ``async`` (slice reads overlap
+            execution), including derived weights whose transform is
+            declared ``rowwise`` (applied chunk-wise on the prefetch
+            pool); in-memory weights, non-row-wise transforms, and
+            composite analytics -> ``sync``
+delta       store-backed + sparse layout + a recorded delta chain whose
+            unique-tile ratio ``< 1`` -> ``True`` (stage each unique
+            tile's bytes once per chunk); otherwise ``False`` (full
+            tiles cost the same or less to reconstruct)
+warm        collection recorded monotone-improving at deploy AND the
+            analytic stages with the min-plus zero (+inf) -> ``True``
+            (seed instance *t* from *t-1*'s converged fixpoint — exact;
+            see docs/ARCHITECTURE.md); plus-mul fixed-iterate or
+            non-monotone collections -> ``False`` (cold start)
 placement   mesh given -> shard partitions over ``model_axes`` and
             temporally concurrent instances over ``data_axis``;
             else stacked
@@ -97,6 +108,8 @@ class ExecutionPlan:
     layout: PlanChoice  # "dense" | "sparse"
     comm: PlanChoice  # "dense" | "ring" | "host"
     staging: PlanChoice  # "sync" | "async"
+    delta: PlanChoice  # True | False — delta-chain tile staging
+    warm: PlanChoice  # True | False — warm-started fixpoints
     placement: PlanChoice  # "stacked" | mesh descriptor string
     estimates: Tuple[Tuple[str, Any], ...]  # cost-model outputs, sorted
 
@@ -124,7 +137,8 @@ class ExecutionPlan:
                f"cut {est['boundary_nnz']} published vertices"
                if "num_vertices" in est else ""),
         ]
-        for knob in ("layout", "comm", "staging", "placement"):
+        for knob in ("layout", "comm", "staging", "delta", "warm",
+                     "placement"):
             c: PlanChoice = getattr(self, knob)
             lines.append(f"  {knob:<9} = {c.value!s:<8} [{c.source}] "
                          f"{c.reason}")
@@ -139,6 +153,19 @@ class ExecutionPlan:
             else:
                 s += " (activity unknown without reading values)"
             byte_lines.append(s)
+        if est.get("source_bytes_delta") is not None:
+            byte_lines.append(
+                f"    delta staging: ~{est['source_bytes_delta']:,} B "
+                f"from store (unique-tile ratio "
+                f"{est['delta_unique_ratio']:.1%} of "
+                f"{est['staged_bytes_sparse'] or est['staged_bytes_dense']:,}"
+                f" B reconstructed)")
+        if self.warm.value:
+            byte_lines.append(
+                "    warm start: instance t seeds from t-1's converged "
+                "fixpoint — supersteps shrink toward the per-instance "
+                "change radius (collection recorded monotone-improving; "
+                "exact for min-plus)")
         if "exchange_bytes_per_device" in est:
             byte_lines.append(
                 f"    boundary exchange/superstep: "
@@ -164,17 +191,26 @@ def plan_analytic(
     occupancy: Optional[float],
     sparse_buckets: Optional[Tuple[int, int]],
     num_instances: int,
+    delta_ratio: Optional[float] = None,
+    delta_monotone: Optional[bool] = None,
+    zero_fill: Optional[float] = None,
     pattern: Optional[str] = None,
     merge: Optional[str] = None,
     layout: Optional[str] = None,
     comm: Optional[str] = None,
     staging: Optional[str] = None,
+    delta: Optional[bool] = None,
+    warm: Optional[bool] = None,
 ) -> ExecutionPlan:
     """Resolve every knob for one analytic (see module docstring rules).
 
     ``occupancy``/``sparse_buckets`` come from recorded tile maps or an
     in-memory activity scan — ``None`` means unknown without reading
-    values, which the planner treats as 'stay dense'."""
+    values, which the planner treats as 'stay dense'.  ``delta_ratio``/
+    ``delta_monotone`` are the deploy-time delta-chain stats
+    (``GoFSStore.delta_stats``): unique-tile fraction across the
+    collection and whether consecutive instances only ever tighten
+    weights — ``None`` when no delta chain was recorded."""
     from repro.dist.collectives import boundary_exchange_bytes
     from repro.launch.mesh import recommended_comm
 
@@ -226,13 +262,74 @@ def plan_analytic(
         st = choice("sync", "composite analytic re-reads its staged "
                             "tiles across runs — staged once via the "
                             "shared cache")
-    elif analytic.weights is not None:
+    elif analytic.weights is not None and not analytic.rowwise:
         st = choice("sync", f"derived weights ({analytic.transform_name}) "
                             f"need the full attribute matrix before "
                             f"staging")
+    elif analytic.weights is not None:
+        st = choice("async", f"row-wise transform "
+                             f"({analytic.transform_name}) applies "
+                             f"chunk-by-chunk on the prefetch pool — "
+                             f"slice reads + derived fills overlap "
+                             f"execution")
     else:
         st = choice("async", "streaming from the GoFS store — slice "
                              "reads + fills overlap execution")
+
+    # ---- delta -----------------------------------------------------------
+    # delta reconstruction only pays off on the packed layout (the tile
+    # index IS the dedupe unit) when the recorded chain shows real
+    # temporal redundancy; derived-weight transforms see a synthesized
+    # matrix the chain does not describe
+    delta_ok = (store_backed and lay.value == "sparse"
+                and analytic.weights is None)
+    if delta is not None:
+        dl = override(bool(delta))
+    elif not delta_ok:
+        dl = choice(False,
+                    "delta chain needs a store-backed sparse staging of "
+                    "the raw attribute"
+                    if not (store_backed and analytic.weights is None)
+                    else "dense layout restages template tiles — no "
+                         "packed index to dedupe against")
+    elif delta_ratio is None:
+        dl = choice(False, "no delta chain recorded at deploy")
+    elif delta_ratio < 1.0:
+        dl = choice(True,
+                    f"recorded unique-tile ratio {delta_ratio:.1%} — "
+                    f"unchanged tiles stage once per chunk")
+    else:
+        dl = choice(False,
+                    f"recorded unique-tile ratio {delta_ratio:.1%} — "
+                    f"every tile changes every instance; nothing to dedupe")
+
+    # ---- warm ------------------------------------------------------------
+    # exact only for monotone fixpoints (min-plus, zero_fill=+inf) on
+    # collections recorded monotone-improving at deploy; the engine
+    # additionally cold-starts iterate programs at run time
+    from repro.core.semiring import INF
+
+    warm_ok = (store_backed and delta_monotone is not None
+               and zero_fill is not None and zero_fill == INF)
+    if warm is not None:
+        wm = override(bool(warm))
+    elif not warm_ok:
+        if zero_fill is not None and zero_fill != INF:
+            wm = choice(False, "warm seeding is exact only for min-plus "
+                               "fixpoints (zero_fill=+inf); this staging "
+                               "is not")
+        else:
+            wm = choice(False, "no monotonicity record for this "
+                               "attribute — cold start is the only "
+                               "provably exact seed")
+    elif delta_monotone:
+        wm = choice(True, "collection recorded monotone-improving at "
+                          "deploy — warm min-plus seeds converge to the "
+                          "identical fixpoint in fewer supersteps")
+    else:
+        wm = choice(False, "weights increase somewhere in the chain — a "
+                           "warm min-plus seed could lock in a stale "
+                           "shorter path")
 
     # ---- placement -------------------------------------------------------
     if mesh is None:
@@ -256,6 +353,12 @@ def plan_analytic(
                            * ((kb + kbb) * (B * B * 4 + 8)))
     ex = boundary_exchange_bytes(bg.num_boundary, bg.n_parts, cm.value,
                                  boundary_nnz=nnz)
+    source_bytes_delta = None
+    if dl.value and delta_ratio is not None:
+        # store -> host traffic under delta staging: each unique tile's
+        # payload once, priced against the reconstructed sparse batch
+        base = sparse_bytes if sparse_bytes is not None else dense_bytes
+        source_bytes_delta = int(round(base * delta_ratio))
     estimates = {
         "num_vertices": int(len(bg.part_of)),
         "num_instances": int(num_instances),
@@ -265,6 +368,8 @@ def plan_analytic(
         "occupancy": occupancy,
         "staged_bytes_dense": dense_bytes,
         "staged_bytes_sparse": sparse_bytes,
+        "delta_unique_ratio": delta_ratio,
+        "source_bytes_delta": source_bytes_delta,
         "exchange_kind": ex["kind"],
         "exchange_hops": int(ex["hops"]),
         "exchange_bytes_per_device": float(ex["bytes_per_device"]),
@@ -280,6 +385,8 @@ def plan_analytic(
         layout=lay,
         comm=cm,
         staging=st,
+        delta=dl,
+        warm=wm,
         placement=pl,
         estimates=tuple(sorted(estimates.items())),
     )

@@ -73,6 +73,13 @@ class Analytic:
     execute: Optional[Callable] = None  # (ctx, **params) -> payload dict
     weights: Optional[Callable] = None  # (ctx, raw (I, E)) -> staged (I, E')
     postprocess: Optional[Callable] = None  # (ctx, EngineResult, **params) -> payload
+    # the weights transform is ROW-WISE: transform(w)[s:e] ==
+    # transform(w[s:e]) for any instance window, i.e. each instance's
+    # derived weights depend only on that instance's raw row.  Row-wise
+    # transforms can run chunk-by-chunk on the prefetcher's pool thread,
+    # so store-backed derived-weight analytics stream asynchronously
+    # instead of materializing the full (I, E) matrix up front.
+    rowwise: bool = False
     describe: str = ""
 
     @property
@@ -119,6 +126,7 @@ def register_analytic(
     merge: Optional[str] = None,
     kind: str = "program",
     weights: Optional[Callable] = None,
+    rowwise: bool = False,
     postprocess: Optional[Callable] = None,
     describe: str = "",
 ):
@@ -143,7 +151,7 @@ def register_analytic(
             params=dict(params or {}), graph=graph, merge=merge,
             make_program=fn if kind == "program" else None,
             execute=fn if kind == "composite" else None,
-            weights=weights, postprocess=postprocess,
+            weights=weights, rowwise=rowwise, postprocess=postprocess,
             describe=describe or (fn.__doc__ or "").strip().split("\n")[0],
         )
         return fn

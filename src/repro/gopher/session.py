@@ -174,7 +174,8 @@ class PlanContext:
         """The analytic's MAIN staged batch (attr/transform/zero from the
         registry, layout from the plan) via the shared cache."""
         return self.session._staged(
-            self.cache, self.analytic, self.plan.layout.value
+            self.cache, self.analytic, self.plan.layout.value,
+            delta=bool(self.plan.delta.value),
         )
 
     def staged_ones(self) -> StagedBatch:
@@ -316,16 +317,20 @@ class GopherSession:
         layout: Optional[str] = None,
         comm: Optional[str] = None,
         staging: Optional[str] = None,
+        delta: Optional[bool] = None,
+        warm: Optional[bool] = None,
         **params,
     ) -> ExecutionPlan:
         """Resolve ``analytic`` into a costed :class:`ExecutionPlan`.
 
-        Every knob (``layout``/``comm``/``staging``, plus ``pattern`` and
-        ``merge`` for program analytics) defaults to the planner's
-        auto-selection — pass a value to override; the plan records which
-        happened and why (``plan.explain()``).  Planning never reads a
-        value slice: activity comes from deployment-recorded tile maps
-        (stores) or an in-memory scan (arrays)."""
+        Every knob (``layout``/``comm``/``staging``/``delta``/``warm``,
+        plus ``pattern`` and ``merge`` for program analytics) defaults to
+        the planner's auto-selection — pass a value to override; the plan
+        records which happened and why (``plan.explain()``).  Planning
+        never reads a value slice: activity comes from
+        deployment-recorded tile maps (stores) or an in-memory scan
+        (arrays); delta/warm read the deploy-recorded chain summary
+        (unique-tile ratio, monotonicity) from the same tile-map slice."""
         assert layout in (None, "dense", "sparse"), layout
         assert comm in (None, "dense", "ring", "host"), comm
         assert staging in (None, "sync", "async"), staging
@@ -335,6 +340,11 @@ class GopherSession:
         # the scan (estimates then omit occupancy)
         occupancy, buckets = (None, None) if layout is not None \
             else self._plan_activity(a)
+        delta_ratio = delta_monotone = None
+        if (self.store is not None and a.weights is None
+                and a.graph == "template" and a.attr != ONES_ATTR):
+            delta_ratio, delta_monotone = self.store.delta_stats(
+                a.attr, zero=a.zero_fill)
         return plan_analytic(
             a, resolved,
             bg=self._blocked(a.graph),
@@ -344,8 +354,12 @@ class GopherSession:
             occupancy=occupancy,
             sparse_buckets=buckets,
             num_instances=self.num_instances,
+            delta_ratio=delta_ratio,
+            delta_monotone=delta_monotone,
+            zero_fill=float(a.zero_fill),
             pattern=pattern, merge=merge,
             layout=layout, comm=comm, staging=staging,
+            delta=delta, warm=warm,
         )
 
     def explain(self, analytic: str, **kw) -> str:
@@ -405,11 +419,21 @@ class GopherSession:
                 program = resolved[i].make_program(
                     ctx, **plans[i].param_dict)
                 specs.append(RunSpec(program, plans[i].pattern,
-                                     merge=plans[i].merge))
+                                     merge=plans[i].merge,
+                                     warm_start=bool(plans[i].warm.value)))
             engine = self._engine(graph, comm)
+            a0 = resolved[idxs[0]]
+            # row-wise transforms stream too: the derived weights compute
+            # chunk-by-chunk on the prefetch pool (registry `rowwise`)
+            rowwise_stream = (transform != "raw" and a0.rowwise
+                              and a0.weights is not None)
+            # results are bitwise-identical either way, so one member
+            # planning delta staging turns it on for the shared pass
+            use_delta = any(bool(plans[i].delta.value) for i in idxs)
             stream_ok = (
                 self.store is not None
-                and transform == "raw" and attr != ONES_ATTR
+                and (transform == "raw" or rowwise_stream)
+                and attr != ONES_ATTR
                 and graph == "template"
                 and skey not in composite_keys
                 and skey_groups[skey] == 1
@@ -420,15 +444,19 @@ class GopherSession:
                 # ONE disk prefetch pass feeds all N runners; chunk bytes
                 # are counted by the wrapper so the staging economy report
                 # is comparable with the cache path
+                tf = None if transform == "raw" else \
+                    (lambda rows: a0.weights(self, rows))
                 stream = self.store.load_blocked_stream(
-                    self.bg, attr, zero=zero, layout=layout)
+                    self.bg, attr, zero=zero, layout=layout,
+                    delta=use_delta, transform=tf)
                 cache.staging_passes += 1
                 outs = engine.run_many(
                     specs, stream=_counted_chunks(stream, cache))
             else:
                 # any member analytic materializes the same batch (the
                 # transform rides in the group key)
-                staged = self._staged(cache, resolved[idxs[0]], layout)
+                staged = self._staged(cache, resolved[idxs[0]], layout,
+                                      delta=use_delta)
                 outs = self._dispatch_specs(engine, specs, staged)
             for i, res in zip(idxs, outs):
                 results[i] = self._wrap(plans[i], resolved[i], res, cache)
@@ -551,7 +579,8 @@ class GopherSession:
         return (a.graph, a.attr, a.transform_name, float(a.zero_fill),
                 layout)
 
-    def cache_staged(self, cache: _StagingCache, skey: Tuple) -> StagedBatch:
+    def cache_staged(self, cache: _StagingCache, skey: Tuple,
+                     delta: Optional[bool] = None) -> StagedBatch:
         graph, attr, transform, zero, layout = skey
 
         def maker() -> StagedBatch:
@@ -559,10 +588,16 @@ class GopherSession:
             if (self.store is not None and transform == "raw"
                     and graph == "template" and attr != ONES_ATTR):
                 out = self.store.load_blocked(bg, attr, zero=zero,
-                                              layout=layout)
+                                              layout=layout, delta=delta)
                 if layout == "sparse":
-                    return StagedBatch(layout=layout, sp=out,
-                                       nbytes=out.staged_bytes())
+                    # under delta staging the bytes that actually moved
+                    # from the store are the deduped payloads, not the
+                    # reconstructed batch
+                    return StagedBatch(
+                        layout=layout, sp=out,
+                        nbytes=out.source_bytes
+                        if out.source_bytes is not None
+                        else out.staged_bytes())
                 tiles, btiles = out
                 return StagedBatch(layout=layout, tiles=tiles,
                                    btiles=btiles,
@@ -588,10 +623,11 @@ class GopherSession:
             f"transform {transform!r} must be materialized via its analytic"
         return self._raw(attr)
 
-    def _staged(self, cache: _StagingCache, a: Analytic,
-                layout: str) -> StagedBatch:
+    def _staged(self, cache: _StagingCache, a: Analytic, layout: str,
+                delta: Optional[bool] = None) -> StagedBatch:
         self._staged_weights(a)  # materialize the transform into _w_cache
-        return self.cache_staged(cache, self._main_key(a, layout))
+        return self.cache_staged(cache, self._main_key(a, layout),
+                                 delta=delta)
 
     def _staged_ones(self, cache: _StagingCache) -> StagedBatch:
         from repro.core.semiring import INF
@@ -637,8 +673,14 @@ class GopherSession:
 
 def _counted_chunks(stream, cache: _StagingCache):
     """Pass chunks through, accounting their staged bytes so streamed and
-    cached staging report comparably."""
+    cached staging report comparably.  Delta-reconstructed chunks report
+    the bytes that actually moved from the store (``ch.staged_bytes``,
+    unique payloads only) rather than the reconstructed tensors."""
     for ch in stream:
+        if ch.staged_bytes is not None:
+            cache.staged_bytes += int(ch.staged_bytes)
+            yield ch
+            continue
         n = ch.tiles.nbytes + ch.btiles.nbytes
         for a in (ch.rows, ch.cols, ch.brows, ch.bcols):
             if a is not None:

@@ -1,0 +1,366 @@
+"""Delta-encoded temporal tiles + warm-started incremental recompute.
+
+The deploy-time delta chain (``delta_<attr>.npz``: deduplicated payload
+pools + per-instance tile references) must reconstruct batches
+bitwise-identical to the full sparse fill while moving only each unique
+tile's bytes from the store, and fall back to the full value slices the
+moment the chain is stale or corrupt.  Warm-started fixpoints must
+converge to the bitwise-identical state as cold starts on
+monotone-improving collections, across every iBSP pattern and placement.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import GraphConfig
+from repro.core.blocked import build_blocked
+from repro.core.engine import (
+    TemporalEngine, min_plus_program, pagerank_program, source_init,
+)
+from repro.core.generator import generate_collection
+from repro.core.graph import TimeSeriesGraph
+from repro.core.partition import partition_graph
+from repro.core.semiring import INF
+from repro.gofs import deploy_collection
+from repro.gofs.layout import delta_slice_name
+from repro.gofs.slices import read_array_slice, write_array_slice
+from repro.gofs.store import GoFSStore
+from repro.gopher import GopherSession
+
+CFG = GraphConfig(
+    name="delta", num_vertices=300, avg_degree=3.0, num_instances=6,
+    num_partitions=3, block_size=32, instances_per_slice=2,
+    bins_per_partition=2, cache_slots=4, seed=11,
+)
+
+
+def _slowly_varying(monotone: bool = True) -> TimeSeriesGraph:
+    """Sparse, localized edge support with slowly tightening weights:
+    most tiles are bitwise-unchanged between consecutive instances, and
+    (when ``monotone``) no weight ever increases."""
+    col = generate_collection(CFG, num_plates=6)
+    I = len(col)
+    src = np.asarray(col.template.src)
+    dst = np.asarray(col.template.dst)
+    rng = np.random.default_rng(0)
+    live = (src < 40) & (dst < 40)  # localized: few active tiles
+    w = np.where(live, np.asarray(col.edge_values(0, "latency"), np.float32),
+                 np.float32(INF)).astype(np.float32)
+    ws = [w]
+    idx = np.nonzero(live)[0]
+    for t in range(1, I):
+        w = ws[-1].copy()
+        band = rng.choice(idx, size=max(1, len(idx) // 8), replace=False)
+        w[band] = (w[band] * 0.7).astype(np.float32)
+        if not monotone and t == 2:
+            w[idx[0]] = np.float32(ws[-1][idx[0]] * 3.0)  # one regression
+        ws.append(w)
+    insts = []
+    for t in range(I):
+        gi = col.instances[t]
+        ev = dict(gi.edge_values)
+        ev["latency"] = ws[t]
+        insts.append(dataclasses.replace(gi, edge_values=ev))
+    return TimeSeriesGraph(template=col.template, instances=insts)
+
+
+@pytest.fixture(scope="module")
+def env(tmp_path_factory):
+    col = _slowly_varying()
+    root = str(tmp_path_factory.mktemp("delta_gofs"))
+    deploy_collection(col, CFG, root, sparse_absent={"latency": INF})
+    tmpl = col.template
+    assign = partition_graph(tmpl, CFG.num_partitions, seed=CFG.seed)
+    bg = build_blocked(tmpl, assign, CFG.block_size)
+    I = len(col)
+    weights = np.stack([col.edge_values(t, "latency")
+                        for t in range(I)]).astype(np.float32)
+    return col, root, bg, weights
+
+
+def _store(root, **kw):
+    kw.setdefault("cache_slots", CFG.cache_slots)
+    return GoFSStore(root, **kw)
+
+
+# ------------------------------------------------------------ deploy stats
+def test_deploy_records_delta_chain(env):
+    col, root, bg, weights = env
+    assert os.path.exists(os.path.join(
+        root, delta_slice_name("latency") + ".npz"))
+    ratio, monotone = _store(root).delta_stats("latency", zero=INF)
+    assert ratio is not None and 0.0 < ratio < 1.0  # real temporal reuse
+    assert monotone is True
+    # stats recorded against a different absent value don't apply
+    assert _store(root).delta_stats("latency", zero=0.0) == (None, None)
+
+
+def test_non_monotone_collection_recorded(tmp_path):
+    col = _slowly_varying(monotone=False)
+    root = str(tmp_path / "gofs")
+    deploy_collection(col, CFG, root, sparse_absent={"latency": INF})
+    ratio, monotone = _store(root).delta_stats("latency", zero=INF)
+    assert ratio is not None and monotone is False
+
+
+# ---------------------------------------------------------- load roundtrip
+def test_delta_load_bitwise_matches_full(env):
+    col, root, bg, weights = env
+    full = _store(root).load_blocked(bg, "latency", zero=INF,
+                                     layout="sparse", delta=False)
+    dlt = _store(root).load_blocked(bg, "latency", zero=INF,
+                                    layout="sparse", delta=True)
+    for f in ("tiles", "btiles", "rows", "cols", "brows", "bcols",
+              "nnz", "bnnz"):
+        assert np.array_equal(getattr(full, f), getattr(dlt, f)), f
+    assert full.source_bytes is None  # full fill: nothing deduped
+    assert dlt.source_bytes is not None
+    assert dlt.source_bytes < dlt.staged_bytes()  # the dedupe paid off
+
+
+def test_delta_stream_bitwise_matches_full(env):
+    col, root, bg, weights = env
+    full = _store(root).load_blocked(bg, "latency", zero=INF,
+                                     layout="sparse", delta=False)
+    pf = _store(root).load_blocked_stream(bg, "latency", zero=INF,
+                                          layout="sparse", delta=True,
+                                          chunk_instances=2)
+    tiles, btiles, rows, src_bytes = [], [], [], 0
+    with pf:
+        for ch in pf:
+            assert ch.staged_bytes is not None  # delta chunks report dedup
+            src_bytes += ch.staged_bytes
+            tiles.append(ch.tiles)
+            btiles.append(ch.btiles)
+            rows.append(ch.rows)
+    assert np.array_equal(np.concatenate(tiles), np.asarray(full.tiles))
+    assert np.array_equal(np.concatenate(btiles), np.asarray(full.btiles))
+    assert np.array_equal(np.concatenate(rows), np.asarray(full.rows))
+    assert src_bytes < full.staged_bytes()
+
+
+def test_delta_survives_c0_cache(env):
+    col, root, bg, weights = env
+    store = _store(root, cache_slots=0)  # c0 disables value caching
+    full = store.load_blocked(bg, "latency", zero=INF, layout="sparse",
+                              delta=False)
+    dlt = store.load_blocked(bg, "latency", zero=INF, layout="sparse")
+    assert np.array_equal(np.asarray(full.tiles), np.asarray(dlt.tiles))
+    assert dlt.source_bytes is not None  # chain pinned past slots=0
+    assert store.cache.stats()["pinned"] >= 2  # tile map + delta pool
+
+
+# ------------------------------------------------------------- fallbacks
+def _corrupt(root, **overrides):
+    """Rewrite the delta slice with mutated arrays; returns a fresh store
+    (the original's pinned pool would mask the rewrite)."""
+    path = os.path.join(root, delta_slice_name("latency"))
+    arrs = read_array_slice(path)
+    arrs.update(overrides)
+    write_array_slice(path, arrs)
+
+
+@pytest.mark.parametrize("mutation", ["refs_out_of_range", "wrong_block",
+                                      "truncated_pool", "missing_file"])
+def test_stale_or_corrupt_delta_falls_back_to_full(env, tmp_path, mutation):
+    col, root, bg, weights = env
+    # private deployment copy: mutations must not leak into other tests
+    droot = str(tmp_path / "gofs")
+    deploy_collection(col, CFG, droot, sparse_absent={"latency": INF})
+    path = os.path.join(droot, delta_slice_name("latency") + ".npz")
+    if mutation == "refs_out_of_range":
+        arrs = read_array_slice(path)
+        bad = arrs["ref_local"].copy()
+        bad[bad >= 0] = 10 ** 6  # points past the payload pool
+        _corrupt(droot, ref_local=bad)
+    elif mutation == "wrong_block":
+        _corrupt(droot, block_size=np.asarray(CFG.block_size * 2))
+    elif mutation == "truncated_pool":
+        arrs = read_array_slice(path)
+        _corrupt(droot, payloads_local=arrs["payloads_local"][:1])
+    else:
+        os.remove(path)
+    store = _store(droot)
+    out = store.load_blocked(bg, "latency", zero=INF, layout="sparse",
+                             delta=True)
+    ref = _store(root).load_blocked(bg, "latency", zero=INF,
+                                    layout="sparse", delta=False)
+    assert np.array_equal(np.asarray(out.tiles), np.asarray(ref.tiles))
+    assert out.source_bytes is None  # fell back to the full fill
+    # the stream falls back too, to plain read+fill chunks
+    with store.load_blocked_stream(bg, "latency", zero=INF,
+                                   layout="sparse", delta=True,
+                                   chunk_instances=2) as pf:
+        got = np.concatenate([ch.tiles for ch in pf])
+    assert np.array_equal(got, np.asarray(ref.tiles))
+
+
+def test_delta_chain_rejects_foreign_blocking(env):
+    col, root, bg, weights = env
+    # same collection re-blocked differently: recorded chain must refuse
+    assign = partition_graph(col.template, 2, seed=99)
+    bg2 = build_blocked(col.template, assign, CFG.block_size)
+    out = _store(root).load_blocked(bg2, "latency", zero=INF,
+                                    layout="sparse", delta=True)
+    ref = bg2.stage_sparse(weights, zero=INF)
+    assert np.array_equal(np.asarray(out.tiles), np.asarray(ref.tiles))
+    assert out.source_bytes is None
+
+
+# ------------------------------------------------------------- warm start
+@pytest.mark.parametrize("pattern", ["sequential", "independent",
+                                     "eventually"])
+def test_warm_start_bitwise_parity(env, pattern):
+    col, root, bg, weights = env
+    prog = min_plus_program("sssp", init=source_init(0))
+    eng = TemporalEngine(bg)
+    merge = "mean" if pattern == "eventually" else None
+    cold = eng.run(prog, weights, pattern=pattern, merge=merge)
+    warm = eng.run(prog, weights, pattern=pattern, merge=merge,
+                   warm_start=True)
+    assert np.array_equal(cold.values, warm.values)
+    if merge:
+        assert np.array_equal(cold.merged, warm.merged)
+    assert warm.warm_start and not cold.warm_start
+    saved = warm.supersteps_saved()
+    assert saved is not None and saved.shape == (len(col),)
+    assert (saved >= 0).all() and saved[0] == 0  # instance 0 is cold
+    assert cold.supersteps_saved() is None
+
+
+def test_warm_start_streamed_parity(env):
+    col, root, bg, weights = env
+    prog = min_plus_program("sssp", init=source_init(0))
+    eng = TemporalEngine(bg)
+    cold = eng.run(prog, weights, pattern="independent")
+    warm = eng.run(prog, weights, pattern="independent", warm_start=True,
+                   staging="async")
+    assert np.array_equal(cold.values, warm.values)
+
+
+def test_warm_start_iterate_falls_back_cold(env):
+    col, root, bg, weights = env
+    from repro.core.algorithms import pagerank
+
+    tmpl = col.template
+    active = np.isfinite(weights).astype(np.float32)
+    pw = pagerank.edge_weights_for_instances(tmpl.src, active,
+                                             tmpl.num_vertices)
+    prog = pagerank_program(tmpl.num_vertices, iters=6)
+    eng = TemporalEngine(bg)
+    cold = eng.run(prog, pw, pattern="independent")
+    warm = eng.run(prog, pw, pattern="independent", warm_start=True)
+    assert np.array_equal(cold.values, warm.values)
+    assert not warm.warm_start  # fixed-iterate: warm seed would change it
+
+
+# ----------------------------------------------------- planner + session
+def test_planner_auto_selects_delta_and_warm(env):
+    col, root, bg, weights = env
+    sess = GopherSession(_store(root))
+    plan = sess.plan("sssp", source=0, pattern="independent")
+    assert plan.layout.value == "sparse"
+    assert plan.delta.value is True and plan.delta.source == "auto"
+    assert plan.warm.value is True and plan.warm.source == "auto"
+    text = plan.explain()
+    assert "delta" in text and "warm" in text
+    assert plan.estimate_dict["source_bytes_delta"] is not None
+    # overrides stick and are recorded
+    p2 = sess.plan("sssp", source=0, delta=False, warm=False)
+    assert p2.delta.value is False and p2.delta.source == "override"
+    assert p2.warm.value is False and p2.warm.source == "override"
+
+
+def test_planner_warm_off_for_non_monotone(tmp_path):
+    col = _slowly_varying(monotone=False)
+    root = str(tmp_path / "gofs")
+    deploy_collection(col, CFG, root, sparse_absent={"latency": INF})
+    plan = GopherSession(_store(root)).plan("sssp", source=0)
+    assert plan.delta.value is True  # redundancy is still real
+    assert plan.warm.value is False  # a weight increased somewhere
+
+
+def test_planner_warm_off_for_plus_mul(env):
+    col, root, bg, weights = env
+    plan = GopherSession(_store(root)).plan("pagerank")
+    assert plan.warm.value is False  # zero_fill=0.0 is not min-plus
+
+
+def test_session_delta_warm_end_to_end(env):
+    col, root, bg, weights = env
+    sess = GopherSession(_store(root))
+    auto = sess.run(sess.plan("sssp", source=0, pattern="independent"))
+    rep = dict(sess.last_run_report)
+    sess2 = GopherSession(_store(root))
+    ref = sess2.run(sess2.plan("sssp", source=0, pattern="independent",
+                               delta=False, warm=False))
+    rep2 = dict(sess2.last_run_report)
+    assert np.array_equal(auto.engine.values, ref.engine.values)
+    assert auto.engine.warm_start and not ref.engine.warm_start
+    # staged-bytes accounting reflects the dedup, not the reconstruction
+    assert rep["staged_bytes"] < rep2["staged_bytes"]
+
+
+def test_rowwise_transform_streams_async(env):
+    col, root, bg, weights = env
+    sess = GopherSession(_store(root))
+    plan = sess.plan("pagerank")
+    assert plan.staging.value == "async"  # rowwise transform streams
+    got = sess.run(plan)
+    assert sess.last_run_report["staging_passes"] == 1
+    sess2 = GopherSession(_store(root))
+    ref = sess2.run(sess2.plan("pagerank", staging="sync"))
+    assert np.array_equal(got.output["ranks"], ref.output["ranks"])
+
+
+# ------------------------------------------------------------- mesh warm
+MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from tests.test_delta import CFG, _slowly_varying
+from repro.core.blocked import build_blocked
+from repro.core.engine import TemporalEngine, min_plus_program, source_init
+from repro.core.partition import partition_graph
+
+col = _slowly_varying()
+tmpl = col.template
+# 4 partitions: the model mesh axis must divide the partition count
+assign = partition_graph(tmpl, 4, seed=CFG.seed)
+bg = build_blocked(tmpl, assign, CFG.block_size)
+I = len(col)
+w = np.stack([col.edge_values(t, "latency")
+              for t in range(I)]).astype(np.float32)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+prog = min_plus_program("sssp", init=source_init(0))
+eng_m = TemporalEngine(bg, mesh=mesh, model_axes=("model",))
+eng_s = TemporalEngine(bg)
+for pattern in ("sequential", "independent", "eventually"):
+    merge = "mean" if pattern == "eventually" else None
+    cold = eng_s.run(prog, w, pattern=pattern, merge=merge)
+    warm = eng_m.run(prog, w, pattern=pattern, merge=merge,
+                     warm_start=True)
+    assert np.array_equal(cold.values, warm.values), pattern
+    if merge:
+        np.testing.assert_allclose(cold.merged, warm.merged, rtol=1e-6)
+print("WARM MESH OK")
+"""
+
+
+@pytest.mark.slow
+def test_warm_start_mesh_parity():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", MESH_SCRIPT], env=env, capture_output=True,
+        text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "WARM MESH OK" in r.stdout

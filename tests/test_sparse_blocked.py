@@ -348,6 +348,9 @@ def test_bench_check_gate(tmp_path):
         "staging": {"speedup": 2.0},
         "gofs_staging": {"speedup": 1000.0},
         "async_staging": {"speedup": 1.0},
+        "async_staging_bound": {"speedup": 2.0},
+        "delta_staging": {"staged_bytes_ratio": 3.7, "load_speedup": 2.0},
+        "warm_start": {"speedup": 9.0, "supersteps_saved": 682},
         "pagerank_runner": {"speedup": 2.0},
         "sparse": {"step_speedup": 4.0, "staged_bytes_ratio": 4.6,
                    "occupancy": 0.125},
