@@ -48,6 +48,12 @@ docs/BENCHMARKS.md):
 * shared_staging    — run_many over 3 analytics (sssp, nhop, tracking):
                       shared staging passes/bytes vs 3 independent runs,
                       results asserted identical
+* serving           — warm GopherService answering Q=8 concurrent SSSP
+                      point queries (source-axis batching + resident
+                      staging cache) vs one cold session per query:
+                      p50/p95 latency, throughput ratio, zero bytes
+                      re-staged on repeat queries — results asserted
+                      bitwise identical per source
 
 ``run(check=True)`` (CLI: ``--check``, also via ``benchmarks.run temporal
 --check``) re-measures and compares against the committed
@@ -438,6 +444,9 @@ def run(check: bool = False) -> None:
         "speedup": t_indep / max(t_shared, 1e-12),
     }
 
+    # ---- gopher service: warm serving vs one-session-per-query ------------
+    results["serving"] = serving_row()
+
     # ---- runner: per-instance pagerank loop vs one engine scan ------------
     from repro.core.superstep import Comm, device_graph, pagerank_run
 
@@ -617,6 +626,78 @@ def run(check: bool = False) -> None:
     emit("temporal/json_written", 0.0, OUT_JSON)
 
 
+def serving_row() -> dict:
+    """The serving economy row (standalone so the slow tier-1 test can run
+    just this): a warm :class:`~repro.gopher.GopherService` answering Q=8
+    concurrent SSSP point queries vs the no-serving-layer alternative —
+    one cold :class:`~repro.gopher.GopherSession` per query.  Batched
+    results are asserted bitwise identical to the per-query runs before
+    any timing counts; the repeat-query staging report must show ZERO
+    bytes re-staged (the warm-cache acceptance criterion).
+
+    The collection is interactive-scale (deployed once, like the delta
+    row's): the serving layer's regime is many small point queries where
+    session spin-up (staging passes + jit compiles, paid per cold
+    session) rivals the engine run — the main bench collection's
+    multi-second dense runs would bury that economy under raw semiring
+    compute on a CPU box."""
+    from repro.gopher import GopherService, GopherSession
+
+    cfg_s = dataclasses.replace(
+        BENCH_GRAPH, name="tr-bench-serve", num_vertices=1024,
+        num_instances=8, block_size=32)
+    root_s = "/tmp/gofs_bench_serve"
+    if not os.path.exists(os.path.join(root_s, "collection.json")):
+        deploy_collection(generate_collection(cfg_s), cfg_s, root_s)
+
+    Q = 8
+    sources = list(range(Q))
+    reqs = [("sssp", {"source": s}) for s in sources]
+    svc = GopherService(GoFSStore(root_s, cache_slots=14),
+                        block_size=cfg_s.block_size).start()
+    svc.query("sssp", source=sources[0])  # warm: stage + compile
+    svc.query("sssp", source=sources[0])  # repeat: must re-stage nothing
+    restaged = int(svc.session.last_run_report["staged_bytes"])
+    repeat_passes = int(svc.session.last_run_report["staging_passes"])
+
+    def served():
+        return svc.query_many(reqs)
+
+    t_warm_batch = _time(served, repeats=3)
+    outs = served()
+    rep = svc.report()
+    svc.stop()
+
+    # baseline: a fresh session per query (cold staging, cold jit)
+    def per_query():
+        res = []
+        for s in sources:
+            sess = GopherSession(GoFSStore(root_s, cache_slots=14),
+                                 block_size=cfg_s.block_size)
+            res.append(sess.run(sess.plan("sssp", source=s)))
+        return res
+
+    singles = per_query()
+    for a, b in zip(outs, singles):  # batching must be invisible
+        assert np.array_equal(a.output["final"], b.output["final"])
+    t_per_query = _time(per_query, repeats=2)
+
+    ratio = t_per_query / max(t_warm_batch, 1e-12)
+    emit("temporal/serving_per_query", t_per_query * 1e6, f"q={Q}")
+    emit("temporal/serving_warm_batched", t_warm_batch * 1e6,
+         f"throughput_ratio={ratio:.2f}x;"
+         f"p95_ms={rep['p95_ms']:.1f};restaged={restaged}")
+    return {
+        "q": Q,
+        "p50_ms": rep["p50_ms"], "p95_ms": rep["p95_ms"],
+        "widest_batch": rep["widest_batch"],
+        "warm_batch_s": t_warm_batch, "per_query_s": t_per_query,
+        "throughput_ratio": ratio,
+        "restaged_bytes_repeat": restaged,
+        "restaging_passes_repeat": repeat_passes,
+    }
+
+
 # Per-row regression gates for ``--check``: (row, field) -> (kind, floor,
 # rel_frac).  ``min``: fresh value must be >= max(floor, rel_frac *
 # baseline) — the absolute floor catches a lost optimization outright, the
@@ -651,6 +732,14 @@ THRESHOLDS = {
     # configures; shared staging must amortize (byte ratio shape-derived)
     ("plan_overhead", "frac"): ("max", 0.1, None),
     ("shared_staging", "staged_bytes_ratio"): ("min", 1.5, 0.9),
+    # warm serving: the acceptance targets — >=2x throughput over one
+    # cold session per query at Q=8, and a repeat query on a warm cache
+    # re-stages NOTHING (both deterministic enough to gate hard; the
+    # ratio also folds in jit-compile amortization, so it sits far above
+    # the floor in practice)
+    ("serving", "throughput_ratio"): ("min", 2.0, 0.5),
+    ("serving", "restaged_bytes_repeat"): ("max", 0.0, None),
+    ("serving", "restaging_passes_repeat"): ("max", 0.0, None),
 }
 
 

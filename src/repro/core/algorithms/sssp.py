@@ -147,17 +147,28 @@ def _postprocess(ctx, res, **_params):
     params={"source": REQUIRED, "subgraph_centric": True,
             "max_supersteps": 64},
     postprocess=_postprocess,
+    source_axis="source",
     describe="temporal SSSP: sequentially dependent min-plus fixpoint, "
              "distances carried between timesteps",
 )
 def _sssp_program(ctx, *, source, subgraph_centric, max_supersteps):
     """Program factory for the ``"sssp"`` analytic: min-plus fixpoint
     seeded at ``source``; the sequential pattern carries distances
-    across the instance axis (incremental aggregation)."""
-    from repro.core.engine import min_plus_program, source_init
+    across the instance axis (incremental aggregation).
 
+    ``source`` may be a sequence of Q vertices: the seeds stack on the
+    engine's query axis and all Q runs execute as one vectorized pass,
+    with ``final`` gaining a leading (Q,) dim — bitwise identical to Q
+    scalar-source runs (GopherService batches concurrent requests here).
+    """
+    from repro.core.engine import min_plus_program, source_init, sources_init
+
+    if isinstance(source, (list, tuple, np.ndarray)):
+        init = sources_init(source)
+    else:
+        init = source_init(source)
     return min_plus_program(
-        "sssp", init=source_init(source),
+        "sssp", init=init,
         subgraph_centric=subgraph_centric, max_supersteps=max_supersteps,
     )
 

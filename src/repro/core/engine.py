@@ -159,6 +159,35 @@ def source_init(source_vertex: int, pad: float = INF):
     return init
 
 
+def sources_init(sources: Sequence[int], pad: float = INF):
+    """Batched multi-source seed: ``x0[q]`` is ``source_init(sources[q])``,
+    stacked into a (Q, P, Vp) state tensor — the *query axis* that lets Q
+    concurrent SSSP/N-hop requests run as ONE vectorized engine pass.
+
+    The engine detects the extra leading axis (``x0.ndim == 3``) and vmaps
+    the per-source runner over it; each source's fixpoint halts
+    independently (JAX's batched ``while_loop`` masks converged lanes), so
+    every result — values, final state, superstep counts — is bitwise
+    identical to Q separate single-source runs.
+
+    >>> import numpy as np
+    >>> from repro.core.blocked import build_blocked
+    >>> from repro.core.graph import GraphTemplate
+    >>> from repro.core.engine import sources_init
+    >>> tmpl = GraphTemplate(num_vertices=4,
+    ...     src=np.array([0, 1, 2, 0]), dst=np.array([1, 2, 3, 2]))
+    >>> bg = build_blocked(tmpl, np.array([0, 0, 1, 1]), block_size=2)
+    >>> sources_init([0, 3])(bg).shape   # (Q, P, Vp)
+    (2, 2, 2)
+    """
+    srcs = [int(s) for s in np.asarray(sources).reshape(-1)]
+
+    def init(bg: BlockedGraph) -> np.ndarray:
+        return np.stack([source_init(s, pad)(bg) for s in srcs])
+
+    return init
+
+
 def label_init():
     """x0 = own vertex id (label propagation / components seed)."""
 
@@ -215,12 +244,16 @@ class EngineResult:
     """Gathered outputs + iBSP-comparable statistics."""
 
     pattern: str
-    values: np.ndarray  # (I, V) per-instance vertex values (global order)
-    final: np.ndarray  # (V,) carried end state (sequential) or values[-1]
+    values: np.ndarray  # (I, V) per-instance vertex values (global order);
+    # multi-source runs (n_sources=Q) prepend the query axis: (Q, I, V)
+    final: np.ndarray  # (V,) carried end state (sequential) or values[-1];
+    # (Q, V) for multi-source runs
     merged: Optional[np.ndarray]  # (V,) Merge output (eventually + on-device)
     stats: Dict[str, np.ndarray]  # {"supersteps": (I,), "local_sweeps": (I,)}
+    # — (Q, I) per source for multi-source runs
     occupancy: Optional[float] = None  # active-tile fraction (sparse layout)
     warm_start: bool = False  # fixpoints seeded from the previous instance
+    n_sources: Optional[int] = None  # query-axis width Q (None = unbatched)
     _n_published: int = 0  # boundary vertices published per superstep
     _n_parts: int = 0
     _num_vertices: int = 0
@@ -234,22 +267,25 @@ class EngineResult:
         if not self.warm_start:
             return None
         ss = self.stats["supersteps"]
-        return np.maximum(0, int(ss[0]) - ss.astype(np.int64))
+        # per-source baselines under the query axis ((Q, I) stats)
+        return np.maximum(0, ss[..., :1].astype(np.int64) - ss.astype(np.int64))
 
     def bsp_stats(self) -> BSPStats:
         """The host engine's accounting shape (run_ibsp comparability):
         compute_calls = partition activations, superstep_messages =
         published boundary values, timestep_messages = carried vertex
-        states (sequential), merge_messages = instances folded."""
+        states (sequential), merge_messages = instances folded.  Counts
+        sum over the query axis for multi-source runs."""
         ss = int(np.sum(self.stats["supersteps"]))
-        I = len(self.stats["supersteps"])
+        I = int(self.stats["supersteps"].shape[-1])
+        q = self.n_sources or 1
         return BSPStats(
             supersteps=ss,
             compute_calls=ss * self._n_parts,
             superstep_messages=ss * self._n_published,
-            timestep_messages=(I - 1) * self._num_vertices
+            timestep_messages=(I - 1) * self._num_vertices * q
             if self.pattern == "sequential" else 0,
-            merge_messages=I if self.pattern == "eventually" else 0,
+            merge_messages=I * q if self.pattern == "eventually" else 0,
         )
 
 
@@ -444,7 +480,7 @@ class TemporalEngine:
             jnp.asarray(bg.btiles_rc[:, :, 0]), jnp.asarray(bg.btiles_rc[:, :, 1]),
         ) + self._struct_tail
         self._runners: Dict[Any, Callable] = {}
-        self._merge_fn: Optional[Callable] = None
+        self._merge_fns: Dict[int, Callable] = {}
         # staged-batch device cache: host-array identity (weakly held) ->
         # device arrays (see _cached_device) so repeated runs over one
         # staged batch (run_many, tracking's probes, shared-staging
@@ -541,7 +577,7 @@ class TemporalEngine:
 
     def _make_stacked_runner(self, program: SemiringProgram, pattern: str,
                              merge: Optional[str], sparse: bool = False,
-                             warm: bool = False):
+                             warm: bool = False, multi: bool = False):
         def run_dense(tiles, btiles, x0, *struct):
             return finish(*self._scan_instances(
                 program, pattern, x0, tiles, btiles, struct, warm=warm
@@ -560,7 +596,17 @@ class TemporalEngine:
                 merged = jnp.zeros_like(final)
             return xs, final, merged, ss, lsw
 
-        return jax.jit(run_sparse if sparse else run_dense)
+        fn = run_sparse if sparse else run_dense
+        if multi:
+            # query axis: vmap over the leading (Q,) dim of x0 only — tile
+            # values and template structure broadcast.  Batched while_loops
+            # mask converged sources lane-wise, so each source's fixpoint
+            # (and its superstep count) is exactly its single-source run.
+            before = 6 if sparse else 2  # positional args ahead of x0
+            tail = len(self._struct_tail) if sparse else len(self._struct)
+            fn = jax.vmap(fn, in_axes=(None,) * before + (0,)
+                          + (None,) * tail)
+        return jax.jit(fn)
 
     def _data_size(self) -> int:
         axes = (self.data_axis,) if isinstance(self.data_axis, str) \
@@ -572,7 +618,8 @@ class TemporalEngine:
 
     def _make_mesh_runner(self, program: SemiringProgram, pattern: str,
                           merge: Optional[str], n_instances: int,
-                          sparse: bool = False, warm: bool = False):
+                          sparse: bool = False, warm: bool = False,
+                          multi: bool = False):
         from jax.sharding import PartitionSpec as P_
 
         mesh = self.mesh
@@ -628,9 +675,21 @@ class TemporalEngine:
 
         iaxis = daxis if shard_instances else None
 
+        local = local_sparse if sparse else local_dense
+        if multi:
+            # query axis: the vmap sits INSIDE shard_map (vmap-of-shard_map
+            # composes poorly), batching the per-shard scan over the
+            # leading (Q,) of x0; the data/model sharding of tiles and
+            # instances is unchanged, and collectives batch lane-wise.
+            before = 6 if sparse else 2
+            tail = len(self._struct_tail) if sparse else len(self._struct)
+            local = jax.vmap(local, in_axes=(None,) * before + (0,)
+                             + (None,) * tail)
+
         def lead(extra_dims: int, *front):
             return P_(*front, *([None] * extra_dims))
 
+        q = (None,) if multi else ()  # replicated leading query axis
         if sparse:
             in_specs = (
                 lead(3, iaxis, maxes),  # tiles (I, P, K, B, B)
@@ -639,22 +698,22 @@ class TemporalEngine:
                 lead(1, iaxis, maxes),  # cols
                 lead(1, iaxis, maxes),  # brows (I, P, Kb)
                 lead(1, iaxis, maxes),  # bcols
-                lead(1, maxes),         # x0 (P, Vp)
+                lead(1, *q, maxes),     # x0 ([Q,] P, Vp)
             ) + tuple(lead(s.ndim - 1, maxes) for s in self._struct_tail)
         else:
             in_specs = (
                 lead(3, iaxis, maxes),  # tiles (I, P, T, B, B)
                 lead(3, iaxis, maxes),  # btiles
-                lead(1, maxes),         # x0 (P, Vp)
+                lead(1, *q, maxes),     # x0 ([Q,] P, Vp)
             ) + tuple(lead(s.ndim - 1, maxes) for s in self._struct)
         out_specs = (
-            lead(2, iaxis, maxes),  # xs (I, P, Vp)
-            lead(1, maxes),         # final
-            lead(1, maxes),         # merged (replicated over data)
-            P_(iaxis), P_(iaxis),   # ss, lsw (I,)
+            lead(2, *q, iaxis, maxes),  # xs ([Q,] I, P, Vp)
+            lead(1, *q, maxes),         # final
+            lead(1, *q, maxes),         # merged (replicated over data)
+            P_(*q, iaxis), P_(*q, iaxis),  # ss, lsw ([Q,] I)
         )
         fn = shard_map(
-            local_sparse if sparse else local_dense, mesh=mesh,
+            local, mesh=mesh,
             in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
         )
@@ -662,16 +721,18 @@ class TemporalEngine:
 
     def _runner(self, program: SemiringProgram, pattern: str,
                 merge: Optional[str], n_instances: int,
-                sparse: bool = False, warm: bool = False):
-        key = (program, pattern, merge, n_instances, sparse, warm)
+                sparse: bool = False, warm: bool = False,
+                multi: bool = False):
+        key = (program, pattern, merge, n_instances, sparse, warm, multi)
         if key not in self._runners:
             if self.mesh is None:
                 self._runners[key] = self._make_stacked_runner(
-                    program, pattern, merge, sparse, warm=warm
+                    program, pattern, merge, sparse, warm=warm, multi=multi
                 )
             else:
                 self._runners[key] = self._make_mesh_runner(
-                    program, pattern, merge, n_instances, sparse, warm=warm
+                    program, pattern, merge, n_instances, sparse, warm=warm,
+                    multi=multi,
                 )
         return self._runners[key]
 
@@ -719,18 +780,22 @@ class TemporalEngine:
         )
         return self._dispatch(run_fn, *bufs, x0, *self._struct_tail)
 
-    def _merge_mean(self, xs):
+    def _merge_mean(self, xs, axis: int = 0):
         """On-device Merge over the full instance axis (async path).
         Stacked: the same ``jnp.mean`` the sync runner computes in-graph,
         on the same (I, P, Vp) values — bitwise-identical output.  Mesh:
         the sync runner reduces as psum-of-shard-sums inside ``shard_map``,
-        a different float grouping — equal up to low-order bits."""
-        if self._merge_fn is None:
-            self._merge_fn = jax.jit(lambda v: jnp.mean(v, axis=0))
+        a different float grouping — equal up to low-order bits.
+        ``axis=1`` folds the instance axis of multi-source (Q, I, …)
+        states."""
+        fn = self._merge_fns.get(axis)
+        if fn is None:
+            fn = self._merge_fns[axis] = jax.jit(
+                lambda v: jnp.mean(v, axis=axis))
         if self.mesh is not None:
             with self.mesh:
-                return self._merge_fn(xs)
-        return self._merge_fn(xs)
+                return fn(xs)
+        return fn(xs)
 
     def _run_stream_many(self, specs: Sequence[RunSpec], chunks, x0s):
         """Consume a chunk stream (SlicePrefetcher or any iterable of
@@ -781,7 +846,8 @@ class TemporalEngine:
                 seed = carry[k] if (s.pattern == "sequential" or warm_k) \
                     else x0s[k]
                 run_fn = self._runner(s.program, s.pattern, None, n,
-                                      sparse=is_sparse, warm=warm_k)
+                                      sparse=is_sparse, warm=warm_k,
+                                      multi=x0s[k].ndim == 3)
                 xs, fin, _, ss, lsw = self._dispatch(
                     run_fn, *bufs, seed, *tail
                 )
@@ -792,12 +858,17 @@ class TemporalEngine:
         outs = []
         for k, s in enumerate(specs):
             assert final[k] is not None, "empty instance stream"
-            xs = xs_p[k][0] if len(xs_p[k]) == 1 else jnp.concatenate(xs_p[k])
-            ss = ss_p[k][0] if len(ss_p[k]) == 1 else jnp.concatenate(ss_p[k])
+            # multi-source chunks stack per-chunk outputs on the instance
+            # axis, which sits AFTER the leading query axis
+            iax = 1 if x0s[k].ndim == 3 else 0
+            xs = xs_p[k][0] if len(xs_p[k]) == 1 \
+                else jnp.concatenate(xs_p[k], axis=iax)
+            ss = ss_p[k][0] if len(ss_p[k]) == 1 \
+                else jnp.concatenate(ss_p[k], axis=iax)
             lsw = lsw_p[k][0] if len(lsw_p[k]) == 1 \
-                else jnp.concatenate(lsw_p[k])
+                else jnp.concatenate(lsw_p[k], axis=iax)
             if s.pattern == "eventually" and s.merge == "mean":
-                merged = self._merge_mean(xs)
+                merged = self._merge_mean(xs, axis=iax)
             else:
                 merged = jnp.zeros_like(final[k])
             outs.append((xs, final[k], merged, ss, lsw))
@@ -947,7 +1018,8 @@ class TemporalEngine:
             for s, x0 in zip(specs, x0s):
                 run_fn = self._runner(s.program, s.pattern, s.merge,
                                       sparse.num_instances, sparse=True,
-                                      warm=s.effective_warm())
+                                      warm=s.effective_warm(),
+                                      multi=x0.ndim == 3)
                 outs.append(self._dispatch_sparse(run_fn, sparse, x0))
         else:
             if tiles is None or btiles is None:
@@ -962,29 +1034,40 @@ class TemporalEngine:
             for s, x0 in zip(specs, x0s):
                 run_fn = self._runner(s.program, s.pattern, s.merge,
                                       int(tiles.shape[0]),
-                                      warm=s.effective_warm())
+                                      warm=s.effective_warm(),
+                                      multi=x0.ndim == 3)
                 outs.append(self._dispatch(
                     run_fn, tiles, btiles, x0, *self._struct
                 ))
 
         return [
             self._wrap_result(s.pattern, s.merge, out, occ,
-                              warm=s.effective_warm())
-            for s, out in zip(specs, outs)
+                              warm=s.effective_warm(),
+                              n_sources=int(x0.shape[0])
+                              if x0.ndim == 3 else None)
+            for s, out, x0 in zip(specs, outs, x0s)
         ]
 
     def _wrap_result(self, pattern: str, merge: Optional[str], out,
-                     occ: Optional[float], warm: bool = False) -> EngineResult:
+                     occ: Optional[float], warm: bool = False,
+                     n_sources: Optional[int] = None) -> EngineResult:
         """Gather device outputs back to global vertex order + stats."""
         xs, final, merged, ss, lsw = out
         bg = self.bg
-        xs = np.asarray(xs)
-        values = np.stack([bg.gather_vertex(xs[i]) for i in range(xs.shape[0])])
+
+        def gather(x):  # (..., P, Vp) -> (..., V), any leading axes
+            x = np.asarray(x)
+            lead_shape = x.shape[:-2]
+            flat = x.reshape((-1,) + x.shape[-2:])
+            out = np.stack([bg.gather_vertex(flat[i])
+                            for i in range(flat.shape[0])])
+            return out.reshape(lead_shape + out.shape[-1:])
+
         return EngineResult(
             pattern=pattern,
-            values=values,
-            final=bg.gather_vertex(np.asarray(final)),
-            merged=bg.gather_vertex(np.asarray(merged))
+            values=gather(xs),
+            final=gather(final),
+            merged=gather(merged)
             if (pattern == "eventually" and merge == "mean") else None,
             stats={
                 "supersteps": np.asarray(ss),
@@ -992,6 +1075,7 @@ class TemporalEngine:
             },
             occupancy=occ,
             warm_start=warm,
+            n_sources=n_sources,
             _n_published=int(bg.n_out.sum()),
             _n_parts=bg.n_parts,
             _num_vertices=len(bg.part_of),

@@ -2,15 +2,32 @@
 
 Slots hold whole deserialized slices; eviction is least-recently-used.
 ``slots=0`` disables caching (the paper's c0 configuration), ``slots=14``
-fits one slice per attribute (c14).  Hit/miss counters feed the layout
-micro-benchmarks; the cache is transparent to the GoFS API user.
+fits one slice per attribute (c14).  ``byte_budget`` optionally bounds the
+LRU tier by RESIDENT BYTES as well — eviction runs until both the slot
+count and the byte budget hold, which is what a long-lived serving
+process needs (slot counts say nothing about slice size).  Hit/miss
+counters feed the layout micro-benchmarks; the cache is transparent to
+the GoFS API user.
 """
 from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
+
+
+def _value_nbytes(val: Any) -> int:
+    """Best-effort byte size of a cached slice: ndarray-likes report
+    ``nbytes``; containers sum their values; everything else counts 0
+    (budgeting is for bulk slice payloads, not tiny metadata)."""
+    n = getattr(val, "nbytes", None)
+    if n is not None:
+        return int(n)
+    if isinstance(val, dict):
+        return sum(_value_nbytes(v) for v in val.values())
+    if isinstance(val, (list, tuple)):
+        return sum(_value_nbytes(v) for v in val)
+    return 0
 
 
 class SliceCache:
@@ -18,15 +35,25 @@ class SliceCache:
     caller's thread may hit the same store concurrently.  The lock guards
     the LRU bookkeeping only; the ``loader`` disk read runs outside it (two
     threads may race the same cold key and both read — harmless, the LRU
-    keeps one copy)."""
+    keeps one copy).
 
-    def __init__(self, slots: int = 14):
+    Pinned entries (``pin=True``) live outside both the slot count and the
+    byte budget: they are metadata-grade values (tile maps, delta payload
+    pools) that every staging pass re-derives from and must never be
+    evicted (the no-lost-pins invariant the concurrency stress test
+    hammers)."""
+
+    def __init__(self, slots: int = 14, byte_budget: Optional[int] = None):
         self.slots = slots
+        self.byte_budget = byte_budget
         self._data: "OrderedDict[str, Any]" = OrderedDict()
+        self._sizes: Dict[str, int] = {}
+        self._bytes = 0  # resident bytes in the LRU tier
         self._pinned: Dict[str, Any] = {}
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key: str, loader: Callable[[], Any],
             pin: bool = False) -> Any:
@@ -55,23 +82,46 @@ class SliceCache:
                 return self._data[key]
             self.misses += 1
         val = loader()
+        nb = _value_nbytes(val)
         with self._lock:
-            self._data[key] = val
-            if len(self._data) > self.slots:
-                self._data.popitem(last=False)
+            if key not in self._data:
+                self._data[key] = val
+                self._sizes[key] = nb
+                self._bytes += nb
+            self._evict_locked()
         return val
+
+    def _evict_locked(self) -> None:
+        """Evict LRU entries until the slot count AND byte budget hold.
+        Caller holds the lock.  A single value larger than the whole
+        budget is evicted immediately after insertion — residency is never
+        allowed to exceed the budget at lock release."""
+        while self._data and (
+            len(self._data) > self.slots
+            or (self.byte_budget is not None
+                and self._bytes > self.byte_budget)
+        ):
+            k, _ = self._data.popitem(last=False)
+            self._bytes -= self._sizes.pop(k, 0)
+            self.evictions += 1
 
     def clear(self) -> None:
         with self._lock:
             self._data.clear()
+            self._sizes.clear()
+            self._bytes = 0
             self._pinned.clear()
 
     def stats(self) -> Dict[str, float]:
-        total = self.hits + self.misses
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "hit_rate": self.hits / total if total else 0.0,
-            "resident": len(self._data),
-            "pinned": len(self._pinned),
-        }
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": self.hits / total if total else 0.0,
+                "resident": len(self._data),
+                "resident_bytes": self._bytes,
+                "byte_budget": self.byte_budget,
+                "pinned": len(self._pinned),
+                "evictions": self.evictions,
+            }

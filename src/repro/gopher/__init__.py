@@ -18,15 +18,18 @@ from repro.gopher.registry import (
     list_analytics,
     register_analytic,
 )
+from repro.gopher.service import GopherService, QueryTicket
 from repro.gopher.session import AnalyticResult, GopherSession, PlanContext
 
 __all__ = [
     "Analytic",
     "AnalyticResult",
     "ExecutionPlan",
+    "GopherService",
     "GopherSession",
     "PlanChoice",
     "PlanContext",
+    "QueryTicket",
     "REQUIRED",
     "SPARSE_OCCUPANCY_MAX",
     "get_analytic",

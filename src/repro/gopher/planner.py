@@ -80,9 +80,12 @@ def override(value: Any) -> PlanChoice:
 
 
 def _norm_param(v: Any) -> Any:
-    """Plan params must compare/render cleanly: arrays become tuples."""
+    """Plan params must compare/render cleanly (and hash, so a plan can
+    key a cache): arrays and lists become tuples."""
     if isinstance(v, np.ndarray):
         return tuple(v.tolist())
+    if isinstance(v, (list, tuple)):
+        return tuple(_norm_param(x) for x in v)
     if isinstance(v, (np.integer,)):
         return int(v)
     if isinstance(v, (np.floating,)):
@@ -160,6 +163,11 @@ class ExecutionPlan:
                 f"{est['delta_unique_ratio']:.1%} of "
                 f"{est['staged_bytes_sparse'] or est['staged_bytes_dense']:,}"
                 f" B reconstructed)")
+        if est.get("n_sources", 1) > 1:
+            byte_lines.append(
+                f"    query axis: {est['n_sources']} sources batched into "
+                f"one ({est['n_sources']}, P, Vp) state pass — "
+                f"{est['state_bytes']:,} B of state, staged tiles shared")
         if self.warm.value:
             byte_lines.append(
                 "    warm start: instance t seeds from t-1's converged "
@@ -343,6 +351,14 @@ def plan_analytic(
                     f"patterns shard instances over the data axis")
 
     # ---- estimates -------------------------------------------------------
+    # query axis: a sequence on the analytic's source parameter widens the
+    # semiring state to (Q, P, Vp) — Q requests in one engine pass whose
+    # staged tiles are shared (priced once), only the state scales with Q
+    n_sources = 1
+    if analytic.source_axis is not None:
+        sv = resolved_params.get(analytic.source_axis)
+        if isinstance(sv, (list, tuple, np.ndarray)):
+            n_sources = int(len(sv))
     B = bg.block_size
     dense_bytes = int(num_instances * bg.n_parts
                       * (bg.t_max + bg.tb_max) * B * B * 4)
@@ -362,6 +378,9 @@ def plan_analytic(
     estimates = {
         "num_vertices": int(len(bg.part_of)),
         "num_instances": int(num_instances),
+        "n_sources": n_sources,
+        "state_bytes": int(n_sources * bg.n_parts
+                           * bg.global_of.shape[1] * 4),
         "n_parts": int(bg.n_parts),
         "block_size": int(B),
         "boundary_nnz": nnz,

@@ -80,6 +80,12 @@ class Analytic:
     # so store-backed derived-weight analytics stream asynchronously
     # instead of materializing the full (I, E) matrix up front.
     rowwise: bool = False
+    # name of the parameter that seeds the semiring state from one vertex
+    # (e.g. "source").  When set, the analytic accepts a SEQUENCE there as
+    # well as a scalar: Q values become one vectorized multi-source engine
+    # pass whose results are bitwise identical to Q scalar runs — the
+    # query-batching axis GopherService coalesces concurrent requests on.
+    source_axis: Optional[str] = None
     describe: str = ""
 
     @property
@@ -128,6 +134,7 @@ def register_analytic(
     weights: Optional[Callable] = None,
     rowwise: bool = False,
     postprocess: Optional[Callable] = None,
+    source_axis: Optional[str] = None,
     describe: str = "",
 ):
     """Class the decorated function as a named analytic.
@@ -152,6 +159,7 @@ def register_analytic(
             make_program=fn if kind == "program" else None,
             execute=fn if kind == "composite" else None,
             weights=weights, rowwise=rowwise, postprocess=postprocess,
+            source_axis=source_axis,
             describe=describe or (fn.__doc__ or "").strip().split("\n")[0],
         )
         return fn

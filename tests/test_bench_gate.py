@@ -1,0 +1,79 @@
+"""The bench regression gate is wired into tier-1 (not hand-invoked only).
+
+Two layers:
+
+* fast — the committed ``BENCH_temporal.json`` must satisfy the gate's
+  own thresholds when replayed as "fresh" results.  This catches schema
+  drift (a renamed row/field makes the gate vacuous), threshold drift
+  (a floor raised past the committed numbers), and a stale baseline —
+  without re-measuring anything.
+* slow — actually re-measure the serving row (the economy this PR adds)
+  and hold it to the committed acceptance floors: >=2x throughput vs
+  one-session-per-query at Q>=4, zero bytes re-staged on repeat queries.
+  Marked ``slow`` alongside the other multi-minute rows; CI's tier-1
+  lane runs ``-m "not slow"``.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO, "BENCH_temporal.json")
+
+
+def _bench_temporal():
+    sys.path.insert(0, REPO)  # benchmarks/ is not a package on PYTHONPATH
+    try:
+        from benchmarks import bench_temporal
+    finally:
+        sys.path.pop(0)
+    return bench_temporal
+
+
+def test_committed_baseline_passes_its_own_gate():
+    bt = _bench_temporal()
+    assert os.path.exists(BASELINE), \
+        "BENCH_temporal.json must be committed (run benchmarks/bench_temporal.py)"
+    with open(BASELINE) as f:
+        committed = json.load(f)
+    failures = bt.check_against_baseline(committed, path=BASELINE)
+    assert not failures, failures
+
+
+def test_every_threshold_row_exists_in_baseline():
+    """A threshold pointing at a missing row/field means the gate silently
+    stopped gating that quantity — fail loudly instead."""
+    bt = _bench_temporal()
+    with open(BASELINE) as f:
+        committed = json.load(f)
+    missing = [f"{row}.{field}" for (row, field) in bt.THRESHOLDS
+               if committed.get(row, {}).get(field) is None]
+    assert not missing, missing
+
+
+def test_serving_row_schema_in_baseline():
+    """The serving row's reported fields (docs/BENCHMARKS.md schema)."""
+    with open(BASELINE) as f:
+        row = json.load(f)["serving"]
+    for field in ("q", "p50_ms", "p95_ms", "widest_batch", "warm_batch_s",
+                  "per_query_s", "throughput_ratio",
+                  "restaged_bytes_repeat", "restaging_passes_repeat"):
+        assert field in row, field
+    assert row["q"] >= 4
+
+
+@pytest.mark.slow
+def test_serving_row_meets_acceptance_floors():
+    bt = _bench_temporal()
+    row = bt.serving_row()
+    assert row["q"] >= 4
+    assert row["throughput_ratio"] >= 2.0, row
+    assert row["restaged_bytes_repeat"] == 0, row
+    assert row["restaging_passes_repeat"] == 0, row
+    # and the freshly measured row passes the committed gate's thresholds
+    failures = [f for f in bt.check_against_baseline({"serving": row},
+                                                     path=BASELINE)
+                if f.startswith("serving.")]
+    assert not failures, failures

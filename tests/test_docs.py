@@ -60,7 +60,7 @@ def test_named_module_paths_exist(md):
     ["repro.core.engine", "repro.core.comm", "repro.core.blocked",
      "repro.gofs.prefetch", "repro.dist.collectives",
      "repro.launch.mesh", "repro.gopher.session", "repro.gopher.registry",
-     "repro.gopher.planner"],
+     "repro.gopher.planner", "repro.gopher.service"],
 )
 def test_docstring_examples_run(modname):
     """The per-pattern snippets documented on TemporalEngine /

@@ -446,3 +446,65 @@ def test_tile_occupancy_from_maps(sparse_store_root, tiny):
     )
     occ2 = store.tile_occupancy(bg2, "latency")
     assert occ2 is not None and 0.0 < occ2 <= 1.0
+
+
+# --------------------------------------------------------------------------
+# staging-cache keys: transform / zero_fill must never alias
+# --------------------------------------------------------------------------
+
+def _halved_latency(ctx, w):
+    return np.asarray(w, np.float32) * np.float32(0.5)
+
+
+def test_staging_keys_never_alias_across_transform_or_zero(tiny, monkeypatch):
+    """Regression: the staging cache keys on (graph, attr, transform,
+    zero_fill, layout).  Three analytics sharing ``attr`` but differing
+    in weights transform or semiring zero must each stage their OWN batch
+    (aliasing would silently feed one analytic another's tiles), while a
+    warm repeat re-uses all three with zero staging passes and zero
+    device uploads (extends the PR-5 upload-once counting to the
+    session-lifetime cache)."""
+    from repro.gopher.registry import _REGISTRY
+
+    _, _, bg, w, _, _ = tiny
+
+    def _probe(name, weights=None, zero=INF):
+        @register_analytic(name, pattern="sequential", attr="latency",
+                           zero_fill=zero, params={"source": REQUIRED},
+                           weights=weights)
+        def _prog(ctx, *, source):
+            from repro.core.engine import min_plus_program
+            return min_plus_program(name, init=source_init(source))
+
+    names = ("_key_raw", "_key_halved", "_key_zero0")
+    try:
+        _probe("_key_raw")
+        _probe("_key_halved", weights=_halved_latency)
+        _probe("_key_zero0", zero=0.0)
+        sess = GopherSession.from_blocked(
+            bg, weights={"latency": w}, staging_cache_bytes=1 << 30)
+        plans = [sess.plan(n, source=0, layout="dense") for n in names]
+        rs = sess.run_many(plans)
+        # three DISTINCT staged batches despite the shared attribute
+        assert sess.last_run_report["staging_passes"] == 3
+        assert sess.staging_cache_stats()["entries"] == 3
+        # ...holding genuinely different values: halved weights exactly
+        # halve finite min-plus distances (x0.5 is exact in fp32), and a
+        # 0-valued semiring zero collapses them
+        raw, halved, z0 = (r.engine.values for r in rs)
+        finite = np.isfinite(raw)
+        assert np.array_equal(halved[finite], raw[finite] * np.float32(0.5))
+        assert not np.array_equal(z0, raw)
+
+        # warm repeat: all three served from the session cache — no
+        # staging pass, no device upload, bitwise-identical results
+        calls = _count_device_puts(monkeypatch)
+        rs2 = sess.run_many(plans)
+        assert len(calls) == 0, "warm repeat re-uploaded staged tiles"
+        assert sess.last_run_report["staging_passes"] == 0
+        assert sess.last_run_report["cache_hits"] == 3
+        for a, b in zip(rs, rs2):
+            assert np.array_equal(a.engine.values, b.engine.values)
+    finally:
+        for n in names:
+            _REGISTRY.pop(n, None)

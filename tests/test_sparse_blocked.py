@@ -356,6 +356,8 @@ def test_bench_check_gate(tmp_path):
                    "occupancy": 0.125},
         "plan_overhead": {"frac": 0.001},
         "shared_staging": {"staged_bytes_ratio": 2.0},
+        "serving": {"throughput_ratio": 6.0, "restaged_bytes_repeat": 0,
+                    "restaging_passes_repeat": 0},
     }
     p = str(tmp_path / "base.json")
     with open(p, "w") as f:
