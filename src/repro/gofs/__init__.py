@@ -7,11 +7,11 @@ LRU slice caching (§V-E).  ``GoFSStore`` implements the iBSP engine's
 ``InstanceProvider`` protocol — Gopher-on-GoFS, as co-designed in the paper.
 """
 from repro.gofs.cache import SliceCache
-from repro.gofs.layout import deploy_collection
+from repro.gofs.layout import append_instances, deploy_collection
 from repro.gofs.prefetch import SlicePrefetcher, StagedChunk
 from repro.gofs.store import GoFSStore
 
 __all__ = [
-    "SliceCache", "SlicePrefetcher", "StagedChunk", "deploy_collection",
-    "GoFSStore",
+    "SliceCache", "SlicePrefetcher", "StagedChunk", "append_instances",
+    "deploy_collection", "GoFSStore",
 ]

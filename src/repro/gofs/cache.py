@@ -105,6 +105,27 @@ class SliceCache:
             self._bytes -= self._sizes.pop(k, 0)
             self.evictions += 1
 
+    def invalidate(self, predicate: Callable[[str], bool]) -> int:
+        """Drop every entry — LRU *and* pinned — whose key satisfies
+        ``predicate``.  Returns the number of entries dropped.
+
+        This is the append-observation hook: when a collection grows in
+        place, the rewritten tail pack slices and the extended tile-map /
+        delta-pool metadata must leave the cache (a stale pinned payload
+        pool would silently serve pre-append values forever), while every
+        untouched slice stays resident.  Unlike ``clear`` this is
+        targeted: survivors keep their LRU position and pin status."""
+        dropped = 0
+        with self._lock:
+            for k in [k for k in self._data if predicate(k)]:
+                del self._data[k]
+                self._bytes -= self._sizes.pop(k, 0)
+                dropped += 1
+            for k in [k for k in self._pinned if predicate(k)]:
+                del self._pinned[k]
+                dropped += 1
+        return dropped
+
     def clear(self) -> None:
         with self._lock:
             self._data.clear()

@@ -60,7 +60,12 @@ from repro.core.partition import (
     partition_graph,
 )
 from repro.core.subgraph import SubgraphTopology, build_subgraphs
-from repro.gofs.slices import write_array_slice, write_json_slice
+from repro.gofs.slices import (
+    read_array_slice,
+    read_json_slice,
+    write_array_slice,
+    write_json_slice,
+)
 
 
 def attr_slice_name(kind: str, attr: str, b: int, pack: int) -> str:
@@ -205,6 +210,7 @@ def deploy_collection(
     *,
     assign: Optional[np.ndarray] = None,
     sparse_absent: Optional[Dict[str, float]] = None,
+    append: bool = False,
 ) -> Dict:
     """Partition, bin-pack, time-pack, and write the collection to disk.
 
@@ -212,8 +218,16 @@ def deploy_collection(
     per-pack nonzero-tile map slice is recorded at the root (see module
     docstring), enabling the store's block-sparse staging path.
 
+    ``append=True``: ``root`` must already hold a deployed collection and
+    ``tsg`` holds ONLY the new instances — delegates to
+    :func:`append_instances` (partitioning, binning, and sparse/delta
+    recording are inherited from the existing deployment; ``cfg``,
+    ``assign`` and ``sparse_absent`` are ignored).
+
     Returns the global metadata dict (also written to collection.json).
     """
+    if append:
+        return append_instances(tsg, root)
     tmpl = tsg.template
     if assign is None:
         assign = partition_graph(tmpl, cfg.num_partitions, seed=cfg.seed)
@@ -246,6 +260,9 @@ def deploy_collection(
              "constant": a.constant} for a in tmpl.edge_attrs
         ],
         "partitions": {},
+        # manifest version: bumped by every append_instances commit, so a
+        # live reader can detect growth with one metadata read
+        "version": 0,
     }
 
     for p in range(cfg.num_partitions):
@@ -332,3 +349,310 @@ def deploy_collection(
         }
     write_json_slice(os.path.join(root, "collection.json"), global_meta)
     return global_meta
+
+
+# --------------------------------------------------------------------------
+# streaming ingestion: append-only growth of a deployed collection
+# --------------------------------------------------------------------------
+
+def _pool_from_payloads(pays: np.ndarray) -> Tuple[Dict[bytes, int], List[np.ndarray]]:
+    """Rehydrate the content-hash dedup pool from a recorded payload stack
+    so appended tiles intern against the SAME payload ids — fingerprint
+    continuity: an unchanged tile in an appended instance resolves to the
+    payload the original deploy wrote."""
+    pool: Dict[bytes, int] = {}
+    payloads: List[np.ndarray] = []
+    for i in range(len(pays)):
+        tile = np.ascontiguousarray(pays[i])
+        pool.setdefault(tile.tobytes(), i)
+        payloads.append(tile)
+    return pool, payloads
+
+
+def _append_attr_slices(
+    store, tsg_new: TimeSeriesGraph, root: str,
+    old_n: int, new_n: int, ipack: int, n_packs: int,
+) -> None:
+    """Write the appended instances' attribute values: the tail pack (when
+    ``old_n`` is not pack-aligned) is rewritten with its preserved old rows
+    plus the new ones (atomically — old readers keep indexing the same
+    rows), and each fully-new pack gets a fresh slice per (partition, bin,
+    attribute)."""
+    meta = store.meta
+    k_first = old_n // ipack
+    for p in range(int(meta["num_partitions"])):
+        pdir = os.path.join(root, f"part_{p}")
+        for b in range(len(store._part_meta[p]["bins"])):
+            v_cat = store._bin_concat_ids(p, b, "vertices")
+            le_cat = store._bin_concat_ids(p, b, "local_edge_id")
+            re_cat = store._bin_concat_ids(p, b, "remote_edge_id")
+            for a in meta["vertex_attrs"]:
+                if a["constant"] is not None:
+                    continue  # stored once in template metadata (§V-B)
+                name = a["name"]
+                for k in range(k_first, n_packs):
+                    t0, t1 = k * ipack, min((k + 1) * ipack, new_n)
+                    s = max(t0, old_n)
+                    vals = np.stack([
+                        np.asarray(tsg_new.vertex_values(t - old_n, name))[v_cat]
+                        for t in range(s, t1)
+                    ])
+                    path = os.path.join(pdir, attr_slice_name("v", name, b, k))
+                    if s > t0:
+                        old = read_array_slice(path)["vals"][: s - t0]
+                        vals = np.concatenate(
+                            [old, vals.astype(old.dtype, copy=False)]
+                        )
+                    write_array_slice(path, {"vals": vals})
+            for a in meta["edge_attrs"]:
+                if a["constant"] is not None:
+                    continue
+                name = a["name"]
+                for k in range(k_first, n_packs):
+                    t0, t1 = k * ipack, min((k + 1) * ipack, new_n)
+                    s = max(t0, old_n)
+                    lvals = np.stack([
+                        np.asarray(tsg_new.edge_values(t - old_n, name))[le_cat]
+                        for t in range(s, t1)
+                    ])
+                    rvals = np.stack([
+                        np.asarray(tsg_new.edge_values(t - old_n, name))[re_cat]
+                        for t in range(s, t1)
+                    ])
+                    path = os.path.join(pdir, attr_slice_name("e", name, b, k))
+                    if s > t0:
+                        sl = read_array_slice(path)
+                        ol, orr = sl["local"][: s - t0], sl["remote"][: s - t0]
+                        lvals = np.concatenate(
+                            [ol, lvals.astype(ol.dtype, copy=False)]
+                        )
+                        rvals = np.concatenate(
+                            [orr, rvals.astype(orr.dtype, copy=False)]
+                        )
+                    write_array_slice(path, {"local": lvals, "remote": rvals})
+
+
+def _append_tile_maps(
+    store, tsg_new: TimeSeriesGraph, root: str,
+    old_n: int, new_n: int, ipack: int, n_packs: int,
+) -> None:
+    """Extend each recorded tile map + delta chain with the appended
+    instances.
+
+    Fast path (fingerprint continuity): when the existing slices validate
+    against the deployment's blocked structure and instance count, only
+    the new instances are tiled — existing payload ids, per-pack maps, and
+    old instances' refs are preserved bitwise, and new tiles intern into
+    the rehydrated pool.  When either slice is missing/stale/corrupt the
+    chain is rebuilt from scratch over the full (read-back + appended)
+    history, restoring the validate-or-fallback invariant rather than
+    propagating a broken chain."""
+    from repro.core.blocked import build_blocked
+
+    meta = store.meta
+    sparse_absent = meta.get("sparse_absent") or {}
+    if not sparse_absent:
+        return
+    tmpl = tsg_new.template
+    # partition assignment reconstructed from the deployed subgraph homes
+    assign = np.zeros(int(meta["num_vertices"]), np.int64)
+    for topo in store.iter_subgraphs():
+        assign[np.asarray(topo.vertices, np.int64)] = topo.pid
+    n_old_packs = -(-old_n // ipack) if old_n else 0
+
+    for name, absent in sparse_absent.items():
+        tm_path = os.path.join(root, tile_map_name(name))
+        dl_path = os.path.join(root, delta_slice_name(name))
+        tm = dl = None
+        try:
+            tm = read_array_slice(tm_path)
+            dl = read_array_slice(dl_path)
+        except (OSError, ValueError, KeyError, EOFError):
+            pass
+        bsz = None
+        for src in (tm, dl):
+            if src is not None and "block_size" in src:
+                bsz = int(src["block_size"])
+                break
+        if bsz is None:
+            raise ValueError(
+                f"append_instances: tile maps for {name!r} are unreadable "
+                "and record no block size — cannot extend the chain"
+            )
+        bg = build_blocked(tmpl, assign, bsz)
+        B = int(bg.block_size)
+
+        def _matches(src) -> bool:
+            return (
+                src is not None
+                and int(src["block_size"]) == bg.block_size
+                and float(src["absent"]) == float(absent)
+                and src["tiles_rc"].shape == bg.tiles_rc.shape
+                and np.array_equal(src["tiles_rc"], bg.tiles_rc)
+                and src["btiles_rc"].shape == bg.btiles_rc.shape
+                and np.array_equal(src["btiles_rc"], bg.btiles_rc)
+            )
+
+        incremental = (
+            _matches(tm) and _matches(dl)
+            and int(dl["n_instances"]) == old_n
+            and dl["ref_local"].shape == (old_n, bg.n_parts, bg.t_max)
+            and dl["ref_boundary"].shape == (old_n, bg.n_parts, bg.tb_max)
+            and int(tm["n_packs"]) == n_old_packs
+            and all(f"local_{k}" in tm and f"boundary_{k}" in tm
+                    for k in range(n_old_packs))
+        )
+
+        def new_row(t: int) -> np.ndarray:
+            return np.asarray(tsg_new.edge_values(t - old_n, name), np.float32)
+
+        if incremental:
+            pool_l, pay_l = _pool_from_payloads(dl["payloads_local"])
+            pool_b, pay_b = _pool_from_payloads(dl["payloads_boundary"])
+            ref_l = np.concatenate([
+                np.asarray(dl["ref_local"], np.int32),
+                np.full((new_n - old_n, bg.n_parts, bg.t_max), -1, np.int32),
+            ])
+            ref_b = np.concatenate([
+                np.asarray(dl["ref_boundary"], np.int32),
+                np.full((new_n - old_n, bg.n_parts, bg.tb_max), -1, np.int32),
+            ])
+            arrs = {k: tm[k] for k in tm}
+            monotone = bool(int(tm["delta_monotone"]))
+            start_t = old_n
+            prev_w = (store.edge_attr_rows(name, [old_n - 1])[0]
+                      if old_n else None)
+            row = new_row
+        else:
+            # full rebuild: read the old history back through the store
+            w_old = (store.edge_attr_rows(name, range(old_n))
+                     if old_n else np.zeros((0, int(meta["num_edges"])),
+                                            np.float32))
+            pool_l, pay_l = {}, []
+            pool_b, pay_b = {}, []
+            ref_l = np.full((new_n, bg.n_parts, bg.t_max), -1, np.int32)
+            ref_b = np.full((new_n, bg.n_parts, bg.tb_max), -1, np.int32)
+            arrs = {
+                "tiles_rc": bg.tiles_rc,
+                "btiles_rc": bg.btiles_rc,
+                "block_size": np.asarray(bg.block_size, np.int64),
+                "absent": np.asarray(absent, np.float64),
+            }
+            monotone = True
+            start_t = 0
+            prev_w = None
+            row = lambda t: w_old[t] if t < old_n else new_row(t)  # noqa: E731
+
+        for k in range(start_t // ipack, n_packs):
+            t0, t1 = k * ipack, min((k + 1) * ipack, new_n)
+            s = max(t0, start_t)
+            w = np.stack([row(t) for t in range(s, t1)])
+            act_l, act_b = bg.active_tile_maps(w, zero=float(absent))
+            dlv = bg.fill_local_batch(w, zero=float(absent))
+            dbv = bg.fill_boundary_batch(w, zero=float(absent))
+            _intern_tiles(dlv, act_l, pool_l, pay_l, ref_l[s:t1])
+            _intern_tiles(dbv, act_b, pool_b, pay_b, ref_b[s:t1])
+            if s > t0:  # partial tail pack: keep the recorded old rows
+                arrs[f"local_{k}"] = np.concatenate(
+                    [arrs[f"local_{k}"][: s - t0], act_l.astype(np.uint8)]
+                )
+                arrs[f"boundary_{k}"] = np.concatenate(
+                    [arrs[f"boundary_{k}"][: s - t0], act_b.astype(np.uint8)]
+                )
+            else:
+                arrs[f"local_{k}"] = act_l.astype(np.uint8)
+                arrs[f"boundary_{k}"] = act_b.astype(np.uint8)
+            for j in range(t1 - s):
+                wj = np.asarray(w[j], np.float32)
+                if prev_w is not None:
+                    monotone = monotone and bool(np.all(wj <= prev_w))
+                prev_w = wj
+
+        arrs["n_packs"] = np.asarray(n_packs, np.int64)
+        n_valid = int(bg.n_tiles.sum()) + int(bg.n_btiles.sum())
+        n_active = sum(
+            int(arrs[f"local_{k}"].sum()) + int(arrs[f"boundary_{k}"].sum())
+            for k in range(n_packs)
+        )
+        arrs["occupancy"] = np.asarray(
+            n_active / max(1, new_n * n_valid), np.float64
+        )
+        arrs["delta_unique_ratio"] = np.asarray(
+            (len(pay_l) + len(pay_b)) / max(1, n_active), np.float64
+        )
+        arrs["delta_monotone"] = np.asarray(int(monotone), np.int64)
+        # delta first, tile map second, manifest (caller) last: each write
+        # is individually atomic and every intermediate combination an old
+        # reader can observe validates (refs/maps only grow, prefix rows
+        # are preserved bitwise)
+        write_array_slice(dl_path, {
+            "tiles_rc": bg.tiles_rc,
+            "btiles_rc": bg.btiles_rc,
+            "block_size": np.asarray(bg.block_size, np.int64),
+            "absent": np.asarray(absent, np.float64),
+            "n_instances": np.asarray(new_n, np.int64),
+            "payloads_local": (
+                np.stack(pay_l) if pay_l else np.zeros((0, B, B), np.float32)
+            ),
+            "payloads_boundary": (
+                np.stack(pay_b) if pay_b else np.zeros((0, B, B), np.float32)
+            ),
+            "ref_local": ref_l,
+            "ref_boundary": ref_b,
+        })
+        write_array_slice(tm_path, arrs)
+
+
+def append_instances(tsg_new: TimeSeriesGraph, root: str) -> Dict:
+    """Grow the collection deployed at ``root`` by ``tsg_new``'s instances
+    — streaming ingestion, no re-deploy.
+
+    ``tsg_new`` holds ONLY the new instances and must share the deployed
+    template (same vertex/edge count and attribute schema).  Partitioning,
+    bin packing, the temporal pack size, and sparse/delta recording are
+    all inherited from the existing deployment.
+
+    Atomicity contract (docs/ARCHITECTURE.md "Streaming ingestion"): data
+    slices are written first, each with an atomic replace; the
+    ``collection.json`` manifest — carrying the bumped ``version`` and the
+    extended instance count/timestamps — is replaced LAST.  A concurrent
+    reader therefore always observes a complete collection: the old
+    version until the manifest lands, the new one after.  Old-version
+    readers stay valid across the commit because appended writes only add
+    rows/packs — every previously-readable row is preserved bitwise.
+
+    Returns the new global metadata dict."""
+    from repro.gofs.store import GoFSStore
+
+    meta_path = os.path.join(root, "collection.json")
+    n_new = len(tsg_new)
+    if n_new == 0:
+        return read_json_slice(meta_path)
+    store = GoFSStore(root, cache_slots=0)
+    meta = dict(store.meta)
+    tmpl = tsg_new.template
+    if (int(tmpl.num_vertices) != int(meta["num_vertices"])
+            or int(tmpl.num_edges) != int(meta["num_edges"])):
+        raise ValueError(
+            "append_instances: template does not match the deployed "
+            f"collection ({tmpl.num_vertices}v/{tmpl.num_edges}e vs "
+            f"{meta['num_vertices']}v/{meta['num_edges']}e)"
+        )
+    old_n = int(meta["num_instances"])
+    ipack = int(meta["instances_per_slice"])
+    new_n = old_n + n_new
+    n_packs = -(-new_n // ipack)
+
+    _append_attr_slices(store, tsg_new, root, old_n, new_n, ipack, n_packs)
+    _append_tile_maps(store, tsg_new, root, old_n, new_n, ipack, n_packs)
+
+    meta["num_instances"] = new_n
+    meta["timestamps"] = list(meta["timestamps"]) + [
+        float(g.timestamp) for g in tsg_new.instances
+    ]
+    meta["durations"] = list(meta["durations"]) + [
+        float(g.duration) for g in tsg_new.instances
+    ]
+    meta["version"] = int(meta.get("version", 0)) + 1
+    write_json_slice(meta_path, meta)
+    return meta

@@ -53,7 +53,7 @@ from __future__ import annotations
 
 import threading
 from collections import deque
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import CancelledError, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Iterator, List, Optional, Tuple
 
@@ -115,6 +115,14 @@ class SlicePrefetcher:
     Iterating yields :class:`StagedChunk` in instance order.  The iterator
     is re-entrant: each ``iter()`` starts a fresh pass; only one pass may
     be active at a time.
+
+    A pass is VERSION-CONSISTENT: the instance span set is pinned at
+    construction, so a collection appended to mid-stream neither extends
+    nor tears the pass — the stream covers exactly the instances visible
+    when it was built.  A reader that wants the appended tail closes the
+    stream (``close()`` is safe against an active consumer: the pass ends
+    cleanly, never with a leaked ``CancelledError``) and opens a fresh one
+    after ``GoFSStore.refresh()``.
     """
 
     def __init__(
@@ -282,7 +290,13 @@ class SlicePrefetcher:
                     fut = pending.popleft()
                 except IndexError:  # drained, or cleared by close()
                     return
-                chunk = fut.result()
+                try:
+                    chunk = fut.result()
+                except CancelledError:
+                    # a concurrent close() — e.g. a session observing an
+                    # append mid-stream — cancelled this chunk between our
+                    # popleft and its snapshot; end the pass cleanly
+                    return
                 # Submit BEFORE the yield: the next chunk's read + fill
                 # must already be running while the consumer executes this
                 # one (on CPU the jit call itself is where execution time

@@ -40,18 +40,38 @@ class ReadStats:
 
 
 def write_array_slice(path: str, arrays: Dict[str, np.ndarray]) -> int:
-    """Write a multi-array slice (npz, uncompressed).  Returns bytes."""
+    """Write a multi-array slice (npz, uncompressed).  Returns bytes.
+
+    The write is atomic (temp file + ``os.replace``): a concurrent reader
+    sees either the previous slice or the new one, never a torn file.
+    Append-time pack rewrites (``append_instances``) rely on this.
+    """
     os.makedirs(os.path.dirname(path), exist_ok=True)
-    np.savez(path, **arrays)
-    return os.path.getsize(path if path.endswith(".npz") else path + ".npz")
+    final = path if path.endswith(".npz") else path + ".npz"
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, final)
+    return os.path.getsize(final)
 
 
 def read_array_slice(path: str, stats: Optional[ReadStats] = None) -> Dict[str, np.ndarray]:
-    """Read a full slice from disk (bulk read — the GoFS access grain)."""
+    """Read a full slice from disk (bulk read — the GoFS access grain).
+
+    A corrupt file (truncated zip, bad compression stream — e.g. a pack
+    damaged after an append) raises ``ValueError`` rather than leaking
+    format-library exceptions, so every fallback site that already
+    handles unreadable slices handles damaged ones too."""
+    import zipfile
+    import zlib
+
     p = path if path.endswith(".npz") else path + ".npz"
     t0 = time.perf_counter()
-    with np.load(p) as z:
-        out = {k: z[k] for k in z.files}
+    try:
+        with np.load(p) as z:
+            out = {k: z[k] for k in z.files}
+    except (zipfile.BadZipFile, zlib.error) as e:
+        raise ValueError(f"corrupt slice {p}: {e}") from e
     dt = time.perf_counter() - t0
     if stats is not None:
         stats.slices_read += 1
@@ -61,6 +81,11 @@ def read_array_slice(path: str, stats: Optional[ReadStats] = None) -> Dict[str, 
 
 
 def write_json_slice(path: str, obj: Any) -> None:
+    """Atomic JSON metadata write (temp file + ``os.replace``).
+
+    ``collection.json`` is the collection's version manifest: an append
+    commits by replacing it *after* all data slices are durable, so a
+    reader always observes a complete collection at some version."""
     os.makedirs(os.path.dirname(path), exist_ok=True)
 
     def default(o):
@@ -72,8 +97,10 @@ def write_json_slice(path: str, obj: Any) -> None:
             return o.tolist()
         raise TypeError(type(o))
 
-    with open(path, "w") as f:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(obj, f, default=default)
+    os.replace(tmp, path)
 
 
 def read_json_slice(path: str, stats: Optional[ReadStats] = None) -> Any:

@@ -35,8 +35,10 @@ class GoFSStore(InstanceProvider):
         self.root = root
         self.stats = ReadStats()
         self.cache = SliceCache(cache_slots)
+        self._time_range = time_range
         self.meta = read_json_slice(os.path.join(root, "collection.json"),
                                     self.stats)
+        self.version = int(self.meta.get("version", 0))
         self.ipack = int(self.meta["instances_per_slice"])
         self._v_attrs = {a["name"]: AttributeDef(**a)
                          for a in self.meta["vertex_attrs"]}
@@ -49,16 +51,7 @@ class GoFSStore(InstanceProvider):
         self.edge_projection = tuple(
             edge_projection if edge_projection is not None else self._e_attrs
         )
-        # temporal filter (§V-B): restrict visible instances to a time range
-        ts = np.asarray(self.meta["timestamps"], np.float64)
-        dur = np.asarray(self.meta["durations"], np.float64)
-        if time_range is not None:
-            lo, hi = time_range
-            sel = np.nonzero((ts < hi) & (ts + dur > lo))[0]
-        else:
-            sel = np.arange(len(ts))
-        self._t_map: List[int] = [int(i) for i in sel]
-        self.timestamps = ts
+        self._bind_timeline()
 
         # partition metadata + bin-major subgraph order (§V-D)
         self._part_meta: Dict[int, Any] = {}
@@ -76,6 +69,73 @@ class GoFSStore(InstanceProvider):
                     self._order.append(g)
         self._topo_cache: Dict[int, SubgraphTopology] = {}
         self._bin_offsets: Dict[Tuple[int, int], Dict[str, Dict[int, Tuple[int, int]]]] = {}
+
+    def _bind_timeline(self) -> None:
+        """(Re)derive the visible-instance map from the current manifest —
+        the temporal filter (§V-B) applied to the collection's timeline."""
+        ts = np.asarray(self.meta["timestamps"], np.float64)
+        dur = np.asarray(self.meta["durations"], np.float64)
+        if self._time_range is not None:
+            lo, hi = self._time_range
+            sel = np.nonzero((ts < hi) & (ts + dur > lo))[0]
+        else:
+            sel = np.arange(len(ts))
+        self._t_map: List[int] = [int(i) for i in sel]
+        self.timestamps = ts
+
+    # ---------------- streaming ingestion ----------------------------------
+    def refresh(self) -> bool:
+        """Observe an in-place append: re-read the collection manifest and,
+        on a version change, rebind the timeline and invalidate exactly the
+        cache entries the append may have rewritten — the partial tail
+        pack's value slices plus every tile-map / delta-pool metadata slice
+        (their pinned payload pools would otherwise serve pre-append
+        values forever).  Untouched slices stay resident; template and
+        partition metadata never change across an append.
+
+        Returns True iff the collection changed.  An unreadable manifest
+        (e.g. mid-replace on a non-atomic filesystem) leaves the store at
+        its current version."""
+        try:
+            meta = read_json_slice(
+                os.path.join(self.root, "collection.json"), self.stats
+            )
+        except (OSError, ValueError):
+            return False
+        version = int(meta.get("version", 0))
+        n_inst = int(meta["num_instances"])
+        if (version == self.version
+                and n_inst == int(self.meta["num_instances"])):
+            return False
+        old_n = int(self.meta["num_instances"])
+        k_dirty = old_n // self.ipack  # tail pack rewritten by the append
+        self.meta = meta
+        self.version = version
+        self._bind_timeline()
+
+        def stale(key: str) -> bool:
+            if key.startswith("tilemap/") or key.startswith("delta/"):
+                return True
+            name = key.partition("/")[2]
+            if not name.startswith("attr_"):
+                return False
+            try:
+                return int(name.rsplit("_t", 1)[1]) >= k_dirty
+            except (IndexError, ValueError):
+                return True  # unparseable attr key: drop, never serve stale
+
+        self.cache.invalidate(stale)
+        return True
+
+    def append_instances(self, tsg_new) -> Dict:
+        """Append new instances to this store's collection in place (see
+        :func:`repro.gofs.layout.append_instances`) and refresh this
+        reader to the committed version."""
+        from repro.gofs.layout import append_instances as _append
+
+        meta = _append(tsg_new, self.root)
+        self.refresh()
+        return meta
 
     # ---------------- InstanceProvider ------------------------------------
     def subgraph_ids(self) -> Sequence[int]:
@@ -252,10 +312,14 @@ class GoFSStore(InstanceProvider):
         path = os.path.join(self.root, tile_map_name(name))
         if not os.path.exists(path + ".npz"):
             return None
-        return self.cache.get(
-            f"tilemap/{name}", lambda: read_array_slice(path, self.stats),
-            pin=True,  # metadata-grade: survives the c0 (slots=0) config
-        )
+        try:
+            return self.cache.get(
+                f"tilemap/{name}",
+                lambda: read_array_slice(path, self.stats),
+                pin=True,  # metadata-grade: survives the c0 (slots=0) config
+            )
+        except (OSError, ValueError, KeyError, EOFError):
+            return None  # truncated/corrupt map: activity unknown, not fatal
 
     def _recorded_activity(
         self, bg, name: str, zero: float,

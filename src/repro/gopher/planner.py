@@ -188,6 +188,34 @@ class ExecutionPlan:
         return "\n".join(lines)
 
 
+def extend_plan(plan: ExecutionPlan, num_instances: int) -> ExecutionPlan:
+    """Extend a plan to a grown collection without replanning.
+
+    Appends only lengthen the instance axis — the blocked structure,
+    cut, and layout/comm/placement decisions are append-invariant, so a
+    held plan stays valid; only the instance-count-proportional byte
+    estimates change.  Returns a plan ``==``-identical except for those
+    estimates (knob provenance intact).  NOT a substitute for replanning
+    when a data-dependent choice could flip (an append can break the
+    recorded monotone-improving property and with it the auto ``warm``
+    choice — the session's tail path replans for exactly that reason);
+    use it where the knobs are pinned and only the scale moved."""
+    import dataclasses
+
+    est = dict(plan.estimate_dict)
+    old_n = int(est.get("num_instances") or 0)
+    if old_n == int(num_instances) or old_n <= 0:
+        return plan
+    for k in ("staged_bytes_dense", "staged_bytes_sparse",
+              "source_bytes_delta"):
+        v = est.get(k)
+        if v is not None:
+            est[k] = (int(v) // old_n) * int(num_instances)
+    est["num_instances"] = int(num_instances)
+    return dataclasses.replace(plan,
+                               estimates=tuple(sorted(est.items())))
+
+
 def plan_analytic(
     analytic,
     resolved_params: Dict[str, Any],

@@ -28,6 +28,14 @@ under concurrent load.  Three mechanisms make it cheap:
   one — under load the batch width grows toward ``max_batch_queries``
   with no idle waiting.
 
+Streaming: the service is append-aware.  The serve loop refreshes the
+session at BATCH BOUNDARIES only (``GopherSession.refresh`` — the
+manifest poll), so every executed batch sees one consistent collection
+version — a query racing an append observes pre- or post-append state,
+never a mix.  :meth:`GopherService.subscribe` registers a standing
+tailing query: each observed append delivers one warm incremental
+:class:`~repro.gopher.session.TailUpdate` (``GopherSession.tail``).
+
 Request lifecycle::
 
       submit("sssp", source=v) ──> queue ──┐  (continuous admission)
@@ -78,7 +86,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.gopher.registry import get_analytic
-from repro.gopher.session import AnalyticResult, GopherSession, _StagingCache
+from repro.gopher.session import (AnalyticResult, GopherSession, TailUpdate,
+                                  _StagingCache)
 
 # default session-lifetime staging budget for a serving process: enough
 # for every stock analytic's staged batch over the bench-scale
@@ -126,6 +135,53 @@ class QueryTicket:
         return None if self.t_done is None else self.t_done - self.t_submit
 
 
+@dataclass
+class Subscription:
+    """One tailing subscription: a standing ``session.tail`` driven by the
+    serve loop.
+
+    The serve loop delivers one :class:`~repro.gopher.session.TailUpdate`
+    when the subscription is registered (the initial full run) and one
+    per observed append (a warm incremental step).  ``callback`` (if
+    given) runs ON THE SERVE THREAD — keep it cheap; a raised exception
+    is captured into ``error`` and stops further deliveries.  Waiters
+    can also poll: ``wait_update(n)`` blocks until ``delivered >= n``."""
+
+    analytic: str
+    params: Dict[str, Any]
+    plan_kw: Dict[str, Any] = field(default_factory=dict)
+    callback: Optional[Any] = None
+    delivered: int = 0
+    last: Optional[TailUpdate] = None
+    error: Optional[BaseException] = None
+    _cv: threading.Condition = field(default_factory=threading.Condition)
+    _cancelled: bool = False
+    _pending_initial: bool = True
+
+    def cancel(self) -> None:
+        """Stop future deliveries (the held ``last`` update stays)."""
+        with self._cv:
+            self._cancelled = True
+            self._cv.notify_all()
+
+    def wait_update(self, count: int = 1,
+                    timeout: Optional[float] = None) -> TailUpdate:
+        """Block until at least ``count`` updates were delivered; returns
+        the latest (re-raising a captured callback/execution error)."""
+        with self._cv:
+            ok = self._cv.wait_for(
+                lambda: self.delivered >= count or self.error is not None,
+                timeout)
+            if self.error is not None:
+                raise self.error
+            if not ok:
+                raise TimeoutError(
+                    f"subscription {self.analytic!r}: update {count} not "
+                    f"delivered within {timeout}s")
+            assert self.last is not None
+            return self.last
+
+
 class GopherService:
     """Warm analytic query service over one collection (module docstring).
 
@@ -144,6 +200,8 @@ class GopherService:
         session: Optional[GopherSession] = None,
         staging_cache_bytes: float = DEFAULT_CACHE_BYTES,
         max_batch_queries: int = 32,
+        poll_interval: float = 0.05,
+        auto_refresh: bool = True,
         **session_kw,
     ):
         if session is None:
@@ -161,10 +219,19 @@ class GopherService:
                     byte_budget=staging_cache_bytes)
         self.session = session
         self.max_batch_queries = int(max_batch_queries)
+        # streaming: the serve loop polls the collection manifest when
+        # idle (subscriptions registered) and refreshes the session at
+        # BATCH BOUNDARIES only — the loop owns the session, so every
+        # executed batch sees one consistent collection version (queries
+        # racing an append observe pre- or post-append state, never a mix)
+        self.poll_interval = float(poll_interval)
+        self.auto_refresh = bool(auto_refresh)
         self._queue: "deque[QueryTicket]" = deque()
         self._cond = threading.Condition()
         self._stopping = False
         self._thread: Optional[threading.Thread] = None
+        self._subs: List[Subscription] = []
+        self._appends_observed = 0
         self._latencies: "deque[float]" = deque(maxlen=4096)
         self._served = 0
         self._batches = 0
@@ -269,27 +336,109 @@ class GopherService:
         self.session._staged(cache, a, plan.layout.value,
                              delta=bool(plan.delta.value))
 
+    def subscribe(self, analytic: str, *, callback=None,
+                  plan_kw: Optional[Dict[str, Any]] = None,
+                  **params) -> Subscription:
+        """Register a tailing subscription (live query over a growing
+        collection).
+
+        The serve loop delivers an initial full result, then one warm
+        incremental :class:`~repro.gopher.session.TailUpdate` per
+        observed append (``GopherSession.tail`` semantics — exact; see
+        its docstring for the seeding rules).  ``callback(update)`` runs
+        on the serve thread; omit it and poll
+        :meth:`Subscription.wait_update` instead."""
+        a = get_analytic(analytic)  # raises on unknown name
+        a.resolve_params(params)
+        plan_kw = dict(plan_kw or {})
+        unknown = sorted(set(plan_kw) - set(_PLAN_KNOBS))
+        if unknown:
+            raise TypeError(f"unknown plan knob(s) {unknown}; "
+                            f"valid: {list(_PLAN_KNOBS)}")
+        sub = Subscription(analytic=analytic, params=dict(params),
+                           plan_kw=plan_kw, callback=callback)
+        if self._thread is None or not self._thread.is_alive():
+            self.start()
+        with self._cond:
+            assert not self._stopping, "service is stopping"
+            self._subs.append(sub)
+            self._cond.notify_all()
+        return sub
+
     # -------------------------------------------------------------- serving
     def _serve_loop(self) -> None:
         while True:
             batch = self._admit()
             if batch is None:
                 return
-            self._execute(batch)
+            self._refresh_and_notify()
+            if batch:
+                self._execute(batch)
 
     def _admit(self) -> Optional[List[QueryTicket]]:
-        """Block until work or shutdown; drain up to ``max_batch_queries``
-        tickets.  Everything queued while the previous batch executed is
-        admitted together — continuous batching without a timed window."""
+        """Block until work, a poll tick, or shutdown; drain up to
+        ``max_batch_queries`` tickets.  Everything queued while the
+        previous batch executed is admitted together — continuous
+        batching without a timed window.  With subscriptions registered
+        the wait times out every ``poll_interval`` seconds so an idle
+        service still observes appends; a tick returns an empty batch
+        (refresh + notify only).  ``None`` means stopping and drained."""
         with self._cond:
             while not self._queue and not self._stopping:
-                self._cond.wait()
-            if not self._queue:
-                return None  # stopping and drained
+                if any(s._pending_initial and not s._cancelled
+                       for s in self._subs):
+                    break  # run the initial tail without waiting
+                timeout = self.poll_interval if self._subs else None
+                if not self._cond.wait(timeout=timeout):
+                    break  # poll tick
+            if self._stopping and not self._queue:
+                return None
             batch = []
             while self._queue and len(batch) < self.max_batch_queries:
                 batch.append(self._queue.popleft())
             return batch
+
+    def _refresh_and_notify(self) -> None:
+        """Batch-boundary streaming hook (serve thread only): observe an
+        append, then drive every live subscription one tail step.  Runs
+        between batches — never inside one — so each batch executes
+        against a single collection version."""
+        if not self.auto_refresh:
+            return
+        changed = self.session.refresh()
+        if changed:
+            self._appends_observed += 1
+        with self._cond:
+            subs = [s for s in self._subs if not s._cancelled]
+            self._subs = subs
+        for sub in subs:
+            if sub.error is not None:
+                continue
+            if not (changed or sub._pending_initial):
+                continue
+            try:
+                update = self.session.tail(
+                    sub.analytic, refresh=False,
+                    **sub.plan_kw, **sub.params)
+            except BaseException as e:
+                with sub._cv:
+                    sub.error = e
+                    sub._cv.notify_all()
+                continue
+            if update.mode == "noop" and not sub._pending_initial:
+                continue
+            sub._pending_initial = False
+            with sub._cv:
+                sub.delivered += 1
+                sub.last = update
+                sub._cv.notify_all()
+            if sub.callback is not None:
+                try:
+                    sub.callback(update)
+                except BaseException as e:
+                    with sub._cv:
+                        sub.error = e
+                        sub._cv.notify_all()
 
     def _group_key(self, t: QueryTicket, axis: str) -> Tuple:
         rest = tuple(sorted(
@@ -371,6 +520,8 @@ class GopherService:
             "throughput_qps": self._served / elapsed if elapsed > 0
             else 0.0,
             "staging_cache": self.session.staging_cache_stats(),
+            "subscriptions": len(self._subs),
+            "appends_observed": self._appends_observed,
         }
 
 

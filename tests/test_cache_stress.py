@@ -136,3 +136,66 @@ def test_value_nbytes_covers_containers():
     assert _value_nbytes(arr) == 64
     assert _value_nbytes({"a": arr, "b": [arr, arr]}) == 192
     assert _value_nbytes(("x", 3)) == 0  # metadata-grade: not budgeted
+
+
+def test_invalidate_drops_matching_lru_and_pinned_only():
+    """The append-observation hook: matching entries leave BOTH tiers
+    (a stale pinned delta pool must not survive), survivors stay
+    resident with correct byte accounting, and dropped keys reload."""
+    cache = SliceCache(slots=8, byte_budget=None)
+    for k in range(4):
+        cache.get(f"lru/{k}", lambda k=k: _value_for(k))
+    cache.get("pin/tilemap", lambda: _value_for(99), pin=True)
+    cache.get("pin/delta", lambda: _value_for(98), pin=True)
+
+    dropped = cache.invalidate(
+        lambda key: key.startswith("pin/") or key == "lru/3")
+    assert dropped == 3
+
+    loads = []
+    got = cache.get("lru/0", lambda: (loads.append(1), _value_for(0))[1])
+    assert got[0] == 0 and not loads  # survivor: served resident, no load
+    got = cache.get("pin/delta",
+                    lambda: (loads.append(1), _value_for(55))[1], pin=True)
+    assert got[0] == 55 and loads == [1]  # dropped: loader re-ran
+
+    stats = cache.stats()
+    assert stats["pinned"] == 1  # the reloaded delta pool only
+    # lru/0..2 survived; bytes track exactly (no drift from the drops)
+    assert stats["resident"] == 3
+    assert stats["resident_bytes"] == 3 * VALUE_BYTES
+
+
+def test_invalidate_races_getters_without_deadlock():
+    """Repeated targeted invalidation (an appender observing growth)
+    racing reader threads: no deadlock, every read sees its own key's
+    value, budget still binds afterwards."""
+    budget = 4 * VALUE_BYTES
+    cache = SliceCache(slots=16, byte_budget=budget)
+    stop = threading.Event()
+    errors = []
+
+    def worker(tid):
+        rng = np.random.default_rng(tid)
+        try:
+            while not stop.is_set():
+                k = int(rng.integers(0, KEYS))
+                pin = k % 5 == 0
+                tier = "pin" if pin else "lru"
+                got = cache.get(f"{tier}/{k}",
+                                lambda k=k: _value_for(k), pin=pin)
+                assert got[0] == k, "value for the wrong key"
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append((tid, e))
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for _ in range(300):  # the "append observed" hot loop
+        cache.invalidate(lambda key: key.endswith(("0", "5")))
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive(), "cache deadlocked under invalidation"
+    assert not errors, errors
+    assert cache.stats()["resident_bytes"] <= budget

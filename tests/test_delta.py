@@ -211,6 +211,137 @@ def test_delta_chain_rejects_foreign_blocking(env):
     assert out.source_bytes is None
 
 
+# ----------------------------------------------------- appended-data faults
+@pytest.fixture()
+def grown_env(tmp_path):
+    """A prefix deployment grown by one append (manifest version 1) —
+    the surface the corruption tests below damage."""
+    from repro.gofs import append_instances
+
+    col = _slowly_varying()
+    root = str(tmp_path / "gofs")
+    deploy_collection(
+        TimeSeriesGraph(template=col.template, instances=col.instances[:3]),
+        CFG, root, sparse_absent={"latency": INF})
+    append_instances(
+        TimeSeriesGraph(template=col.template, instances=col.instances[3:]),
+        root)
+    assign = partition_graph(col.template, CFG.num_partitions, seed=CFG.seed)
+    bg = build_blocked(col.template, assign, CFG.block_size)
+    return col, root, bg
+
+
+def _full_ref(col, bg):
+    w = np.stack([col.edge_values(t, "latency")
+                  for t in range(len(col))]).astype(np.float32)
+    return bg.stage_sparse(w, zero=INF)
+
+
+def test_appended_delta_chain_serves(grown_env):
+    """Baseline for this section: the grown deployment's extended chain
+    reconstructs the full history bitwise and still dedupes."""
+    col, root, bg = grown_env
+    store = _store(root)
+    assert store.version == 1
+    out = store.load_blocked(bg, "latency", zero=INF, layout="sparse",
+                             delta=True)
+    ref = _full_ref(col, bg)
+    assert np.array_equal(np.asarray(out.tiles), np.asarray(ref.tiles))
+    assert np.array_equal(np.asarray(out.btiles), np.asarray(ref.btiles))
+    assert out.source_bytes is not None  # chain used, not the fallback
+    ratio, monotone = store.delta_stats("latency", zero=INF)
+    assert ratio is not None and 0.0 < ratio < 1.0
+
+
+@pytest.mark.parametrize("which", ["delta", "tilemap"])
+def test_truncated_appended_slice_falls_back(grown_env, which):
+    """A pack torn after the append (half its bytes) must degrade to the
+    full value-slice fill, bitwise identical — never crash."""
+    from repro.gofs.layout import tile_map_name
+
+    col, root, bg = grown_env
+    name = delta_slice_name("latency") if which == "delta" \
+        else tile_map_name("latency")
+    p = os.path.join(root, name + ".npz")
+    with open(p, "rb") as f:
+        data = f.read()
+    with open(p, "wb") as f:
+        f.write(data[: len(data) // 2])
+    store = _store(root)
+    if which == "tilemap":
+        # activity becomes unknown (None), never an exception
+        assert store.tile_occupancy(bg, "latency", zero=INF) is None
+        assert store.sparse_buckets(bg, "latency", zero=INF) is None
+    out = store.load_blocked(bg, "latency", zero=INF, layout="sparse",
+                             delta=True)
+    ref = _full_ref(col, bg)
+    assert np.array_equal(np.asarray(out.tiles), np.asarray(ref.tiles))
+    if which == "delta":
+        assert out.source_bytes is None  # fell back to the full fill
+
+
+def test_appended_pool_fingerprint_mismatch_falls_back(grown_env):
+    """A delta pool whose recorded blocked-structure fingerprint no longer
+    matches the reader's (e.g. a bad append against a re-blocked
+    collection) is rejected, not dereferenced."""
+    col, root, bg = grown_env
+    path = os.path.join(root, delta_slice_name("latency"))
+    arrs = read_array_slice(path)
+    bad = arrs["tiles_rc"].copy()
+    bad[0] ^= 1  # one flipped tile coordinate
+    write_array_slice(path, {**arrs, "tiles_rc": bad})
+    store = _store(root)
+    out = store.load_blocked(bg, "latency", zero=INF, layout="sparse",
+                             delta=True)
+    ref = _full_ref(col, bg)
+    assert np.array_equal(np.asarray(out.tiles), np.asarray(ref.tiles))
+    assert out.source_bytes is None
+
+
+def test_manifest_delta_version_skew_falls_back(grown_env):
+    """Manifest says 6 instances but the delta chain still records the
+    pre-append 3 (a reader racing a partially propagated append): the
+    chain must be treated as stale for the visible range."""
+    col, root, bg = grown_env
+    path = os.path.join(root, delta_slice_name("latency"))
+    arrs = read_array_slice(path)
+    write_array_slice(path, {
+        **arrs,
+        "n_instances": np.asarray(3),
+        "ref_local": arrs["ref_local"][:3],
+        "ref_boundary": arrs["ref_boundary"][:3],
+    })
+    store = _store(root)
+    assert store.num_timesteps() == len(col)  # manifest governs visibility
+    out = store.load_blocked(bg, "latency", zero=INF, layout="sparse",
+                             delta=True)
+    ref = _full_ref(col, bg)
+    assert np.array_equal(np.asarray(out.tiles), np.asarray(ref.tiles))
+    assert out.source_bytes is None
+
+
+def test_corrupt_manifest_refresh_keeps_serving(grown_env):
+    """A torn ``collection.json`` (mid-append crash before the atomic
+    replace existed) must not take down an open reader: ``refresh``
+    reports no change and the bound version keeps serving."""
+    col, root, bg = grown_env
+    store = _store(root)
+    before = store.load_blocked(bg, "latency", zero=INF, layout="sparse",
+                                delta=True)
+    man = os.path.join(root, "collection.json")
+    with open(man) as f:
+        text = f.read()
+    with open(man, "w") as f:
+        f.write(text[: len(text) // 2])
+    assert store.refresh() is False  # unreadable manifest: no rebind
+    after = store.load_blocked(bg, "latency", zero=INF, layout="sparse",
+                               delta=True)
+    assert np.array_equal(np.asarray(before.tiles), np.asarray(after.tiles))
+    with open(man, "w") as f:
+        f.write(text)  # restored: refresh sees the same version again
+    assert store.refresh() is False
+
+
 # ------------------------------------------------------------- warm start
 @pytest.mark.parametrize("pattern", ["sequential", "independent",
                                      "eventually"])

@@ -181,3 +181,105 @@ def test_parity_delta_staging(delta_store):
         full = run(source=source, layout="sparse", delta=False)
         dlt = run(source=source, layout="sparse", delta=True)
         assert np.array_equal(full, dlt), f"delta vs full (source={source})"
+
+
+# --------------------------------------------------------------------------
+# streaming parity: append + tail is invisible too
+# --------------------------------------------------------------------------
+#
+# The streaming contract extends the property above to ingestion: deploy
+# the first k instances, stream the rest in via ``append_instances`` in
+# random-sized batches, ``tail()`` after each append — and the final tail
+# result must be bitwise identical to a cold full run over the grown
+# collection, for every knob combination (dense/sparse, warm/cold,
+# sync/async staging, sequential/independent pattern).
+
+def _streaming_case(seed: int):
+    from repro.configs.base import GraphConfig
+    from repro.core.generator import generate_collection
+    from repro.core.graph import TimeSeriesGraph
+
+    rng = np.random.default_rng(seed)
+    cfg = GraphConfig(
+        name=f"parity-stream-{seed % 97}",
+        num_vertices=int(rng.integers(48, 128)), avg_degree=3.0,
+        num_instances=int(rng.integers(4, 8)),
+        num_partitions=int(rng.integers(2, 4)),
+        block_size=int(rng.choice([8, 16])), instances_per_slice=2,
+        cache_slots=6, seed=int(seed % 1009) + 1,
+    )
+    col = generate_collection(cfg)
+    # monotone-tightening latency chain (see _random_case): appends can
+    # then be tailed warm AND cold with bitwise-identical answers
+    E = np.asarray(col.template.src).shape[0]
+    ws = [np.asarray(col.edge_values(0, "latency"), np.float32)]
+    for _t in range(1, len(col)):
+        f = np.where(rng.random(E) < 0.3, rng.uniform(0.6, 1.0, E), 1.0)
+        ws.append((ws[-1] * f).astype(np.float32))
+    insts = [dataclasses.replace(
+        col.instances[t],
+        edge_values={**col.instances[t].edge_values, "latency": ws[t]})
+        for t in range(len(col))]
+    return cfg, TimeSeriesGraph(template=col.template, instances=insts), rng
+
+
+def _assert_streaming_parity(seed: int) -> None:
+    import shutil
+    import tempfile
+
+    from repro.core.graph import TimeSeriesGraph
+    from repro.gofs import GoFSStore, append_instances, deploy_collection
+
+    cfg, col, rng = _streaming_case(seed)
+    n_total = len(col)
+    k = int(rng.integers(1, n_total))  # random split point
+    knobs = dict(
+        source=int(rng.integers(0, cfg.num_vertices)),
+        pattern=str(rng.choice(["sequential", "independent"])),
+        layout=str(rng.choice(["dense", "sparse"])),
+        staging=str(rng.choice(["sync", "async"])),
+        warm=bool(rng.integers(0, 2)),
+    )
+    root = tempfile.mkdtemp(prefix="parity_stream_")
+    try:
+        deploy_collection(
+            TimeSeriesGraph(template=col.template, instances=col.instances[:k]),
+            cfg, root, sparse_absent={"latency": np.inf})
+        sess = GopherSession(GoFSStore(root, cache_slots=cfg.cache_slots),
+                             block_size=cfg.block_size)
+        update = sess.tail("sssp", **knobs)
+        assert update.mode == "full" and update.new_instances == k
+        pos = k
+        while pos < n_total:  # random-sized append batches
+            b = int(rng.integers(1, n_total - pos + 1))
+            append_instances(
+                TimeSeriesGraph(template=col.template,
+                                instances=col.instances[pos:pos + b]),
+                root)
+            pos += b
+            update = sess.tail("sssp", **knobs)
+            assert update.mode == "incremental", (update.mode, knobs)
+            assert update.new_instances == b
+
+        # the whole point: the tail of tails == a cold full run over the
+        # grown deployment, bitwise, same knobs
+        cold = GopherSession(GoFSStore(root, cache_slots=cfg.cache_slots),
+                             block_size=cfg.block_size)
+        ref = cold.run(cold.plan("sssp", **knobs))
+        for key, vref in ref.output.items():
+            got = np.asarray(update.result.output[key])
+            assert np.array_equal(got, np.asarray(vref)), \
+                f"tail vs cold mismatch on {key!r} (knobs={knobs}, k={k})"
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=hyp_st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_streaming_parity_property(seed):
+    _assert_streaming_parity(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_streaming_parity_fixed_seeds(seed):
+    _assert_streaming_parity(seed)

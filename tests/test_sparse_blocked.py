@@ -358,6 +358,7 @@ def test_bench_check_gate(tmp_path):
         "shared_staging": {"staged_bytes_ratio": 2.0},
         "serving": {"throughput_ratio": 6.0, "restaged_bytes_repeat": 0,
                     "restaging_passes_repeat": 0},
+        "streaming_ingest": {"speedup": 12.0, "incremental_steps": 4},
     }
     p = str(tmp_path / "base.json")
     with open(p, "w") as f:

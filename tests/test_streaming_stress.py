@@ -1,0 +1,174 @@
+"""Concurrency stress for streaming ingestion (slow tier).
+
+An appender thread grows a deployed collection one instance at a time
+while GopherService query threads hammer the same service and a tailing
+subscriber rides every append.  The service refreshes only at batch
+boundaries, so the invariants under test are:
+
+* **no deadlock** — every thread joins within its timeout;
+* **no torn reads** — every query result corresponds bitwise to SOME
+  committed version of the collection (pre- or post-append), never a mix;
+* **budget honored** — the session-lifetime staging cache never exceeds
+  its byte budget even as appends extend staged batches in place.
+
+Version identification is structural: a result computed over n instances
+has ``engine.values.shape[-2] == n``, and the per-n reference is a cold
+run over an independent deployment of the first n instances.
+"""
+import dataclasses
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.base import GraphConfig
+from repro.core.generator import generate_collection
+from repro.core.graph import TimeSeriesGraph
+from repro.gofs import GoFSStore, append_instances, deploy_collection
+from repro.gopher import GopherService, GopherSession
+
+CFG = GraphConfig(
+    name="stress-stream", num_vertices=256, avg_degree=3.0,
+    num_instances=8, num_partitions=2, block_size=16,
+    instances_per_slice=2, cache_slots=8, seed=23,
+)
+PREFIX = 4
+BUDGET = 64 << 20
+# pinned knobs: the planner's auto choices may legitimately flip as the
+# collection grows (occupancy, delta ratio); pinning keeps every version's
+# reference comparable to the live service bitwise
+KNOBS = {"layout": "dense", "warm": False, "staging": "sync"}
+
+
+def _collection():
+    col = generate_collection(CFG)
+    rng = np.random.default_rng(CFG.seed)
+    E = np.asarray(col.template.src).shape[0]
+    ws = [np.asarray(col.edge_values(0, "latency"), np.float32)]
+    for _t in range(1, len(col)):
+        f = np.where(rng.random(E) < 0.3, rng.uniform(0.6, 1.0, E), 1.0)
+        ws.append((ws[-1] * f).astype(np.float32))
+    insts = [dataclasses.replace(
+        col.instances[t],
+        edge_values={**col.instances[t].edge_values, "latency": ws[t]})
+        for t in range(len(col))]
+    return TimeSeriesGraph(template=col.template, instances=insts)
+
+
+def _prefix_deploy(col, root, n):
+    deploy_collection(
+        TimeSeriesGraph(template=col.template, instances=col.instances[:n]),
+        CFG, root, sparse_absent={"latency": np.inf})
+
+
+@pytest.mark.slow
+def test_streaming_appender_vs_queries_vs_subscriber(tmp_path):
+    col = _collection()
+    total = len(col)
+
+    # per-version bitwise references: a cold session over an independent
+    # deployment of exactly the first n instances
+    refs = {}
+    for n in range(PREFIX, total + 1):
+        root_n = str(tmp_path / f"ref_{n}")
+        _prefix_deploy(col, root_n, n)
+        cold = GopherSession(GoFSStore(root_n, cache_slots=CFG.cache_slots),
+                             block_size=CFG.block_size)
+        refs[n] = cold.run(cold.plan("sssp", source=0, **KNOBS))
+
+    live = str(tmp_path / "live")
+    _prefix_deploy(col, live, PREFIX)
+    store = GoFSStore(live, cache_slots=CFG.cache_slots)
+
+    stop = threading.Event()
+    results, errors, updates = [], [], []
+
+    with GopherService(store, block_size=CFG.block_size,
+                       poll_interval=0.01,
+                       staging_cache_bytes=BUDGET) as svc:
+        sub = svc.subscribe("sssp", source=0, plan_kw=dict(KNOBS),
+                            callback=updates.append)
+        sub.wait_update(1, timeout=120)  # initial full run compiled
+
+        def querier():
+            try:
+                while not stop.is_set():
+                    results.append(svc.query(
+                        "sssp", source=0, plan_kw=dict(KNOBS), timeout=120))
+            except Exception as e:  # surfaced below, not swallowed
+                errors.append(e)
+
+        threads = [threading.Thread(target=querier, daemon=True)
+                   for _ in range(3)]
+        for t in threads:
+            t.start()
+
+        for k in range(PREFIX, total):  # appender races the query threads
+            append_instances(
+                TimeSeriesGraph(template=col.template,
+                                instances=col.instances[k:k + 1]),
+                live)
+            time.sleep(0.05)
+
+        # the serve loop refreshes at batch boundaries, so one update may
+        # coalesce several appends — wait until the subscription has
+        # caught up to the fully-grown collection, not for a fixed count
+        deadline = time.time() + 120
+        while time.time() < deadline:
+            u = sub.last
+            if u is not None and sub.error is None and int(
+                    np.asarray(u.result.engine.values).shape[-2]) == total:
+                break
+            time.sleep(0.05)
+        else:
+            pytest.fail(f"subscriber never caught up to {total} instances "
+                        f"(last={sub.last and sub.last.mode}, "
+                        f"err={sub.error})")
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+        assert not any(t.is_alive() for t in threads), "query thread hung"
+        assert not errors, errors
+        stats = svc.session.staging_cache_stats()
+        rep = svc.report()
+        sub.cancel()
+
+    assert sub.error is None
+    assert rep["appends_observed"] >= 1  # boundary refreshes coalesce
+
+    # --- no torn reads: every result IS some committed version, bitwise
+    assert results, "query threads produced nothing"
+    seen_ns = set()
+    for res in results:
+        vals = np.asarray(res.engine.values)
+        n = int(vals.shape[-2])
+        assert n in refs, f"result over {n} instances matches no version"
+        seen_ns.add(n)
+        rv = np.asarray(refs[n].engine.values)
+        if vals.ndim == rv.ndim + 1:
+            # continuous batching merged concurrent identical queries
+            # into one Q-wide source batch — every row must match
+            assert all(np.array_equal(v, rv) for v in vals), \
+                f"torn read at version n={n}"
+        else:
+            assert np.array_equal(vals, rv), f"torn read at version n={n}"
+        assert np.array_equal(np.asarray(res.output["final"]),
+                              np.asarray(refs[n].output["final"]))
+    assert PREFIX in seen_ns or len(seen_ns) >= 1
+
+    # --- the subscriber's last update is the fully-grown collection
+    last = updates[-1]
+    assert int(np.asarray(last.result.engine.values).shape[-2]) == total
+    assert np.array_equal(np.asarray(last.result.output["final"]),
+                          np.asarray(refs[total].output["final"]))
+    modes = [u.mode for u in updates]
+    assert modes[0] == "full" and set(modes[1:]) <= {"incremental"}
+    assert sum(u.new_instances for u in updates
+               if u.mode == "incremental") == total - PREFIX
+
+    # --- staging-cache byte budget held under concurrent extension
+    assert stats is not None
+    assert stats["resident_bytes"] <= BUDGET
+    assert stats["byte_budget"] == BUDGET
