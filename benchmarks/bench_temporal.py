@@ -586,6 +586,92 @@ def run(check: bool = False) -> None:
         "dense_vs_sparse": t_kd / max(t_ks, 1e-12),
     }
 
+    # ---- fused superstep kernel: one pallas_call per local stage ----------
+    # The gated metrics are jaxpr-derived and DETERMINISTIC: the fused
+    # path must lower its whole local stage (tile walk + semiring combine
+    # + halt vote) to exactly one pallas_call with no state-sized XLA
+    # reduction left outside the kernel, and must need strictly fewer
+    # equations than the per-stage spmv sweep + separate vote.  Interpret
+    # -mode wall clocks are recorded for the record but NOT gated (on CPU
+    # the interpreter dominates; the structural counts are what transfer
+    # to the TPU lowering).
+    import jax
+
+    from repro.core.superstep import (_fused_sweep_vote, _local_sweep,
+                                      device_graph)
+
+    dgf = device_graph(bg, bg.fill_local(wb[0]), bg.fill_boundary(wb[0]))
+    x0f = jnp.asarray(np.where(np.asarray(dgf.vmask), 1.0, np.inf),
+                      jnp.float32)
+
+    def _all_eqns(jx):
+        out, stack = [], list(jx.jaxpr.eqns)
+        while stack:
+            e = stack.pop()
+            out.append(e)
+            for sub in e.params.values():
+                if hasattr(sub, "jaxpr"):
+                    stack.extend(sub.jaxpr.eqns)
+        return out
+
+    def fused_sweep(xx):
+        return _fused_sweep_vote(xx, dgf, MIN_PLUS, True)
+
+    def spmv_sweep_vote(xx):
+        xn = _local_sweep(xx, dgf, MIN_PLUS, ("spmv", True))
+        return xn, jnp.any(jnp.where(dgf.vmask, xn != xx, False))
+
+    eq_f = _all_eqns(jax.make_jaxpr(fused_sweep)(x0f))
+    eq_s = _all_eqns(jax.make_jaxpr(spmv_sweep_vote)(x0f))
+    n_pallas_f = sum(e.primitive.name == "pallas_call" for e in eq_f)
+    state_elems_cap = int(dgf.n_parts)  # reduces over flags are fine
+    n_state_reduces = sum(
+        1 for e in eq_f
+        if e.primitive.name in ("reduce_or", "reduce_and",
+                                "reduce_max", "reduce_min")
+        and int(np.prod(e.invars[0].aval.shape)) > state_elems_cap)
+
+    # parity before timing, then interpret-mode wall clocks (ungated)
+    jf = jax.jit(fused_sweep)
+    js = jax.jit(spmv_sweep_vote)
+    xf, chf = jf(x0f)
+    xs_, chs = js(x0f)
+    assert np.array_equal(np.asarray(xf), np.asarray(xs_))
+    assert bool(np.max(np.asarray(chf)) > 0) == bool(np.asarray(chs))
+    t_fsweep = _time(lambda: jax.block_until_ready(jf(x0f)))
+    t_ssweep = _time(lambda: jax.block_until_ready(js(x0f)))
+
+    # end-to-end engine runs, banded SSSP, all three kernel modes
+    prog_f = min_plus_program("sssp", init=source_init(0))
+    eng_fu = TemporalEngine(bg, use_pallas="fused")
+    eng_pv = TemporalEngine(bg, use_pallas="spmv")
+    r_or = eng_d.run(prog_f, wb, pattern="sequential")
+    r_fu = eng_fu.run(prog_f, wb, pattern="sequential")
+    r_pv = eng_pv.run(prog_f, wb, pattern="sequential")
+    assert np.array_equal(r_or.values, r_fu.values)
+    assert np.array_equal(r_or.values, r_pv.values)
+    t_eor = _time(lambda: eng_d.run(prog_f, wb, pattern="sequential"),
+                  repeats=2)
+    t_efu = _time(lambda: eng_fu.run(prog_f, wb, pattern="sequential"),
+                  repeats=2)
+    t_epv = _time(lambda: eng_pv.run(prog_f, wb, pattern="sequential"),
+                  repeats=2)
+    emit("temporal/fused_superstep_pallas_calls", float(n_pallas_f),
+         f"eqns={len(eq_f)};spmv_eqns={len(eq_s)}")
+    emit("temporal/fused_superstep_sweep", t_fsweep * 1e6,
+         f"spmv={t_ssweep * 1e6:.0f}us;interpret=True")
+    results["fused_superstep"] = {
+        "interpret": True,
+        "fused_pallas_calls": n_pallas_f,
+        "state_vote_reduces": n_state_reduces,
+        "sweep_eqns_fused": len(eq_f),
+        "sweep_eqns_spmv": len(eq_s),
+        "eqn_ratio": len(eq_s) / max(len(eq_f), 1),
+        "sweep_fused_s": t_fsweep, "sweep_spmv_s": t_ssweep,
+        "engine_oracle_s": t_eor, "engine_spmv_s": t_epv,
+        "engine_fused_s": t_efu,
+    }
+
     # ---- comm backends: one workload, three boundary exchanges ------------
     prog_c = min_plus_program("sssp", init=source_init(0))
     comm_engines = {
@@ -834,6 +920,15 @@ THRESHOLDS = {
     ("serving", "throughput_ratio"): ("min", 2.0, 0.5),
     ("serving", "restaged_bytes_repeat"): ("max", 0.0, None),
     ("serving", "restaging_passes_repeat"): ("max", 0.0, None),
+    # fused superstep kernel: jaxpr-derived structural counts, fully
+    # deterministic — the whole local stage must stay ONE pallas_call,
+    # the halt vote must never fall out of the kernel as a state-sized
+    # XLA reduce, and the fused lowering must stay strictly leaner than
+    # the per-stage spmv sweep + separate vote (floor kept conservative
+    # so a jax upgrade shifting eqn counts by noise does not trip it)
+    ("fused_superstep", "fused_pallas_calls"): ("max", 1.0, None),
+    ("fused_superstep", "state_vote_reduces"): ("max", 0.0, None),
+    ("fused_superstep", "eqn_ratio"): ("min", 1.1, None),
     # streaming ingestion: the acceptance target — a steady-state tail
     # step (warm incremental recompute of one appended batch) must beat a
     # cold full re-run over the grown collection by >=3x; the step count

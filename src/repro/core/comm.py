@@ -20,7 +20,14 @@ backend             boundary combine
                     on multi-pod DCI (or any bandwidth-asymmetric topology)
                     no hop crosses the slow links more than once per
                     superstep — the regime where a ring beats the
-                    all-reduce tree
+                    all-reduce tree.  Two variants: ``circulate`` (v1)
+                    moves the FULL (NB,) buffer on every hop —
+                    ``(n-1) * NB`` bytes per device; ``rs_ag`` (v2,
+                    backend name ``"ring-rs"``) runs a chunked
+                    reduce-scatter followed by an all-gather, moving
+                    ``2 * (n-1)/n * NB`` bytes per device — the
+                    bandwidth-optimal schedule, ~2x less traffic for
+                    large rings at the cost of twice the hop count
 ``HostGather``      mesh-free: the (P, num_boundary) per-partition buffers
                     are combined on the HOST (numpy semiring fold behind
                     ``jax.pure_callback``), so the same
@@ -55,7 +62,7 @@ import numpy as np
 
 from repro.core.semiring import Semiring
 
-COMM_BACKENDS = ("dense", "ring", "host")
+COMM_BACKENDS = ("dense", "ring", "ring-rs", "host")
 
 AxisName = Optional[Union[str, Tuple[str, ...]]]
 
@@ -172,11 +179,25 @@ class RingExchange(CommBackend):
     is no ring to walk — the backend degenerates to the same partition-axis
     left fold as :class:`DenseAllReduce`, bitwise identical.
 
+    ``variant`` picks the hop schedule.  ``"circulate"`` (v1, backend name
+    ``"ring"``) ships the whole (NB,) partial on each of the ``n - 1``
+    hops: ``(n - 1) * NB`` bytes leave every device per superstep.
+    ``"rs_ag"`` (v2, backend name ``"ring-rs"``) is the bandwidth-optimal
+    two-phase schedule: the buffer is split into ``n`` chunks, a
+    reduce-scatter walks ``n - 1`` hops combining ONE chunk per hop (after
+    which device ``i`` owns the fully combined chunk ``(i + 1) % n``), and
+    an all-gather walks ``n - 1`` more hops broadcasting the owned chunks —
+    ``2 * (n - 1) / n * NB`` bytes per device, ~2x less than circulate for
+    large ``n``, at twice the latency-bound hop count.  Per-superstep costs
+    for both are modeled in
+    ``repro.dist.collectives.boundary_exchange_bytes``.
+
     Min-plus ring results are bitwise equal to the all-reduce (min is
-    order-exact); plus-mul results are REASSOCIATED — each device folds the
-    same addends in its own ring order, so expect low-order float bit
-    differences vs ``DenseAllReduce`` on a mesh (see
-    ``tests/test_comm_backends.py`` tolerances).
+    order-exact, both variants); plus-mul results are REASSOCIATED — each
+    device (circulate) or each chunk (rs_ag) folds the same addends in its
+    own ring order, so expect low-order float bit differences vs
+    ``DenseAllReduce`` on a mesh (see ``tests/test_comm_backends.py``
+    tolerances).
 
     >>> import jax.numpy as jnp
     >>> import numpy as np
@@ -185,10 +206,14 @@ class RingExchange(CommBackend):
     ...                    [jnp.inf, 2., 5.]])  # 2 partitions, 3 boundary
     >>> np.asarray(RingExchange().combine_boundary(buf, MIN_PLUS))
     array([0., 2., 5.], dtype=float32)
+    >>> np.asarray(RingExchange(name="ring-rs", variant="rs_ag")
+    ...            .combine_boundary(buf, MIN_PLUS))  # stacked: same fold
+    array([0., 2., 5.], dtype=float32)
     """
 
     name: str = "ring"
     axis_sizes: Tuple[int, ...] = ()
+    variant: str = "circulate"  # "circulate" (v1) | "rs_ag" (v2)
     # extra axes the halt vote synchronizes over (see CommBackend.bind_sync)
     sync_axes: Tuple[str, ...] = ()
 
@@ -196,6 +221,8 @@ class RingExchange(CommBackend):
         assert len(_axes(self.axis_name)) == len(self.axis_sizes), \
             "RingExchange needs one static axis size per mesh axis " \
             "(use make_comm to derive them from the mesh)"
+        assert self.variant in ("circulate", "rs_ag"), \
+            f"unknown ring variant {self.variant!r}"
 
     def bind_sync(self, axes: Tuple[str, ...]) -> "RingExchange":
         import dataclasses
@@ -214,10 +241,54 @@ class RingExchange(CommBackend):
                 x = combine(x, send)
         return x
 
+    def _ring_rs_ag(self, x: jax.Array, sr: Semiring) -> jax.Array:
+        """Chunked reduce-scatter + all-gather over every mesh axis.
+
+        Phase 1 (reduce-scatter): the (NB,) buffer is padded with the
+        semiring zero to a multiple of ``n`` and split into ``n`` chunks;
+        on hop ``s`` each device forwards its running partial and combines
+        the received partial with its LOCAL copy of that chunk, so after
+        ``n - 1`` hops device ``i`` owns the fully combined chunk
+        ``(i + 1) % n`` (folded in device order ``c, c+1, ..`` for chunk
+        ``c`` — one fixed association per chunk).  Phase 2 (all-gather):
+        the owned chunks circulate ``n - 1`` more hops, each device
+        scattering arrivals back into place.  Each hop moves ``NB / n``
+        elements instead of circulate's full ``NB``.
+        """
+        for ax, n in zip(_axes(self.axis_name), self.axis_sizes):
+            if n == 1:
+                continue
+            nb = x.shape[0]
+            pad = (-nb) % n
+            xp = jnp.pad(x, (0, pad), constant_values=sr.zero) if pad else x
+            chunks = xp.reshape(n, -1)
+            idx = jax.lax.axis_index(ax)
+            perm = [(i, (i + 1) % n) for i in range(n)]
+
+            def take(c):
+                return jax.lax.dynamic_index_in_dim(chunks, c, keepdims=False)
+
+            # reduce-scatter: after n-1 hops device i owns chunk (i+1) % n
+            send = take(idx)
+            for s in range(n - 1):
+                recv = jax.lax.ppermute(send, ax, perm)
+                send = sr.add(recv, take(jnp.mod(idx - 1 - s, n)))
+            # all-gather: broadcast the owned chunks around the same ring
+            out = chunks.at[jnp.mod(idx + 1, n)].set(send)
+            g = send
+            for s in range(n - 1):
+                g = jax.lax.ppermute(g, ax, perm)
+                out = out.at[jnp.mod(idx - s, n)].set(g)
+            x = out.reshape(-1)[:nb]
+        return x
+
     def combine_boundary(self, buf: jax.Array, sr: Semiring) -> jax.Array:
         out = _stack_fold(buf, sr)
         if self.axis_name is not None:
-            out = self._ring(out, sr.add)
+            if self.variant == "rs_ag":
+                out = self._ring_rs_ag(out, sr)
+            else:
+                out = self._ring(out, sr.add)
         return out
 
     def any_changed(self, flag: jax.Array) -> jax.Array:
@@ -325,12 +396,14 @@ def make_comm(
     'dense'
     >>> make_comm("ring").axis_name is None   # stacked: fold, no ring
     True
+    >>> make_comm("ring-rs").variant      # v2: reduce-scatter + all-gather
+    'rs_ag'
     >>> make_comm("host").name
     'host'
     >>> make_comm("nope")
     Traceback (most recent call last):
         ...
-    ValueError: unknown comm backend 'nope'; pick from ('dense', 'ring', 'host')
+    ValueError: unknown comm backend 'nope'; pick from ('dense', 'ring', 'ring-rs', 'host')
     """
     axes = tuple(model_axes)
     if isinstance(backend, CommBackend):
@@ -371,11 +444,15 @@ def make_comm(
     axis_name = None if mesh is None else axes
     if backend == "dense":
         return DenseAllReduce(axis_name=axis_name)
-    if backend == "ring":
+    if backend in ("ring", "ring-rs"):
+        variant = "rs_ag" if backend == "ring-rs" else "circulate"
         if mesh is None:
-            return RingExchange(axis_name=None)
+            return RingExchange(name=backend, axis_name=None, variant=variant)
         sizes = tuple(int(mesh.shape[a]) for a in axes)
-        return RingExchange(axis_name=axis_name, axis_sizes=sizes)
+        return RingExchange(
+            name=backend, axis_name=axis_name, axis_sizes=sizes,
+            variant=variant,
+        )
     if backend == "host":
         if mesh is not None:
             raise ValueError(

@@ -78,8 +78,10 @@ from repro.core.comm import CommBackend, make_comm
 from repro.core.ibsp import BSPStats
 from repro.core.semiring import INF, MIN_PLUS, PLUS_MUL, Semiring
 from repro.core.superstep import (
+    KERNEL_MODES,
     DeviceGraph,
     bsp_fixpoint,
+    kernel_mode,
     pagerank_step,
 )
 
@@ -447,7 +449,8 @@ class TemporalEngine:
         mesh=None,
         data_axis: str = "data",
         model_axes: Tuple[str, ...] = ("model",),
-        use_pallas: bool = False,
+        use_pallas=False,
+        kernel_interpret: Optional[bool] = None,
         staging: str = "sync",
         prefetch_depth: int = 2,
         chunk_instances: Optional[int] = None,
@@ -460,7 +463,13 @@ class TemporalEngine:
         self.mesh = mesh
         self.data_axis = data_axis
         self.model_axes = tuple(model_axes)
-        self.use_pallas = use_pallas
+        # ``use_pallas`` is the three-valued kernel mode ("off" | "spmv" |
+        # "fused"; bools keep their historical meaning).  It is validated
+        # here and passed down opaquely — ``kernel_interpret`` rides along
+        # so tests can pin the interpret tier regardless of backend.
+        self.kernel_mode = kernel_mode(use_pallas)[0]
+        self.use_pallas = self.kernel_mode if kernel_interpret is None \
+            else (self.kernel_mode, kernel_interpret)
         self.staging = staging
         self.prefetch_depth = prefetch_depth
         self.chunk_instances = chunk_instances

@@ -45,6 +45,36 @@ from repro.core.comm import (  # noqa: F401  (re-exported: historical home)
 )
 from repro.core.semiring import MIN_PLUS, PLUS_MUL, Semiring
 from repro.kernels.semiring_spmm.ops import spmv_blocked
+from repro.kernels.semiring_superstep.ops import fused_step
+
+#: Engine kernel modes: ``"off"`` is the pure-jnp oracle, ``"spmv"`` the
+#: per-stage blocked SpMV Pallas kernel, ``"fused"`` the single-call
+#: superstep kernel (sweep + semiring combine + halt vote in one
+#: ``pallas_call``, ``kernels/semiring_superstep``).  Plain bools keep
+#: their historical meaning (``False`` -> off, ``True`` -> spmv).
+KERNEL_MODES = ("off", "spmv", "fused")
+
+
+def kernel_mode(use_pallas) -> Tuple[str, Any]:
+    """Normalize a ``use_pallas`` value to ``(mode, interpret)``.
+
+    ``use_pallas`` is the historical knob name and still accepts bools;
+    it now also accepts a mode string from :data:`KERNEL_MODES` or a
+    ``(mode, interpret)`` tuple for callers (tests, the engine) that
+    force interpret mode explicitly.  ``interpret=None`` defers to the
+    cached backend probe in ``kernels/semiring_spmm/ops.py``.
+    """
+    interpret = None
+    if isinstance(use_pallas, tuple):
+        use_pallas, interpret = use_pallas
+    if use_pallas is False or use_pallas is None:
+        return "off", interpret
+    if use_pallas is True:
+        return "spmv", interpret
+    if use_pallas not in KERNEL_MODES:
+        raise ValueError(
+            f"unknown kernel mode {use_pallas!r}: pick from {KERNEL_MODES}")
+    return use_pallas, interpret
 
 
 @dataclass
@@ -101,34 +131,80 @@ def device_graph(
 # Step primitives
 # ---------------------------------------------------------------------------
 
+def _blocks(x: jax.Array, dg: DeviceGraph) -> jax.Array:
+    """(P, Vp) state -> (P, NVB, B) block view for the fused kernel."""
+    return x.reshape(x.shape[0], -1, dg.block_size)
+
+
+def _fused_sweep_vote(
+    x: jax.Array, dg: DeviceGraph, sr: Semiring, interpret,
+) -> Tuple[jax.Array, jax.Array]:
+    """One fused sweep: x' = add(x, A^T x) plus the per-partition halt
+    vote vs the pre-sweep state, all inside one ``pallas_call``."""
+    xs = _blocks(x, dg)
+    xo, changed = fused_step(dg.tiles, dg.rows, dg.cols, xs, xs, xs,
+                             _blocks(dg.vmask, dg), sr, interpret=interpret)
+    return xo.reshape(x.shape), changed
+
+
+def _fused_consume_vote(
+    x: jax.Array, boundary: jax.Array, dg: DeviceGraph, sr: Semiring,
+    x_ref: jax.Array, interpret, combine: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused boundary consume: x' = add(x, R^T boundary), voting against
+    ``x_ref`` (the superstep start) in-kernel."""
+    xs = _blocks(x, dg)
+    comb = xs if combine else sr.full(xs.shape, xs.dtype)
+    xo, changed = fused_step(
+        dg.btiles, dg.brows, dg.bcols,
+        boundary.reshape(1, -1, dg.block_size), comb, _blocks(x_ref, dg),
+        _blocks(dg.vmask, dg), sr, interpret=interpret)
+    return xo.reshape(x.shape), changed
+
+
 def _local_sweep(
-    x: jax.Array, dg: DeviceGraph, sr: Semiring, use_pallas: bool
+    x: jax.Array, dg: DeviceGraph, sr: Semiring, use_pallas
 ) -> jax.Array:
     """One relaxation sweep of every partition: x' = add(x, A^T x)."""
+    mode, interpret = kernel_mode(use_pallas)
+    if mode == "fused":
+        return _fused_sweep_vote(x, dg, sr, interpret)[0]
 
     def one(tiles, rows, cols, xp):
-        y = spmv_blocked(tiles, rows, cols, xp, sr, use_pallas=use_pallas)
+        y = spmv_blocked(tiles, rows, cols, xp, sr,
+                         use_pallas=mode == "spmv", interpret=interpret)
         return sr.add(xp, y)
 
     return jax.vmap(one)(dg.tiles, dg.rows, dg.cols, x)
 
 
 def _spmv_only(
-    x: jax.Array, dg: DeviceGraph, sr: Semiring, use_pallas: bool
+    x: jax.Array, dg: DeviceGraph, sr: Semiring, use_pallas
 ) -> jax.Array:
     """Plain y = A^T x per partition (no combine with x) — PageRank path."""
+    mode, interpret = kernel_mode(use_pallas)
+    if mode == "fused":
+        # add(zero, y) == y and untouched blocks stay sr.zero — the
+        # fused kernel degenerates to the plain SpMV (vote ignored)
+        xs = _blocks(x, dg)
+        xo, _ = fused_step(dg.tiles, dg.rows, dg.cols, xs,
+                           sr.full(xs.shape, xs.dtype), xs,
+                           _blocks(dg.vmask, dg), sr, interpret=interpret)
+        return xo.reshape(x.shape)
 
     def one(tiles, rows, cols, xp):
-        return spmv_blocked(tiles, rows, cols, xp, sr, use_pallas=use_pallas)
+        return spmv_blocked(tiles, rows, cols, xp, sr,
+                            use_pallas=mode == "spmv", interpret=interpret)
 
     return jax.vmap(one)(dg.tiles, dg.rows, dg.cols, x)
 
 
 def _local_converge(
-    x: jax.Array, dg: DeviceGraph, sr: Semiring, use_pallas: bool,
+    x: jax.Array, dg: DeviceGraph, sr: Semiring, use_pallas,
     max_sweeps: int,
 ) -> Tuple[jax.Array, jax.Array]:
     """Sweep to local fixpoint (idempotent sr).  Returns (x, n_sweeps)."""
+    mode, interpret = kernel_mode(use_pallas)
 
     def cond(carry):
         _, changed, it = carry
@@ -136,8 +212,14 @@ def _local_converge(
 
     def body(carry):
         xc, _, it = carry
-        xn = _local_sweep(xc, dg, sr, use_pallas)
-        changed = jnp.any(jnp.where(dg.vmask, xn != xc, False))
+        if mode == "fused":
+            # the kernel's per-partition vote is ready-made: the loop
+            # folds P scalars instead of re-reading two (P, Vp) states
+            xn, chv = _fused_sweep_vote(xc, dg, sr, interpret)
+            changed = jnp.max(chv) > 0
+        else:
+            xn = _local_sweep(xc, dg, sr, use_pallas)
+            changed = jnp.any(jnp.where(dg.vmask, xn != xc, False))
         return xn, changed, it + 1
 
     x, _, sweeps = jax.lax.while_loop(
@@ -162,15 +244,19 @@ def _publish(x: jax.Array, dg: DeviceGraph, sr: Semiring,
 
 def _consume(
     x: jax.Array, boundary: jax.Array, dg: DeviceGraph, sr: Semiring,
-    use_pallas: bool, combine: bool = True,
+    use_pallas, combine: bool = True,
 ) -> jax.Array:
     """Apply incoming cut edges: y = R^T boundary; x' = add(x, y)."""
+    mode, interpret = kernel_mode(use_pallas)
+    if mode == "fused":
+        return _fused_consume_vote(x, boundary, dg, sr, x, interpret,
+                                   combine=combine)[0]
     nob = dg.vp // dg.block_size
 
     def one(btiles, brows, bcols, xp):
         y = spmv_blocked(
             btiles, brows, bcols, boundary, sr,
-            n_out_blocks=nob, use_pallas=use_pallas,
+            n_out_blocks=nob, use_pallas=mode == "spmv", interpret=interpret,
         )
         return sr.add(xp, y) if combine else y
 
@@ -178,7 +264,7 @@ def _consume(
 
 
 def make_spmd_superstep(mesh, sr: Semiring = MIN_PLUS, *,
-                        use_pallas: bool = False,
+                        use_pallas=False,
                         comm="dense"):
     """One BSP superstep as an explicit shard_map program: partitions are
     sharded one-per-device over ALL mesh axes; the boundary exchange is one
@@ -244,7 +330,7 @@ def bsp_fixpoint(
     subgraph_centric: bool = True,
     max_supersteps: int = 64,
     max_local_sweeps: int = 1024,
-    use_pallas: bool = False,
+    use_pallas=False,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Run BSP supersteps until global fixpoint (idempotent semirings).
 
@@ -254,6 +340,7 @@ def bsp_fixpoint(
     """
     assert sr.idempotent, "bsp_fixpoint needs an idempotent semiring"
     sweeps_cap = max_local_sweeps if subgraph_centric else 1
+    mode, interpret = kernel_mode(use_pallas)
 
     def cond(carry):
         _, changed, ss, _ = carry
@@ -263,11 +350,18 @@ def bsp_fixpoint(
         x0_step, _, ss, lsw = carry
         x, s = _local_converge(x0_step, dg, sr, use_pallas, sweeps_cap)
         boundary = _publish(x, dg, sr, comm)
-        xn = _consume(x, boundary, dg, sr, use_pallas)
         # vote-to-halt compares against the superstep START: in
         # vertex-centric mode the single local sweep can progress even when
         # the boundary exchange is quiet.
-        changed = jnp.any(jnp.where(dg.vmask, xn != x0_step, False))
+        if mode == "fused":
+            # the consume kernel emits the vote: the while_loop consumes
+            # a (P, 1) scalar fold, never re-reading the full states
+            xn, chv = _fused_consume_vote(x, boundary, dg, sr, x0_step,
+                                          interpret)
+            changed = jnp.max(chv) > 0
+        else:
+            xn = _consume(x, boundary, dg, sr, use_pallas)
+            changed = jnp.any(jnp.where(dg.vmask, xn != x0_step, False))
         changed = comm.any_changed(changed)
         return xn, changed, ss + 1, lsw + s
 
@@ -286,7 +380,7 @@ def pagerank_step(
     *,
     damping: float = 0.85,
     num_vertices: int,
-    use_pallas: bool = False,
+    use_pallas=False,
 ) -> jax.Array:
     """One PageRank superstep: contribution SpMV + boundary exchange."""
     contrib = _spmv_only(rank, dg, PLUS_MUL, use_pallas)
@@ -307,7 +401,7 @@ def pagerank_run(
     num_vertices: int,
     iters: int = 30,
     tol: float = 0.0,
-    use_pallas: bool = False,
+    use_pallas=False,
 ) -> Tuple[jax.Array, jax.Array]:
     """PageRank to ``iters`` supersteps (or L1 tolerance).  Returns
     (rank (P, Vp), supersteps)."""

@@ -93,6 +93,14 @@ def boundary_exchange_bytes(
       carries exactly one NB buffer per hop instead of the all-reduce
       tree's cross-section traffic — latency-bound small cuts prefer
       ``dense``, DCI-bandwidth-bound large cuts prefer ``ring``.
+    * ``ring-rs`` — the v2 ring: chunked reduce-scatter + all-gather over
+      the same neighbor-to-neighbor ``ppermute`` ring.  Each hop moves an
+      NB/n chunk instead of the full buffer, so per-device bytes drop to
+      the bandwidth-optimal ``2 (n-1)/n × NB`` (same volume as the dense
+      all-reduce) while KEEPING the strictly point-to-point transfer
+      pattern — at ``2 (n-1)`` latency hops, double the circulate ring.
+      Wins when the DCI cut is so large that ring traffic itself is
+      bandwidth-bound.
     * ``host``  — no device collective: every partition ships its NB
       buffer to the host, which returns one combined buffer (``n × NB``
       up, ``n × NB`` down across PCIe/Ethernet, 2 logical hops).
@@ -101,13 +109,17 @@ def boundary_exchange_bytes(
     6000.0
     >>> boundary_exchange_bytes(1000, 4, "ring")["hops"]
     3
+    >>> boundary_exchange_bytes(1000, 4, "ring-rs")["bytes_per_device"]
+    6000.0
+    >>> boundary_exchange_bytes(1000, 4, "ring-rs")["hops"]
+    6
     >>> boundary_exchange_bytes(1000, 4, "host")["kind"]
     'host-gather'
     >>> boundary_exchange_bytes(1024, 4, "dense",  # padded NB overstates
     ...                         boundary_nnz=37)["bytes_per_device"]
     222.0
     """
-    if backend not in ("dense", "ring", "host"):
+    if backend not in ("dense", "ring", "ring-rs", "host"):
         raise ValueError(f"unknown comm backend {backend!r}")
     eff = num_boundary if boundary_nnz is None else boundary_nnz
     nb = float(eff * dtype_bytes)
@@ -119,6 +131,10 @@ def boundary_exchange_bytes(
     if backend == "ring":
         per_dev = (n - 1) * nb
         return {"kind": "collective-permute", "hops": n - 1,
+                "bytes_per_device": per_dev, "bytes_total": per_dev * n}
+    if backend == "ring-rs":
+        per_dev = 2.0 * (n - 1) / max(n, 1) * nb
+        return {"kind": "collective-permute", "hops": 2 * (n - 1),
                 "bytes_per_device": per_dev, "bytes_total": per_dev * n}
     return {"kind": "host-gather", "hops": 2,
             "bytes_per_device": 2.0 * nb, "bytes_total": 2.0 * nb * n}

@@ -37,6 +37,14 @@ warm        collection recorded monotone-improving at deploy AND the
             (seed instance *t* from *t-1*'s converged fixpoint — exact;
             see docs/ARCHITECTURE.md); plus-mul fixed-iterate or
             non-monotone collections -> ``False`` (cold start)
+kernel      jax backend not ``tpu`` -> ``off`` (the jnp oracle path IS
+            the lowering — interpreted Pallas on CPU only checks
+            semantics, slower than jnp); ``tpu`` + recorded occupancy
+            ``<= 25%`` -> ``fused`` (packed active-tile walk: the fused
+            superstep kernel keeps state VMEM-resident, double-buffers
+            tile DMA, and folds the halt vote in-kernel); ``tpu``
+            otherwise -> ``spmv`` (per-stage SpMV kernel; dense template
+            walks gain little from fusing the vote)
 placement   mesh given -> shard partitions over ``model_axes`` and
             temporally concurrent instances over ``data_axis``;
             else stacked
@@ -113,6 +121,7 @@ class ExecutionPlan:
     staging: PlanChoice  # "sync" | "async"
     delta: PlanChoice  # True | False — delta-chain tile staging
     warm: PlanChoice  # True | False — warm-started fixpoints
+    kernel: PlanChoice  # "off" | "spmv" | "fused" — Pallas kernel mode
     placement: PlanChoice  # "stacked" | mesh descriptor string
     estimates: Tuple[Tuple[str, Any], ...]  # cost-model outputs, sorted
 
@@ -141,7 +150,7 @@ class ExecutionPlan:
                if "num_vertices" in est else ""),
         ]
         for knob in ("layout", "comm", "staging", "delta", "warm",
-                     "placement"):
+                     "kernel", "placement"):
             c: PlanChoice = getattr(self, knob)
             lines.append(f"  {knob:<9} = {c.value!s:<8} [{c.source}] "
                          f"{c.reason}")
@@ -237,6 +246,8 @@ def plan_analytic(
     staging: Optional[str] = None,
     delta: Optional[bool] = None,
     warm: Optional[bool] = None,
+    kernel: Optional[str] = None,
+    backend: Optional[str] = None,
 ) -> ExecutionPlan:
     """Resolve every knob for one analytic (see module docstring rules).
 
@@ -246,7 +257,12 @@ def plan_analytic(
     ``delta_monotone`` are the deploy-time delta-chain stats
     (``GoFSStore.delta_stats``): unique-tile fraction across the
     collection and whether consecutive instances only ever tighten
-    weights — ``None`` when no delta chain was recorded."""
+    weights — ``None`` when no delta chain was recorded.
+
+    ``backend`` — the jax platform the session dispatches to (the
+    session passes ``repro.kernels.semiring_spmm.ops.resolved_backend``'s
+    cached probe); it drives the ``kernel`` knob's auto rule.  ``None``
+    is treated as not-TPU (kernel off)."""
     from repro.dist.collectives import boundary_exchange_bytes
     from repro.launch.mesh import recommended_comm
 
@@ -367,6 +383,28 @@ def plan_analytic(
                            "warm min-plus seed could lock in a stale "
                            "shorter path")
 
+    # ---- kernel ----------------------------------------------------------
+    from repro.core.superstep import KERNEL_MODES
+
+    if kernel is not None:
+        assert kernel in KERNEL_MODES, \
+            f"kernel={kernel!r}; pick from {KERNEL_MODES}"
+        kn = override(kernel)
+    elif backend != "tpu":
+        kn = choice("off", f"jax backend {backend or 'unknown'!s} != tpu — "
+                           f"the jnp oracle path is the native lowering; "
+                           f"interpreted Pallas only checks semantics")
+    elif occupancy is not None and occupancy <= SPARSE_OCCUPANCY_MAX:
+        kn = choice("fused",
+                    f"tpu + recorded occupancy {occupancy:.1%} <= "
+                    f"{SPARSE_OCCUPANCY_MAX:.0%} — fused superstep kernel "
+                    f"walks the packed active tiles with VMEM-resident "
+                    f"state, double-buffered DMA, in-kernel halt vote")
+    else:
+        kn = choice("spmv",
+                    "tpu, dense-regime tiles — per-stage SpMV kernel; "
+                    "template walks gain little from fusing the vote")
+
     # ---- placement -------------------------------------------------------
     if mesh is None:
         pl = choice("stacked", "no mesh — partitions stacked on one "
@@ -434,6 +472,7 @@ def plan_analytic(
         staging=st,
         delta=dl,
         warm=wm,
+        kernel=kn,
         placement=pl,
         estimates=tuple(sorted(estimates.items())),
     )

@@ -266,7 +266,8 @@ class PlanContext:
         pattern = pattern or self.plan.pattern
         merge = merge if merge is not None else (
             self.plan.merge if pattern == "eventually" else None)
-        engine = self.session._engine(self.plan.graph, self.plan.comm.value)
+        engine = self.session._engine(self.plan.graph, self.plan.comm.value,
+                                      self.plan.kernel.value)
         spec = RunSpec(program, pattern, x0=x0, merge=merge)
         return self.session._dispatch_specs(engine, [spec], staged)[0]
 
@@ -292,7 +293,7 @@ class GopherSession:
         mesh=None,
         data_axis: str = "data",
         model_axes: Tuple[str, ...] = ("model",),
-        use_pallas: bool = False,
+        use_pallas=None,
         bg: Optional[BlockedGraph] = None,
         src: Optional[np.ndarray] = None,
         dst: Optional[np.ndarray] = None,
@@ -306,12 +307,17 @@ class GopherSession:
         self.mesh = mesh
         self.data_axis = data_axis
         self.model_axes = tuple(model_axes)
+        # kernel-mode policy: None -> the planner's auto rule picks
+        # off/spmv/fused per plan from the jax backend and recorded
+        # occupancy; anything else (bool, mode string, (mode, interpret)
+        # tuple — see repro.core.superstep.kernel_mode) is a session-wide
+        # override recorded on every plan.
         self.use_pallas = use_pallas
         self.store: Optional[GoFSStore] = None
         self.tsg: Optional[TimeSeriesGraph] = None
         self._weights = dict(weights or {})
         self._vertex_attrs = dict(vertex_attrs or {})
-        self._engines: Dict[Tuple[str, str], TemporalEngine] = {}
+        self._engines: Dict[Tuple[str, str, str], TemporalEngine] = {}
         self._bg_variants: Dict[str, BlockedGraph] = {}
         self._w_cache: Dict[Tuple, np.ndarray] = {}
         self._activity_cache: Dict[Tuple, Tuple] = {}
@@ -396,21 +402,31 @@ class GopherSession:
         staging: Optional[str] = None,
         delta: Optional[bool] = None,
         warm: Optional[bool] = None,
+        kernel: Optional[str] = None,
         **params,
     ) -> ExecutionPlan:
         """Resolve ``analytic`` into a costed :class:`ExecutionPlan`.
 
-        Every knob (``layout``/``comm``/``staging``/``delta``/``warm``,
-        plus ``pattern`` and ``merge`` for program analytics) defaults to
+        Every knob (``layout``/``comm``/``staging``/``delta``/``warm``/
+        ``kernel``, plus ``pattern`` and ``merge`` for program analytics)
+        defaults to
         the planner's auto-selection — pass a value to override; the plan
         records which happened and why (``plan.explain()``).  Planning
         never reads a value slice: activity comes from
         deployment-recorded tile maps (stores) or an in-memory scan
         (arrays); delta/warm read the deploy-recorded chain summary
         (unique-tile ratio, monotonicity) from the same tile-map slice."""
+        from repro.core.comm import COMM_BACKENDS
+        from repro.core.superstep import KERNEL_MODES, kernel_mode
+        from repro.kernels.semiring_spmm.ops import resolved_backend
+
         assert layout in (None, "dense", "sparse"), layout
-        assert comm in (None, "dense", "ring", "host"), comm
+        assert comm in (None,) + COMM_BACKENDS, comm
         assert staging in (None, "sync", "async"), staging
+        assert kernel in (None,) + KERNEL_MODES, kernel
+        if kernel is None and self.use_pallas is not None:
+            # session-wide kernel policy becomes a per-plan override
+            kernel = kernel_mode(self.use_pallas)[0]
         a = get_analytic(analytic)
         resolved = a.resolve_params(params)
         # activity only matters to the layout decision; an override skips
@@ -437,6 +453,7 @@ class GopherSession:
             pattern=pattern, merge=merge,
             layout=layout, comm=comm, staging=staging,
             delta=delta, warm=warm,
+            kernel=kernel, backend=resolved_backend(),
         )
 
     def explain(self, analytic: str, **kw) -> str:
@@ -484,15 +501,16 @@ class GopherSession:
         groups: Dict[Tuple, List[int]] = {}
         for i, (a, p) in enumerate(zip(resolved, plans)):
             if not a.composite:
-                key = self._main_key(a, p.layout.value) + (p.comm.value,)
+                key = self._main_key(a, p.layout.value) + (
+                    p.comm.value, p.kernel.value)
                 groups.setdefault(key, []).append(i)
-        # a staging key split across comm backends must stage via the
-        # cache (a private stream per group would re-read the disk)
+        # a staging key split across comm/kernel backends must stage via
+        # the cache (a private stream per group would re-read the disk)
         skey_groups: Dict[Tuple, int] = {}
         for key in groups:
-            skey_groups[key[:-1]] = skey_groups.get(key[:-1], 0) + 1
+            skey_groups[key[:-2]] = skey_groups.get(key[:-2], 0) + 1
         for key, idxs in groups.items():
-            skey, comm = key[:-1], key[-1]
+            skey, comm, kern = key[:-2], key[-2], key[-1]
             graph, attr, transform, zero, layout = skey
             specs = []
             for i in idxs:
@@ -502,7 +520,7 @@ class GopherSession:
                 specs.append(RunSpec(program, plans[i].pattern,
                                      merge=plans[i].merge,
                                      warm_start=bool(plans[i].warm.value)))
-            engine = self._engine(graph, comm)
+            engine = self._engine(graph, comm, kern)
             a0 = resolved[idxs[0]]
             # row-wise transforms stream too: the derived weights compute
             # chunk-by-chunk on the prefetch pool (registry `rowwise`)
@@ -722,7 +740,8 @@ class GopherSession:
         program = st.program
         if program is None:
             program = a.make_program(ctx, **plan.param_dict)
-        engine = self._engine(plan.graph, plan.comm.value)
+        engine = self._engine(plan.graph, plan.comm.value,
+                              plan.kernel.value)
         warm = bool(plan.warm.value) and program.kind == "fixpoint"
         if plan.pattern == "sequential":
             spec = RunSpec(program, plan.pattern,
@@ -774,13 +793,20 @@ class GopherSession:
         return engine.run_many(specs, tiles=staged.tiles,
                                btiles=staged.btiles)
 
-    def _engine(self, graph: str, comm: str) -> TemporalEngine:
-        key = (graph, comm)
+    def _engine(self, graph: str, comm: str,
+                kernel: str = "off") -> TemporalEngine:
+        key = (graph, comm, kernel)
         if key not in self._engines:
+            # the plan's kernel knob already folded in any session-wide
+            # use_pallas override; a (mode, interpret) tuple additionally
+            # forces the interpret flag through to the kernels
+            up = kernel
+            if isinstance(self.use_pallas, tuple):
+                up = (kernel, self.use_pallas[1])
             self._engines[key] = TemporalEngine(
                 self._blocked(graph), mesh=self.mesh,
                 data_axis=self.data_axis, model_axes=self.model_axes,
-                use_pallas=self.use_pallas, comm=comm,
+                use_pallas=up, comm=comm,
             )
         return self._engines[key]
 

@@ -14,6 +14,32 @@ from repro.core.semiring import Semiring
 from repro.kernels.semiring_spmm.kernel import spmv_blocked_pallas
 from repro.kernels.semiring_spmm.ref import spmv_blocked_ref
 
+# Backend probe cache: ``jax.default_backend()`` walks the initialized
+# backend registry, which is not free on the dispatch path that every
+# sweep of every superstep goes through.  The backend cannot change
+# within a process, so resolve it once on first use (not at import —
+# importing this module must never initialize jax device state; the
+# multi-device subprocess harnesses set XLA_FLAGS first and import
+# later).  Tests and the engine can still force interpret mode per call.
+_DEFAULT_INTERPRET: bool | None = None
+
+
+def resolved_backend() -> str:
+    """The jax platform this process dispatches to, probed once."""
+    global _DEFAULT_INTERPRET
+    backend = jax.default_backend()
+    if _DEFAULT_INTERPRET is None:
+        _DEFAULT_INTERPRET = backend != "tpu"
+    return backend
+
+
+def default_interpret() -> bool:
+    """Whether Pallas kernels should run interpreted (cached probe)."""
+    global _DEFAULT_INTERPRET
+    if _DEFAULT_INTERPRET is None:
+        _DEFAULT_INTERPRET = jax.default_backend() != "tpu"
+    return _DEFAULT_INTERPRET
+
 
 def spmv_blocked(
     tiles: jax.Array,  # (T, B, B) — dense template or packed active tiles
@@ -34,7 +60,7 @@ def spmv_blocked(
     nob = n_out_blocks if n_out_blocks is not None else x.shape[0] // tiles.shape[1]
     if use_pallas:
         if interpret is None:
-            interpret = jax.default_backend() != "tpu"
+            interpret = default_interpret()
         return spmv_blocked_pallas(
             tiles, rows, cols, x,
             sr_name=sr.name, n_out_blocks=nob, interpret=interpret, nnz=nnz,

@@ -1,0 +1,13 @@
+"""Fused-superstep Pallas kernel: sweep + semiring combine + halt vote.
+
+One ``pallas_call`` executes the local compute of a BSP superstep stage
+for EVERY partition: the blocked SpMV walk over the (col-sorted, packed)
+tile list, the semiring combine into the output state, and the
+vote-to-halt comparison against the superstep-start state.  See
+``kernel.py`` for the grid layout and the manual double-buffered tile
+DMA, ``ref.py`` for the jnp oracle the kernel is bitwise-tested against
+(min-plus), and ``ops.py`` for the dispatching wrapper used by
+``repro.core.superstep``.
+"""
+from repro.kernels.semiring_superstep.ops import fused_step  # noqa: F401
+from repro.kernels.semiring_superstep.ref import fused_step_ref  # noqa: F401

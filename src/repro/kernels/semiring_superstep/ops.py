@@ -1,0 +1,47 @@
+"""Dispatching wrapper for the fused superstep stage.
+
+``fused_step`` mirrors ``repro.kernels.semiring_spmm.ops.spmv_blocked``:
+one entry point that routes to the Pallas kernel (``use_pallas=True``)
+or the jnp oracle, with ``interpret`` resolved through the same cached
+backend probe the SpMV kernel uses (resolved once per process, never in
+the hot dispatch loop).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import Semiring
+from repro.kernels.semiring_spmm.ops import default_interpret
+from repro.kernels.semiring_superstep.kernel import fused_step_pallas
+from repro.kernels.semiring_superstep.ref import fused_step_ref
+
+
+def fused_step(
+    tiles: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    x_in: jax.Array,
+    x_comb: jax.Array,
+    x_ref: jax.Array,
+    vmask: jax.Array,
+    sr: Semiring,
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """One fused sweep/consume stage.  Returns ``(x_out, changed)``.
+
+    ``vmask`` may be bool; the kernel consumes a 0/1 float32 mask.
+    """
+    mask = vmask.astype(jnp.float32) if vmask.dtype != jnp.float32 \
+        else vmask
+    if not use_pallas:
+        return fused_step_ref(tiles, rows, cols, x_in, x_comb, x_ref,
+                              mask, sr)
+    if interpret is None:
+        interpret = default_interpret()
+    return fused_step_pallas(tiles, rows, cols, x_in, x_comb, x_ref,
+                             mask, sr_name=sr.name, interpret=interpret)

@@ -1,0 +1,55 @@
+"""jnp oracle for the fused superstep step (parity tier for the kernel).
+
+Computes, for every partition at once,
+
+    y      = A_p^T x_in        (blocked SpMV over the packed tile list)
+    x_out  = sr.add(x_comb, y)  with untouched blocks left at x_comb
+    changed[p] = any(vmask_p & (x_out_p != x_ref_p))
+
+which is exactly what ``kernel.fused_step_pallas`` fuses into one
+``pallas_call``.  The min-plus path is bitwise-identical to the kernel:
+``min`` is exactly associative/commutative, and per-tile partials combine
+in an order-insensitive way.  The plus-mul path reassociates the per-tile
+dot accumulation (segment-sum here vs sequential walk in the kernel) —
+callers compare it with a float tolerance.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import Semiring
+from repro.kernels.semiring_spmm.ref import spmv_blocked_ref
+
+
+def fused_step_ref(
+    tiles: jax.Array,  # (P, T, B, B)
+    rows: jax.Array,  # (P, T) int32, -1 = pad
+    cols: jax.Array,  # (P, T) int32, -1 = pad
+    x_in: jax.Array,  # (Pin, NVBin, B) — Pin == P, or 1 (shared boundary)
+    x_comb: jax.Array,  # (P, NVB, B) combine baseline (superstep state)
+    x_ref: jax.Array,  # (P, NVB, B) halt-vote reference (superstep start)
+    vmask: jax.Array,  # (P, NVB, B) valid-vertex mask (bool or 0/1 float)
+    sr: Semiring,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns ``(x_out (P, NVB, B), changed (P, 1) int32)``."""
+    P, _, nvb, B = (tiles.shape[0], tiles.shape[1],
+                    x_comb.shape[1], x_comb.shape[2])
+
+    def one(tiles_p, rows_p, cols_p, xin_p, xcomb_p):
+        y = spmv_blocked_ref(tiles_p, rows_p, cols_p,
+                             xin_p.reshape(-1), sr, n_out_blocks=nvb)
+        # untouched output blocks carry sr.zero out of the SpMV, and
+        # add(x, zero) == x — the baseline survives untouched blocks
+        return sr.add(xcomb_p.reshape(-1), y).reshape(nvb, B)
+
+    xin_axis = None if x_in.shape[0] == 1 else 0
+    xin = x_in[0] if x_in.shape[0] == 1 else x_in
+    x_out = jax.vmap(one, in_axes=(0, 0, 0, xin_axis, 0))(
+        tiles, rows, cols, xin, x_comb)
+    live = vmask != 0 if vmask.dtype != jnp.bool_ else vmask
+    diff = jnp.logical_and(live, x_out != x_ref)
+    changed = jnp.any(diff.reshape(P, -1), axis=1)
+    return x_out, changed.astype(jnp.int32)[:, None]

@@ -41,6 +41,13 @@ def mesh_dp_axes(mesh: Mesh) -> Tuple[str, ...]:
 # ring's P-1 full-buffer circulations even across pods.
 RING_MIN_CUT_BYTES = 1 << 16
 
+# Above ~1 MiB of cut payload the circulate ring's own (P-1)×NB traffic
+# becomes the bandwidth bottleneck; the reduce-scatter + all-gather ring
+# ("ring-rs") halves per-device bytes to 2(P-1)/P×NB while keeping every
+# transfer neighbor-to-neighbor, and its doubled hop count is noise at
+# this payload size.
+RING_RS_MIN_CUT_BYTES = 1 << 20
+
 
 def recommended_comm(
     mesh: Optional[Mesh], model_axes: Tuple[str, ...] = ("model",),
@@ -64,6 +71,10 @@ def recommended_comm(
 
     * no mesh                      -> ``"host"``  (mesh-free CPU cluster:
       combine per-partition buffers on the host, no shard_map at all)
+    * ``pod`` among the exchange axes and the cut huge
+      (``>= RING_RS_MIN_CUT_BYTES``) -> ``"ring-rs"`` (the exchange is
+      bandwidth-bound even over the ring; the reduce-scatter + all-gather
+      schedule halves per-device bytes at double the hop count)
     * ``pod`` among the exchange axes and the cut large (or unknown)
       -> ``"ring"`` (the combine crosses DCI; neighbor-to-neighbor hops
       keep each slow link at one buffer/hop)
@@ -79,5 +90,8 @@ def recommended_comm(
         if (boundary_nnz is not None
                 and boundary_nnz * 4 < RING_MIN_CUT_BYTES):
             return "dense"
+        if (boundary_nnz is not None
+                and boundary_nnz * 4 >= RING_RS_MIN_CUT_BYTES):
+            return "ring-rs"
         return "ring"
     return "dense"

@@ -222,9 +222,11 @@ def test_boundary_exchange_cost_model():
     nb, n = 1000, 8
     dense = boundary_exchange_bytes(nb, n, "dense")
     ring = boundary_exchange_bytes(nb, n, "ring")
+    rs = boundary_exchange_bytes(nb, n, "ring-rs")
     host = boundary_exchange_bytes(nb, n, "host")
     assert dense["kind"] == "all-reduce"
     assert ring["kind"] == "collective-permute"
+    assert rs["kind"] == "collective-permute"
     assert host["kind"] == "host-gather"
     # ring: full buffer on each of n-1 hops; dense: 2(n-1)/n per device
     assert ring["hops"] == n - 1
@@ -232,6 +234,11 @@ def test_boundary_exchange_cost_model():
     assert dense["bytes_per_device"] == pytest.approx(2 * (n - 1) / n * nb * 4)
     # the ring trades MORE bytes for neighbor-only transfers
     assert ring["bytes_per_device"] > dense["bytes_per_device"]
+    # ring-rs: bandwidth-optimal — the all-reduce's byte volume at double
+    # the circulate ring's hop count, still strictly neighbor-to-neighbor
+    assert rs["hops"] == 2 * (n - 1)
+    assert rs["bytes_per_device"] == pytest.approx(dense["bytes_per_device"])
+    assert rs["bytes_per_device"] < ring["bytes_per_device"]
     with pytest.raises(ValueError, match="unknown comm backend"):
         boundary_exchange_bytes(nb, n, "nope")
 
@@ -265,13 +272,17 @@ mesh = jax.make_mesh((2, 4), ("data", "model"))
 prog = min_plus_program("sssp", init=source_init(0))
 eng_d = TemporalEngine(bg, mesh=mesh)
 eng_r = TemporalEngine(bg, mesh=mesh, comm="ring")
+eng_rs = TemporalEngine(bg, mesh=mesh, comm="ring-rs")
 
 # min-plus: bitwise parity on every pattern (including data-sharded
-# instances, where the ring's vote syncs trip counts over the data axis)
+# instances, where the ring's vote syncs trip counts over the data axis);
+# both ring variants — circulate and reduce-scatter + all-gather
 for pattern in ("sequential", "independent"):
     rd = eng_d.run(prog, w, pattern=pattern)
     rr = eng_r.run(prog, w, pattern=pattern)
+    rrs = eng_rs.run(prog, w, pattern=pattern)
     assert np.array_equal(rd.values, rr.values), pattern
+    assert np.array_equal(rd.values, rrs.values), pattern
 
 # single-instance probe: replicated-instance fallback, ring still exact
 r1d = eng_d.run(prog, w[:1], pattern="independent")
@@ -302,10 +313,14 @@ def kinds(eng):
                            *eng._struct).compile().as_text()
     return collective_bytes_by_kind(hlo)
 
-kd, kr = kinds(eng_d), kinds(eng_r)
+kd, kr, krs = kinds(eng_d), kinds(eng_r), kinds(eng_rs)
 assert "all-reduce" in kd and "collective-permute" not in kd, kd
 assert "collective-permute" in kr, kr
 assert kr.get("all-reduce", 0) <= 8, kr  # just the halt-vote flag
+assert "collective-permute" in krs, krs
+assert krs.get("all-reduce", 0) <= 8, krs
+# the rs+ag schedule moves strictly fewer permute bytes than circulate
+assert krs["collective-permute"] < kr["collective-permute"], (krs, kr)
 print("COMM MESH OK")
 """
 

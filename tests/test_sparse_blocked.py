@@ -217,6 +217,196 @@ def test_engine_pallas_walk_bitwise(env):
 
 
 # ---------------------------------------------------------------------------
+# Fused superstep kernel (kernels/semiring_superstep): the whole local
+# stage — tile walk, semiring combine, halt vote — as ONE pallas_call
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern", ["sequential", "independent",
+                                     "eventually"])
+@pytest.mark.parametrize("layout", ["dense", "sparse"])
+def test_fused_bitwise_all_patterns(env, pattern, layout):
+    """min-plus: fused superstep kernel == per-stage SpMV kernel == jnp
+    oracle, BITWISE (values, final state, AND superstep counts — the
+    in-kernel halt vote must fire on exactly the same superstep) across
+    all three iBSP patterns x both layouts, interpret mode."""
+    tmpl, bg, wb, live = env
+    w2 = wb[:3]
+    prog = min_plus_program("sssp", init=source_init(0), max_supersteps=16)
+    kw = dict(merge="mean") if pattern == "eventually" else {}
+    lay = {} if layout == "dense" else dict(layout="sparse")
+    ref = TemporalEngine(bg, **lay).run(prog, w2, pattern=pattern, **kw)
+    for up in ("spmv", "fused"):
+        got = TemporalEngine(bg, use_pallas=up, **lay).run(
+            prog, w2, pattern=pattern, **kw)
+        assert np.array_equal(ref.values, got.values), (up, pattern, layout)
+        assert np.array_equal(ref.final, got.final), (up, pattern, layout)
+        assert np.array_equal(ref.stats["supersteps"],
+                              got.stats["supersteps"]), (up, pattern, layout)
+        if pattern == "eventually":
+            assert np.array_equal(ref.merged, got.merged), (up, layout)
+
+
+def test_fused_async_staging_bitwise(env):
+    """Fused kernel under the async sparse prefetch pipeline."""
+    tmpl, bg, wb, live = env
+    prog = min_plus_program("sssp", init=source_init(0))
+    ref = TemporalEngine(bg).run(prog, wb, pattern="sequential")
+    eng = TemporalEngine(bg, use_pallas="fused", layout="sparse",
+                         staging="async", chunk_instances=2)
+    got = eng.run(prog, wb, pattern="sequential")
+    assert np.array_equal(ref.values, got.values)
+
+
+def test_fused_query_axis_bitwise(env):
+    """The query axis vmaps the fused pallas_call over Q sources: batched
+    == oracle == per-source runs, bitwise."""
+    from repro.core.engine import sources_init
+
+    tmpl, bg, wb, live = env
+    w2 = wb[:2]
+    sources = [0, 7, 23]
+    progs = {s: min_plus_program("sssp", init=source_init(s),
+                                 max_supersteps=16) for s in sources}
+    batched = min_plus_program("sssp", init=sources_init(sources),
+                               max_supersteps=16)
+    ref = TemporalEngine(bg).run(batched, w2, pattern="sequential")
+    got = TemporalEngine(bg, use_pallas="fused").run(
+        batched, w2, pattern="sequential")
+    assert np.array_equal(ref.values, got.values)
+    for q, s in enumerate(sources):
+        one = TemporalEngine(bg, use_pallas="fused").run(
+            progs[s], w2, pattern="sequential")
+        assert np.array_equal(got.values[q], one.values), s
+
+
+def test_fused_warm_start_bitwise(env):
+    """Warm-started fixpoints re-enter the fused path with a non-trivial
+    x0 — still bitwise vs the oracle warm path."""
+    tmpl, bg, wb, live = env
+    prog = min_plus_program("sssp", init=source_init(0))
+    ref = TemporalEngine(bg).run(prog, wb, pattern="independent",
+                                 warm_start=True)
+    got = TemporalEngine(bg, use_pallas="fused").run(
+        prog, wb, pattern="independent", warm_start=True)
+    assert np.array_equal(ref.values, got.values)
+    assert np.array_equal(ref.stats["supersteps"], got.stats["supersteps"])
+
+
+def test_fused_pagerank_tolerance(env):
+    """plus-mul REASSOCIATES in the fused kernel (the sequential
+    dot-product walk vs the oracle's segment sum), so PageRank parity is
+    to float tolerance, not bitwise — documented contract."""
+    tmpl, bg, wb, live = env
+    from repro.core.algorithms.pagerank import edge_weights_for_instances
+
+    pw = edge_weights_for_instances(tmpl.src, live.astype(np.float32),
+                                    tmpl.num_vertices)[:2]
+    prog = pagerank_program(tmpl.num_vertices, iters=8)
+    ref = TemporalEngine(bg).run(prog, pw, pattern="independent")
+    got = TemporalEngine(bg, use_pallas="fused").run(prog, pw,
+                                                     pattern="independent")
+    np.testing.assert_allclose(got.values, ref.values, atol=2e-6)
+
+
+def test_fused_single_pallas_call_jaxpr(env):
+    """The acceptance contract, pinned on the jaxpr: one fused local
+    stage lowers to exactly ONE pallas_call — no per-partition launch
+    loop (scan/map over partitions), and no state-sized XLA reduction
+    for the halt vote outside the kernel (the vote is the kernel's SMEM
+    output; only scalar post-processing remains)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.semiring import MIN_PLUS
+    from repro.core.superstep import (_fused_sweep_vote, _local_sweep,
+                                      device_graph)
+
+    tmpl, bg, wb, live = env
+    dg = device_graph(bg, bg.fill_local(wb[0]), bg.fill_boundary(wb[0]))
+    x = jnp.asarray(np.where(np.asarray(dg.vmask), 1.0, INF), jnp.float32)
+
+    def count(eqns, name, acc=None):
+        acc = [] if acc is None else acc
+        for e in eqns:
+            if e.primitive.name == name:
+                acc.append(e)
+            for sub in e.params.values():
+                if hasattr(sub, "jaxpr"):
+                    count(sub.jaxpr.eqns, name, acc)
+        return acc
+
+    jx = jax.make_jaxpr(
+        lambda xx: _fused_sweep_vote(xx, dg, MIN_PLUS, True))(x)
+    assert len(count(jx.jaxpr.eqns, "pallas_call")) == 1
+    # no partition-axis launch loop around the kernel
+    assert count(jx.jaxpr.eqns, "scan") == []
+    # the halt vote never materializes as a state-sized XLA reduce: every
+    # reduce left in the jaxpr is over <= P elements (the per-partition
+    # changed flags), not over the (P, Vp) state
+    state_elems = int(np.prod(x.shape))
+    for prim in ("reduce_or", "reduce_max", "reduce_min", "reduce_and"):
+        for e in count(jx.jaxpr.eqns, prim):
+            n_in = int(np.prod(e.invars[0].aval.shape))
+            assert n_in <= dg.n_parts, (prim, e.invars[0].aval.shape)
+    # contrast: the per-stage spmv path needs a separate state-sized vote
+    jx_spmv = jax.make_jaxpr(
+        lambda xx: _local_sweep(xx, dg, MIN_PLUS, ("spmv", True)))(x)
+    assert len(count(jx_spmv.jaxpr.eqns, "pallas_call")) >= 1
+
+
+def test_kernel_mode_resolution():
+    """kernel_mode maps every accepted use_pallas spelling to a
+    (mode, interpret) pair and rejects unknown modes."""
+    from repro.core.superstep import kernel_mode
+
+    assert kernel_mode(None) == ("off", None)
+    assert kernel_mode(False) == ("off", None)
+    assert kernel_mode(True) == ("spmv", None)
+    assert kernel_mode("fused") == ("fused", None)
+    assert kernel_mode(("fused", True)) == ("fused", True)
+    with pytest.raises(ValueError, match="kernel mode"):
+        kernel_mode("warp")
+
+
+def test_planner_kernel_auto_selection(env):
+    """Planner kernel knob: off on non-TPU backends, fused for TPU +
+    sparse-regime occupancy, spmv for TPU dense; overrides win."""
+    from repro.gopher import GopherSession, get_analytic
+    from repro.gopher.planner import plan_analytic
+
+    tmpl, bg, wb, live = env
+    sess = GopherSession.from_blocked(bg, weights={"latency": wb})
+    # this process runs on CPU: auto -> off, recorded on the plan
+    p = sess.plan("sssp", source=0)
+    assert p.kernel.value == "off" and p.kernel.source == "auto"
+    assert "kernel" in p.explain()
+    # session-wide use_pallas becomes a per-plan override
+    s2 = GopherSession.from_blocked(bg, weights={"latency": wb},
+                                    use_pallas="fused")
+    p2 = s2.plan("sssp", source=0)
+    assert p2.kernel.value == "fused" and p2.kernel.source == "override"
+    # and the override actually reaches the engine the plan runs on
+    r_auto = sess.run(p)
+    r_fused = s2.run(p2)
+    assert np.array_equal(r_auto.engine.values, r_fused.engine.values)
+    # TPU rules, simulated through plan_analytic's backend input
+    a = get_analytic("sssp")
+    common = dict(bg=bg, mesh=None, model_axes=("model",),
+                  store_backed=False, num_instances=2)
+    low = plan_analytic(a, {"source": 0}, occupancy=0.1,
+                        sparse_buckets=None, backend="tpu", **common)
+    assert low.kernel.value == "fused"
+    high = plan_analytic(a, {"source": 0}, occupancy=0.9,
+                         sparse_buckets=None, backend="tpu", **common)
+    assert high.kernel.value == "spmv"
+    forced = plan_analytic(a, {"source": 0}, occupancy=0.9,
+                           sparse_buckets=None, backend="tpu",
+                           kernel="off", **common)
+    assert forced.kernel.value == "off"
+    assert forced.kernel.source == "override"
+
+
+# ---------------------------------------------------------------------------
 # GoFS: recorded per-pack tile maps -> packed staging
 # ---------------------------------------------------------------------------
 
@@ -359,6 +549,8 @@ def test_bench_check_gate(tmp_path):
         "serving": {"throughput_ratio": 6.0, "restaged_bytes_repeat": 0,
                     "restaging_passes_repeat": 0},
         "streaming_ingest": {"speedup": 12.0, "incremental_steps": 4},
+        "fused_superstep": {"fused_pallas_calls": 1, "state_vote_reduces": 0,
+                            "eqn_ratio": 1.4},
     }
     p = str(tmp_path / "base.json")
     with open(p, "w") as f:
@@ -372,6 +564,16 @@ def test_bench_check_gate(tmp_path):
     bad2 = copy.deepcopy(base)
     bad2["sparse"]["occupancy"] = 0.5
     assert any("occupancy" in v for v in check_against_baseline(bad2, p))
+    # the fused-kernel structural gates are deterministic too: a second
+    # pallas_call or an escaped state-sized reduce is a fusion regression
+    bad3 = copy.deepcopy(base)
+    bad3["fused_superstep"]["fused_pallas_calls"] = 2
+    assert any("fused_pallas_calls" in v
+               for v in check_against_baseline(bad3, p))
+    bad4 = copy.deepcopy(base)
+    bad4["fused_superstep"]["state_vote_reduces"] = 1
+    assert any("state_vote_reduces" in v
+               for v in check_against_baseline(bad4, p))
     # noise-dominated rows gate on the absolute floor only: a big swing vs
     # baseline passes as long as the optimization clearly still exists
     noisy = copy.deepcopy(base)
@@ -433,6 +635,22 @@ assert np.array_equal(ra.values, rs.values)
 # ring comm backend with sparse tiles (comm is layout-agnostic)
 eng_r = TemporalEngine(bg, mesh=mesh, layout="sparse", comm="ring")
 assert np.array_equal(eng_r.run(prog, wb, pattern="independent").values,
+                      rs.values)
+# fused superstep kernel (interpret) inside shard_map: both layouts,
+# sequential AND independent, still bitwise vs the stacked oracle
+for lay in ({}, dict(layout="sparse")):
+    eng_f = TemporalEngine(bg, mesh=mesh, use_pallas="fused", **lay)
+    for pattern in ("sequential", "independent"):
+        rf = eng_f.run(prog, wb, pattern=pattern)
+        ro = eng_s.run(prog, wb, pattern=pattern)
+        assert np.array_equal(rf.values, ro.values), (lay, pattern)
+        assert np.array_equal(rf.stats["supersteps"],
+                              ro.stats["supersteps"]), (lay, pattern)
+# fused kernel x ring-rs comm: the v2 exchange composes with the fused
+# local stage (min-plus stays bitwise end to end)
+eng_frs = TemporalEngine(bg, mesh=mesh, layout="sparse",
+                         use_pallas="fused", comm="ring-rs")
+assert np.array_equal(eng_frs.run(prog, wb, pattern="independent").values,
                       rs.values)
 print("SPARSE MESH OK")
 """
