@@ -697,8 +697,14 @@ def run(check: bool = False) -> None:
     # ---- mesh: stacked vs temporal-parallel shard_map (forced devices) ----
     results["mesh"] = _mesh_rows()
 
+    # ---- cluster: 2-process shard-local staging + inter-process gather ----
+    results["cluster_scaling"] = _cluster_scaling_row()
+
     if check:
         failures = check_against_baseline(results)
+        if "error" in results["cluster_scaling"]:
+            failures.append("cluster_scaling: 2-process parity run failed — "
+                            + results["cluster_scaling"]["error"][-200:])
         for f_ in failures:
             emit("temporal/check_failed", 0.0, f_)
         if failures:
@@ -935,6 +941,13 @@ THRESHOLDS = {
     # is deterministic (collection size / batch)
     ("streaming_ingest", "speedup"): ("min", 3.0, 0.5),
     ("streaming_ingest", "incremental_steps"): ("min", 4.0, None),
+    # 2-process cluster lane: deterministic (shard-derived) — every host
+    # must materialize strictly less than the single-process staging cost
+    # (exactly 1/2 with 2 procs on an even partition split; cap leaves
+    # headroom for odd partition counts where low ranks take the
+    # remainder).  Parity itself is asserted inside the subprocess — a
+    # failed run surfaces as an explicit --check failure, not a row.
+    ("cluster_scaling", "max_per_host_fraction"): ("max", 0.75, None),
 }
 
 
@@ -1097,6 +1110,54 @@ def _comm_mesh_rows() -> dict:
     emit("temporal/comm_ring_mesh", rows["ring_s"] * 1e6,
          f"ring_vs_dense={rows['ring_vs_dense']:.2f}x")
     return rows
+
+
+def _cluster_scaling_row() -> dict:
+    """2-process localhost cluster run (shard-local staging + real
+    inter-process gather) through ``repro.launch.cluster_graph --check``:
+    the subprocess asserts bitwise parity with the single-process run and
+    per-host staged bytes below it, then prints the byte report."""
+    import tempfile
+    import time as _time_mod
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    with tempfile.TemporaryDirectory() as td:
+        t0 = _time_mod.perf_counter()
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.cluster_graph",
+             "--num-processes", "2", "--apps", "sssp,pagerank",
+             "--size", "tiny", "--deploy", os.path.join(td, "gofs"),
+             "--out", os.path.join(td, "out"), "--check"],
+            env=env, capture_output=True, text=True, timeout=900,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        wall = _time_mod.perf_counter() - t0
+    if r.returncode != 0:
+        emit("temporal/cluster_scaling_failed", 0.0, r.stderr.strip()[-200:])
+        return {"error": (r.stdout + r.stderr).strip()[-2000:]}
+    line = next(l for l in r.stdout.splitlines() if "parity OK:" in l)
+    report = json.loads(line.split("parity OK:", 1)[1])
+    row = {"num_processes": 2, "apps": sorted(report),
+           "parity": "bitwise", "wall_s": wall,
+           "max_per_host_fraction": 0.0}
+    for app, st in report.items():
+        single = st["single_staged_bytes"]
+        hosts = st["per_host_staged_bytes"]
+        row[app] = {
+            "single_staged_bytes": single,
+            "per_host_staged_bytes": hosts,
+            "per_host_fraction": [b / max(single, 1) for b in hosts],
+        }
+        frac = max(b / max(single, 1) for b in hosts)
+        row["max_per_host_fraction"] = max(
+            row["max_per_host_fraction"], frac)
+        emit(f"temporal/cluster_{app}_staged_frac", frac * 100.0,
+             f"per-host bytes / single-process bytes, 2 procs")
+    return row
 
 
 def _mesh_rows() -> dict:

@@ -199,19 +199,39 @@ class BlockedGraph:
     # One flat scatter for ALL instances at once — replaces the per-instance
     # fill_local + np.stack Python loop in the temporal drivers (the edge ->
     # tile-slot map is instance-invariant, so the instance axis broadcasts).
+    @staticmethod
+    def _part_filter(
+        parts: Tuple[int, int], part: np.ndarray, flat: np.ndarray,
+        edge_id: np.ndarray,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Restrict a fill map to the half-open partition range ``parts``,
+        rebasing partition indices to the range — the shard-local staging
+        hook (``repro.cluster.staging``): a process fills ONLY the tile
+        slots of partitions it owns into a (I, hi-lo, ...) buffer."""
+        lo, hi = parts
+        m = (part >= lo) & (part < hi)
+        return part[m] - lo, flat[m], edge_id[m]
+
     def _fill_batch(
         self, weights: np.ndarray, zero: float, part: np.ndarray,
         flat: np.ndarray, edge_id: np.ndarray, t_count: int,
         out: Optional[np.ndarray], slots_unique: bool,
+        parts: Optional[Tuple[int, int]] = None,
     ) -> np.ndarray:
         B = self.block_size
         I = weights.shape[0]
-        per_inst = self.n_parts * t_count * B * B
+        if parts is not None:
+            part, flat, edge_id = self._part_filter(parts, part, flat,
+                                                    edge_id)
+            P = parts[1] - parts[0]
+        else:
+            P = self.n_parts
+        per_inst = P * t_count * B * B
         if out is None:
             vals = np.full(I * per_inst, zero, np.float32)
         else:
             # pre-staged buffer (prefetch chunk): fill in place, no 2nd copy
-            assert out.shape == (I, self.n_parts, t_count, B, B), out.shape
+            assert out.shape == (I, P, t_count, B, B), out.shape
             assert out.dtype == np.float32 and out.flags.c_contiguous
             vals = out.reshape(-1)
             vals[...] = zero
@@ -224,7 +244,7 @@ class BlockedGraph:
         else:
             op = np.minimum if zero == INF else np.add
             op.at(vals, idx.ravel(), weights[:, edge_id].ravel())
-        return vals.reshape(I, self.n_parts, t_count, B, B)
+        return vals.reshape(I, P, t_count, B, B)
 
     def _slot_key(self, part: np.ndarray, flat: np.ndarray, t_count: int):
         return part.astype(np.int64) * (t_count * self.block_size ** 2) + flat
@@ -245,44 +265,51 @@ class BlockedGraph:
     def fill_local_batch(
         self, weights: np.ndarray, zero: float = INF,
         out: Optional[np.ndarray] = None,
+        parts: Optional[Tuple[int, int]] = None,
     ) -> np.ndarray:
         """Instance edge weights (I, E) -> local tiles (I, P, T, B, B).
 
         ``out``: optional pre-staged (I, P, T, B, B) float32 buffer filled
         in place (see ``alloc_batch_buffers``); avoids the allocation per
-        call when the prefetcher stages chunk buffers."""
+        call when the prefetcher stages chunk buffers.  ``parts``: fill
+        only the half-open partition range (shard-local staging) — the
+        result's partition axis is ``hi - lo``."""
         return self._fill_batch(
             weights, zero, self.le_part, self.le_flat, self.le_edge_id,
-            self.t_max, out, self._local_slots_unique(),
+            self.t_max, out, self._local_slots_unique(), parts=parts,
         )
 
     def fill_boundary_batch(
         self, weights: np.ndarray, zero: float = INF,
         out: Optional[np.ndarray] = None,
+        parts: Optional[Tuple[int, int]] = None,
     ) -> np.ndarray:
         """Instance edge weights (I, E) -> boundary tiles (I, P, Tb, B, B).
 
-        ``out``: optional pre-staged buffer, as in ``fill_local_batch``."""
+        ``out``/``parts``: as in ``fill_local_batch``."""
         return self._fill_batch(
             weights, zero, self.re_part, self.re_flat, self.re_edge_id,
-            self.tb_max, out, self._boundary_slots_unique(),
+            self.tb_max, out, self._boundary_slots_unique(), parts=parts,
         )
 
     def alloc_batch_buffers(
         self, max_instances: int, *,
         bucket: Optional[int] = None, bbucket: Optional[int] = None,
+        parts: Optional[Tuple[int, int]] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Allocate one reusable (local, boundary) fill-buffer pair sized
         for ``max_instances`` — the unit of the prefetcher's buffer ring.
 
         ``bucket``/``bbucket`` size the tile axes for the sparse layout's
         padded power-of-two buckets instead of the dense ``t_max``/
-        ``tb_max`` — a ``bucket/t_max`` staging-memory reduction."""
+        ``tb_max`` — a ``bucket/t_max`` staging-memory reduction.
+        ``parts`` sizes the partition axis to a shard-local range."""
         B = self.block_size
+        P = self.n_parts if parts is None else parts[1] - parts[0]
         return (
-            np.empty((max_instances, self.n_parts, bucket or self.t_max,
+            np.empty((max_instances, P, bucket or self.t_max,
                       B, B), np.float32),
-            np.empty((max_instances, self.n_parts, bbucket or self.tb_max,
+            np.empty((max_instances, P, bbucket or self.tb_max,
                       B, B), np.float32),
         )
 
@@ -295,17 +322,24 @@ class BlockedGraph:
     def _active_tiles(
         self, w: np.ndarray, zero: float, part: np.ndarray,
         flat: np.ndarray, edge_id: np.ndarray, t_count: int,
+        parts: Optional[Tuple[int, int]] = None,
     ) -> np.ndarray:
         """(I, E) weights -> (I, P, t_count) bool active-tile mask."""
         B2 = self.block_size * self.block_size
         I = w.shape[0]
-        act = np.zeros((I, self.n_parts * t_count), bool)
+        if parts is not None:
+            part, flat, edge_id = self._part_filter(parts, part, flat,
+                                                    edge_id)
+            P = parts[1] - parts[0]
+        else:
+            P = self.n_parts
+        act = np.zeros((I, P * t_count), bool)
         if len(edge_id):
             tile_key = part.astype(np.int64) * t_count + flat // B2  # (L,)
             live = w[:, edge_id] != zero  # (I, L)
             ii, ll = np.nonzero(live)
             act[ii, tile_key[ll]] = True
-        return act.reshape(I, self.n_parts, t_count)
+        return act.reshape(I, P, t_count)
 
     def pack_tile_index(
         self, act: np.ndarray, rc: np.ndarray, *,
@@ -361,12 +395,23 @@ class BlockedGraph:
         flat: np.ndarray, edge_id: np.ndarray, t_count: int,
         rc: np.ndarray, bucket: Optional[int], out: Optional[np.ndarray],
         slots_unique: bool, act: Optional[np.ndarray],
+        parts: Optional[Tuple[int, int]] = None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Packed-tile fill.  Returns (vals (I, P, K, B, B), rows (I, P, K),
         cols (I, P, K), nnz (I, P))."""
         B = self.block_size
         B2 = B * B
         I, P = w.shape[0], self.n_parts
+        if parts is not None:
+            P = parts[1] - parts[0]
+            rc = rc[parts[0]:parts[1]]
+            if act is not None and act.shape[1] == self.n_parts:
+                act = act[:, parts[0]:parts[1]]
+            elif act is None:
+                act = self._active_tiles(w, zero, part, flat, edge_id,
+                                         t_count, parts=parts)
+            part, flat, edge_id = self._part_filter(parts, part, flat,
+                                                    edge_id)
         if act is None:
             act = self._active_tiles(w, zero, part, flat, edge_id, t_count)
         assert act.shape == (I, P, t_count), act.shape
@@ -402,6 +447,7 @@ class BlockedGraph:
         self, weights: np.ndarray, zero: float = INF, *,
         bucket: Optional[int] = None, out: Optional[np.ndarray] = None,
         act: Optional[np.ndarray] = None,
+        parts: Optional[Tuple[int, int]] = None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Instance edge weights (I, E) -> packed local tiles.
 
@@ -409,24 +455,26 @@ class BlockedGraph:
         nnz (I, P)) with K = ``bucket`` or the pow2 bucket of the batch's
         max active-tile count.  ``act``: precomputed (I, P, T) active-tile
         mask (e.g. a GoFS-recorded per-pack tile map); ``out``: pre-staged
-        buffer as in ``fill_local_batch``."""
+        buffer as in ``fill_local_batch``; ``parts``: shard-local
+        partition range, as in ``fill_local_batch``."""
         return self._fill_batch_sparse(
             np.asarray(weights, np.float32), zero, self.le_part,
             self.le_flat, self.le_edge_id, self.t_max, self.tiles_rc,
-            bucket, out, self._local_slots_unique(), act,
+            bucket, out, self._local_slots_unique(), act, parts=parts,
         )
 
     def fill_boundary_batch_sparse(
         self, weights: np.ndarray, zero: float = INF, *,
         bucket: Optional[int] = None, out: Optional[np.ndarray] = None,
         act: Optional[np.ndarray] = None,
+        parts: Optional[Tuple[int, int]] = None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Instance edge weights (I, E) -> packed boundary tiles (see
         ``fill_local_batch_sparse``)."""
         return self._fill_batch_sparse(
             np.asarray(weights, np.float32), zero, self.re_part,
             self.re_flat, self.re_edge_id, self.tb_max, self.btiles_rc,
-            bucket, out, self._boundary_slots_unique(), act,
+            bucket, out, self._boundary_slots_unique(), act, parts=parts,
         )
 
     def active_tile_maps(
@@ -466,16 +514,21 @@ class BlockedGraph:
         bucket: Optional[int] = None, bbucket: Optional[int] = None,
         act_local: Optional[np.ndarray] = None,
         act_boundary: Optional[np.ndarray] = None,
+        parts: Optional[Tuple[int, int]] = None,
     ) -> SparseBlocked:
-        """(I, E) edge weights -> :class:`SparseBlocked` packed batch."""
+        """(I, E) edge weights -> :class:`SparseBlocked` packed batch.
+
+        ``parts=(lo, hi)`` stages only that partition range (shard-local
+        cluster staging) — tiles then carry a ``hi - lo`` partition axis.
+        """
         w = np.asarray(weights, np.float32)
         if w.ndim == 1:
             w = w[None]
         tiles, rows, cols, nnz = self.fill_local_batch_sparse(
-            w, zero=zero, bucket=bucket, act=act_local,
+            w, zero=zero, bucket=bucket, act=act_local, parts=parts,
         )
         btiles, brows, bcols, bnnz = self.fill_boundary_batch_sparse(
-            w, zero=zero, bucket=bbucket, act=act_boundary,
+            w, zero=zero, bucket=bbucket, act=act_boundary, parts=parts,
         )
         return SparseBlocked(
             block_size=self.block_size,

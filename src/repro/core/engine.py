@@ -456,6 +456,7 @@ class TemporalEngine:
         chunk_instances: Optional[int] = None,
         comm: Union[str, CommBackend] = "dense",
         layout: str = "dense",
+        cluster=None,
     ):
         assert staging in ("sync", "async"), staging
         assert layout in ("dense", "sparse"), layout
@@ -463,6 +464,34 @@ class TemporalEngine:
         self.mesh = mesh
         self.data_axis = data_axis
         self.model_axes = tuple(model_axes)
+        # ``cluster``: a repro.cluster.runtime.ClusterRuntime.  When it is
+        # distributed, this engine becomes ONE SHARD of the run: it holds
+        # only its process's contiguous partition range (structure, staged
+        # tiles, and state are all sliced to it), the boundary exchange
+        # and halt vote go through the inter-process ClusterGather, and
+        # results are re-assembled across processes at gather time —
+        # bitwise-identical to the single-process stacked run (the
+        # exchange reconstructs the exact (P, NB) buffer and applies the
+        # same 0..P-1 fold; the cross-process halt vote keeps superstep
+        # counts lockstep).  A single-process runtime (or None) leaves
+        # every path untouched.
+        self.cluster = cluster if (cluster is not None
+                                   and cluster.is_distributed) else None
+        if self.cluster is not None:
+            assert mesh is None, \
+                "cluster placement is stacked per process (mesh-free); " \
+                "per-process meshes are a future composition"
+            self.parts: Optional[Tuple[int, int]] = \
+                self.cluster.partition_shard(bg.n_parts)
+            from repro.cluster.gather import ClusterGather
+
+            if not isinstance(comm, ClusterGather):
+                assert comm in ("dense", "host", "cluster"), \
+                    f"cluster runs exchange through ClusterGather; " \
+                    f"comm={comm!r} has no inter-process form"
+                comm = ClusterGather(runtime=self.cluster)
+        else:
+            self.parts = None
         # ``use_pallas`` is the three-valued kernel mode ("off" | "spmv" |
         # "fused"; bools keep their historical meaning).  It is validated
         # here and passed down opaquely — ``kernel_interpret`` rides along
@@ -476,17 +505,23 @@ class TemporalEngine:
         self.layout = layout
         self.comm = make_comm(comm, mesh=mesh, model_axes=self.model_axes)
         out_mask = np.arange(bg.o_max)[None, :] < bg.n_out[:, None]
+
+        def shard(a):  # partition-lead structure -> this process's rows
+            return a if self.parts is None else a[self.parts[0]:self.parts[1]]
+
         # template structure: (rows, cols, brows, bcols) tile index + the
         # layout-independent tail.  The sparse layout replaces the first
         # four with PER-INSTANCE packed indices scanned alongside the tile
         # values; the tail is shared by both layouts.
         self._struct_tail = (
-            jnp.asarray(bg.out_slot), jnp.asarray(bg.out_local),
-            jnp.asarray(out_mask), jnp.asarray(bg.global_of >= 0),
+            jnp.asarray(shard(bg.out_slot)), jnp.asarray(shard(bg.out_local)),
+            jnp.asarray(shard(out_mask)), jnp.asarray(shard(bg.global_of >= 0)),
         )
         self._struct = (
-            jnp.asarray(bg.tiles_rc[:, :, 0]), jnp.asarray(bg.tiles_rc[:, :, 1]),
-            jnp.asarray(bg.btiles_rc[:, :, 0]), jnp.asarray(bg.btiles_rc[:, :, 1]),
+            jnp.asarray(shard(bg.tiles_rc[:, :, 0])),
+            jnp.asarray(shard(bg.tiles_rc[:, :, 1])),
+            jnp.asarray(shard(bg.btiles_rc[:, :, 0])),
+            jnp.asarray(shard(bg.btiles_rc[:, :, 1])),
         ) + self._struct_tail
         self._runners: Dict[Any, Callable] = {}
         self._merge_fns: Dict[int, Callable] = {}
@@ -500,20 +535,24 @@ class TemporalEngine:
     def stage(
         self, instance_weights: np.ndarray, zero_fill: float
     ) -> Tuple[jax.Array, jax.Array]:
-        """(I, E) edge weights -> device tile tensors, batched scatter."""
+        """(I, E) edge weights -> device tile tensors, batched scatter.
+        A cluster-sharded engine fills only its own partition range."""
         w = np.asarray(instance_weights, np.float32)
         if w.ndim == 1:
             w = w[None]
         return (
-            jnp.asarray(self.bg.fill_local_batch(w, zero=zero_fill)),
-            jnp.asarray(self.bg.fill_boundary_batch(w, zero=zero_fill)),
+            jnp.asarray(self.bg.fill_local_batch(w, zero=zero_fill,
+                                                 parts=self.parts)),
+            jnp.asarray(self.bg.fill_boundary_batch(w, zero=zero_fill,
+                                                    parts=self.parts)),
         )
 
     def stage_sparse(
         self, instance_weights: np.ndarray, zero_fill: float
     ) -> SparseBlocked:
         """(I, E) edge weights -> packed active-tile batch (host arrays)."""
-        return self.bg.stage_sparse(instance_weights, zero=zero_fill)
+        return self.bg.stage_sparse(instance_weights, zero=zero_fill,
+                                    parts=self.parts)
 
     # ------------------------------------------------------- instance step
     def _device_graph(self, tiles_l, btiles_l, struct) -> DeviceGraph:
@@ -745,12 +784,52 @@ class TemporalEngine:
                 )
         return self._runners[key]
 
+    # ------------------------------------------------- cluster shard slicing
+    def _shard_axis(self, a, axis: int = 1):
+        """Slice a full-width partition axis to this process's range.
+        No-op for a single-process engine or an already shard-local
+        array (its axis is ``hi - lo`` wide)."""
+        if a is None or self.parts is None:
+            return a
+        lo, hi = self.parts
+        if a.shape[axis] == hi - lo:
+            return a
+        assert a.shape[axis] == self.bg.n_parts, (a.shape, axis)
+        idx = [slice(None)] * a.ndim
+        idx[axis] = slice(lo, hi)
+        return a[tuple(idx)]
+
+    def _shard_sparse_batch(self, sp: SparseBlocked) -> SparseBlocked:
+        """Slice a full-width pre-staged packed batch to the shard."""
+        import dataclasses
+
+        lo, hi = self.parts
+        if sp.tiles.shape[1] == hi - lo:
+            return sp
+        return dataclasses.replace(
+            sp,
+            tiles=sp.tiles[:, lo:hi], btiles=sp.btiles[:, lo:hi],
+            rows=sp.rows[:, lo:hi], cols=sp.cols[:, lo:hi],
+            brows=sp.brows[:, lo:hi], bcols=sp.bcols[:, lo:hi],
+            nnz=sp.nnz[:, lo:hi], bnnz=sp.bnnz[:, lo:hi],
+        )
+
     # ------------------------------------------------------------ dispatch
     def _dispatch(self, run_fn, *args):
         if self.mesh is not None:
             with self.mesh:
                 return run_fn(*args)
-        return run_fn(*args)
+        out = run_fn(*args)
+        if self.parts is not None:
+            # cluster mode: the runner's pure_callback exchanges ride the
+            # SEQUENCED inter-process channel, and so do the host-side
+            # operations that follow a dispatch (chunk consistency checks,
+            # result gathers).  Draining the computation here keeps every
+            # process's exchange schedule a single deterministic order —
+            # an async dispatch could interleave the two streams
+            # differently per process and trip the tag verification.
+            out = jax.block_until_ready(out)
+        return out
 
     def _cached_device(self, host_arrays: Tuple[Any, ...]) -> Tuple[jax.Array, ...]:
         """Device arrays for one staged batch, uploaded once per identity.
@@ -837,15 +916,21 @@ class TemporalEngine:
             n = int(ch.tiles.shape[0])
             n_total += n
             is_sparse = bool(getattr(ch, "is_sparse", False))
+            # cluster shards keep only their partition rows: chunks from a
+            # shard-local stream (repro.cluster.staging) are already
+            # P_local-wide and pass through; full-width chunks (e.g. a
+            # plain load_blocked_stream) are sliced here
             if is_sparse:
                 sparse_seen = True
-                nnz_total += int(ch.nnz.sum()) + int(ch.bnnz.sum())
-                bufs = tuple(_device_put(a) for a in (
+                nnz_total += (int(self._shard_axis(ch.nnz).sum())
+                              + int(self._shard_axis(ch.bnnz).sum()))
+                bufs = tuple(_device_put(self._shard_axis(a)) for a in (
                     ch.tiles, ch.btiles, ch.rows, ch.cols, ch.brows, ch.bcols
                 ))
                 tail = self._struct_tail
             else:
-                bufs = (_device_put(ch.tiles), _device_put(ch.btiles))
+                bufs = (_device_put(self._shard_axis(ch.tiles)),
+                        _device_put(self._shard_axis(ch.btiles)))
                 tail = self._struct
             for k, s in enumerate(specs):
                 warm_k = s.effective_warm()
@@ -883,8 +968,9 @@ class TemporalEngine:
             outs.append((xs, final[k], merged, ss, lsw))
         occ = None
         if sparse_seen:
-            total = n_total * (int(self.bg.n_tiles.sum())
-                               + int(self.bg.n_btiles.sum()))
+            lo, hi = self.parts or (0, self.bg.n_parts)
+            total = n_total * (int(self.bg.n_tiles[lo:hi].sum())
+                               + int(self.bg.n_btiles[lo:hi].sum()))
             occ = nnz_total / total if total else 0.0
         return outs, occ
 
@@ -1006,7 +1092,18 @@ class TemporalEngine:
                 assert s.program.init is not None, \
                     f"program {s.program.name!r} has no init; pass x0"
                 x0 = s.program.init(self.bg)
-            x0s.append(jnp.asarray(x0, jnp.float32))
+            x0 = jnp.asarray(x0, jnp.float32)
+            if self.parts is not None:
+                # x0 is always FULL-width ([Q,] P, Vp) — program inits and
+                # resume_seed scatter globally; the shard keeps its rows
+                x0 = x0[..., self.parts[0]:self.parts[1], :]
+            x0s.append(x0)
+        if self.parts is not None:
+            # pre-staged full-width batches slice to the shard's rows too
+            if sparse is not None:
+                sparse = self._shard_sparse_batch(sparse)
+            tiles = self._shard_axis(tiles)
+            btiles = self._shard_axis(btiles)
         occ: Optional[float] = None
 
         if (stream is None and staging == "async" and tiles is None
@@ -1080,6 +1177,18 @@ class TemporalEngine:
         """Gather device outputs back to global vertex order + stats."""
         xs, final, merged, ss, lsw = out
         bg = self.bg
+        if self.parts is not None:
+            # re-assemble the global partition axis in rank order before
+            # the vertex gather (contiguous shards -> plain concatenation
+            # reconstructs the exact stacked layout).  Superstep stats are
+            # identical on every process — the global halt vote keeps the
+            # loops lockstep — so they stay local.
+            cat = self.cluster.allgather_concat
+            xs = cat(np.asarray(xs), axis=-2, tag="gather/xs")
+            final = cat(np.asarray(final), axis=-2, tag="gather/final")
+            if pattern == "eventually" and merge == "mean":
+                merged = cat(np.asarray(merged), axis=-2,
+                             tag="gather/merged")
 
         def gather(x):  # (..., P, Vp) -> (..., V), any leading axes
             x = np.asarray(x)

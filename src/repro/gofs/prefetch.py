@@ -19,6 +19,11 @@ window — the same shape as the shard prefetch in
 * ``d>=2`` — double (d=2) or deeper buffering: up to ``d - 1`` chunks are
   staged ahead on the pool while the consumer processes the current one.
 
+``inflight`` (default ``num_workers``) decouples read CONCURRENCY from
+the window depth: up to ``max(prefetch_depth - 1, inflight)`` chunks are
+submitted ahead, so ``num_workers`` pool threads really do read
+concurrently without inflating ``prefetch_depth``.
+
 Each chunk OWNS its buffers: they are allocated on the producer (so the
 allocation cost overlaps execution too) and never rewritten after handoff,
 which is what lets a device consumer alias them with no further copy
@@ -26,8 +31,8 @@ which is what lets a device consumer alias them with no further copy
 ``jnp.array(..., copy=True)`` defers the host read until execution —
 reusing a buffer ring here corrupts in-flight chunks; the engine parity
 tests pin this down).  In-flight memory stays bounded by the window: at
-most ``prefetch_depth + 1`` chunks exist before the consumer releases
-theirs.
+most ``max(prefetch_depth - 1, inflight) + 2`` chunks exist before the
+consumer releases theirs.
 
 Cancellation: ``close()`` (or exiting the ``with`` block) stops the
 producer, cancels not-yet-started reads, and joins the pool — no leaked
@@ -135,6 +140,7 @@ class SlicePrefetcher:
         prefetch_depth: int = 2,
         chunk_instances: int = 1,
         num_workers: int = 1,
+        inflight: Optional[int] = None,
         layout: str = "dense",
         bucket: Optional[int] = None,
         bbucket: Optional[int] = None,
@@ -152,6 +158,15 @@ class SlicePrefetcher:
         self.prefetch_depth = int(prefetch_depth)
         self.chunk_instances = int(chunk_instances)
         self.num_workers = int(num_workers)
+        # ``inflight`` decouples read concurrency from the ready-chunk
+        # window: ``prefetch_depth`` alone bounded the submitted-ahead
+        # count, so extra pool workers never actually overlapped reads
+        # (depth=2 keeps exactly one read in flight no matter how many
+        # workers).  The submit window is max(prefetch_depth - 1,
+        # inflight); the default (num_workers) makes the worker count
+        # mean what callers expect — num_workers concurrent reads.
+        self.inflight = int(num_workers if inflight is None else inflight)
+        assert self.inflight >= 1, "inflight must be >= 1"
         # block-sparse staging: pack only active tiles per chunk.  A shared
         # ``bucket``/``bbucket`` (e.g. precomputed from GoFS-recorded tile
         # maps or a whole-batch activity scan) keeps every chunk on one jit
@@ -190,6 +205,7 @@ class SlicePrefetcher:
         prefetch_depth: int = 2,
         chunk_instances: int = 1,
         num_workers: int = 1,
+        inflight: Optional[int] = None,
         layout: str = "dense",
         bucket: Optional[int] = None,
         bbucket: Optional[int] = None,
@@ -206,8 +222,8 @@ class SlicePrefetcher:
         return cls(
             bg, lambda s, e: w[s:e], w.shape[0], zero=zero,
             prefetch_depth=prefetch_depth, chunk_instances=chunk_instances,
-            num_workers=num_workers, layout=layout, bucket=bucket,
-            bbucket=bbucket,
+            num_workers=num_workers, inflight=inflight, layout=layout,
+            bucket=bucket, bbucket=bbucket,
         )
 
     # ------------------------------------------------------------ staging
@@ -282,8 +298,9 @@ class SlicePrefetcher:
                     return
 
         try:
-            # keep the window full: up to depth-1 chunks staged ahead
-            for _ in range(self.prefetch_depth - 1):
+            # keep the window full: up to max(depth-1, inflight) chunks
+            # submitted ahead (inflight of them reading concurrently)
+            for _ in range(max(self.prefetch_depth - 1, self.inflight)):
                 submit_one()
             while True:
                 try:

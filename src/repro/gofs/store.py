@@ -250,21 +250,45 @@ class GoFSStore(InstanceProvider):
         )
 
     def edge_attr_rows(
-        self, name: str, t_indices: Sequence[int]
+        self, name: str, t_indices: Sequence[int],
+        parts: Optional[Sequence[int]] = None,
+        fill: float = np.nan,
+        halo: bool = False,
     ) -> np.ndarray:
         """Bulk-read an edge attribute for a subset of visible instances
         into template edge order: (len(t_indices), E) float32.
 
         One slice read per (partition, bin, pack) touched by the subset —
-        the chunk grain of ``load_blocked_stream``'s prefetcher."""
+        the chunk grain of ``load_blocked_stream``'s prefetcher.
+
+        ``parts`` restricts the read to those partitions' slice files —
+        the shard-local staging path (``repro.cluster.staging``): a
+        process reads only the slices of partitions it owns, so its store
+        byte traffic is ~its shard fraction of the collection.  Edge
+        positions no selected partition references hold ``fill``.
+
+        A partition's slice files record its *outgoing* cut edges (the
+        deployment stores each cut edge with its SOURCE subgraph), but the
+        consuming ``fill_boundary_batch(parts=...)`` scatters the cut
+        edges *incoming* to the owned partitions — which live in the
+        PEER partitions' remote arrays.  ``halo=True`` adds that halo
+        read: for every non-selected partition, only the ``remote`` half
+        of its slices is read (cut edges are the partitioner-minimized
+        sliver of the collection), so a shard-local stage is complete
+        without reading the peers' local-edge bulk."""
         a = self._e_attrs[name]
         n = len(t_indices)
         E = int(self.meta["num_edges"])
         if a.constant is not None:
             return np.full((n, E), a.constant, np.float32)
-        out = np.empty((n, E), np.float32)
+        if parts is None:
+            parts = range(int(self.meta["num_partitions"]))
+            halo = False  # full read: nothing left to halo
+            out = np.empty((n, E), np.float32)
+        else:
+            out = np.full((n, E), fill, np.float32)
         packs = self._visible_packs(t_indices)
-        for p in range(int(self.meta["num_partitions"])):
+        for p in parts:
             for b in range(len(self._part_meta[p]["bins"])):
                 le_ids = self._bin_concat_ids(p, b, "local_edge_id")
                 re_ids = self._bin_concat_ids(p, b, "remote_edge_id")
@@ -273,6 +297,19 @@ class GoFSStore(InstanceProvider):
                     for j, r in rows:
                         out[j, le_ids] = sl["local"][r]
                         out[j, re_ids] = sl["remote"][r]
+        if halo:
+            owned = set(parts)
+            for p in range(int(self.meta["num_partitions"])):
+                if p in owned:
+                    continue
+                for b in range(len(self._part_meta[p]["bins"])):
+                    re_ids = self._bin_concat_ids(p, b, "remote_edge_id")
+                    if re_ids.size == 0:
+                        continue
+                    for k, rows in packs.items():
+                        sl = self._load(p, attr_slice_name("e", name, b, k))
+                        for j, r in rows:
+                            out[j, re_ids] = sl["remote"][r]
         return out
 
     def edge_attr_matrix(self, name: str) -> np.ndarray:
@@ -562,6 +599,7 @@ class GoFSStore(InstanceProvider):
         prefetch_depth: int = 2,
         chunk_instances: Optional[int] = None,
         num_workers: int = 1,
+        inflight: Optional[int] = None,
         layout: str = "dense",
         delta: Optional[bool] = None,
         transform=None,
@@ -630,8 +668,8 @@ class GoFSStore(InstanceProvider):
                 return SlicePrefetcher(
                     bg, None, self.num_timesteps(), zero=zero,
                     prefetch_depth=prefetch_depth, chunk_instances=chunk,
-                    num_workers=num_workers, layout=layout,
-                    stage_fn=stage_delta_chunk,
+                    num_workers=num_workers, inflight=inflight,
+                    layout=layout, stage_fn=stage_delta_chunk,
                 )
         bucket = bbucket = None
         if layout == "sparse" and transform is None:
@@ -646,6 +684,7 @@ class GoFSStore(InstanceProvider):
             prefetch_depth=prefetch_depth,
             chunk_instances=chunk,
             num_workers=num_workers,
+            inflight=inflight,
             layout=layout,
             bucket=bucket,
             bbucket=bbucket,

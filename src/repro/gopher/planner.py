@@ -191,6 +191,11 @@ class ExecutionPlan:
                 f"{est['exchange_hops']} hop(s) "
                 f"({est['n_parts']} partitions, "
                 f"{est['boundary_nnz']} published vertices)")
+        if "mesh_split_data" in est:
+            byte_lines.append(
+                f"    mesh proposal: {est['mesh_split_devices']} device(s) "
+                f"-> data {est['mesh_split_data']} x model "
+                f"{est['mesh_split_model']} — {est['mesh_split_why']}")
         if byte_lines:
             lines.append("  estimates:")
             lines.extend(byte_lines)
@@ -223,6 +228,98 @@ def extend_plan(plan: ExecutionPlan, num_instances: int) -> ExecutionPlan:
     est["num_instances"] = int(num_instances)
     return dataclasses.replace(plan,
                                estimates=tuple(sorted(est.items())))
+
+
+def propose_mesh_split(
+    num_devices: int,
+    num_instances: int,
+    n_parts: int,
+    pattern: str,
+    *,
+    num_boundary: int,
+    boundary_nnz: int,
+    comm: str = "dense",
+) -> Dict[str, Any]:
+    """Propose how ``num_devices`` should split between the instance
+    (data) and partition (model) mesh axes.
+
+    The paper exposes BOTH parallelism axes — timesteps and subgraphs —
+    and the split decides what each superstep pays: partitions sharded
+    ``m``-way exchange their boundary every superstep
+    (``boundary_exchange_bytes``), while instances sharded ``d``-way are
+    temporally concurrent and exchange NOTHING (independent/eventually
+    patterns never communicate across instances).  So the proposal gives
+    the data axis every device that divisibility allows and prices the
+    remaining partition split:
+
+    * enumerate the divisor splits ``d * m == num_devices`` where ``m``
+      divides the partition count and (for ``d > 1``) the pattern is
+      temporally concurrent and ``d`` divides the instance count;
+    * score each by per-device exchange volume over the whole pass,
+      ``ceil(I / d) * bytes_per_device(m)`` — the term the data axis
+      amortizes and the model axis inflates;
+    * ties (e.g. a zero-exchange single-partition-group) break toward
+      fewer model shards.
+
+    ``sequential`` chains instances, so the data axis is off the table
+    and the proposal is all-model.  Returns ``{"data", "model",
+    "exchange_bytes_per_device", "why"}``; callers embed it in plan
+    estimates (``explain()`` renders it).
+
+    >>> p = propose_mesh_split(8, 16, 8, "independent",
+    ...                        num_boundary=128, boundary_nnz=64)
+    >>> (p["data"], p["model"])
+    (8, 1)
+    >>> p = propose_mesh_split(8, 16, 8, "sequential",
+    ...                        num_boundary=128, boundary_nnz=64)
+    >>> (p["data"], p["model"])
+    (1, 8)
+    """
+    from repro.dist.collectives import boundary_exchange_bytes
+
+    D = max(1, int(num_devices))
+    temporal = pattern in ("independent", "eventually")
+    best = None
+    for m in range(1, D + 1):
+        if D % m or m > n_parts or n_parts % m:
+            continue
+        d = D // m
+        if d > 1 and not (temporal and num_instances % d == 0
+                          and num_instances >= d):
+            continue
+        ex = boundary_exchange_bytes(num_boundary, m, comm,
+                                     boundary_nnz=boundary_nnz)
+        cost = -(-num_instances // d) * float(ex["bytes_per_device"])
+        if best is None or (cost, m) < (best[0], best[2]):
+            best = (cost, d, m, ex)
+    if best is None:
+        # nothing divides: stack everything (the engine replicates
+        # instances when the axis does not divide — correct, no speedup)
+        return {
+            "data": 1, "model": 1, "exchange_bytes_per_device": 0.0,
+            "why": f"no divisor split of {D} device(s) fits "
+                   f"{n_parts} partitions x {num_instances} instances — "
+                   f"run stacked/replicated",
+        }
+    cost, d, m, ex = best
+    if not temporal:
+        why = (f"{pattern} chains instances (no data axis); all {m} "
+               f"device(s) shard partitions, exchanging "
+               f"~{ex['bytes_per_device']:,.0f} B/device/superstep")
+    elif m == 1:
+        why = (f"temporal pattern pays no cross-instance exchange — "
+               f"{d} instance shard(s) take every device; single "
+               f"partition group exchanges nothing off-device")
+    else:
+        why = (f"{d} instance shard(s) x {m} partition shard(s): data "
+               f"axis takes what divides I={num_instances}, remaining "
+               f"{m}-way partition split moves "
+               f"~{ex['bytes_per_device']:,.0f} B/device/superstep")
+    return {
+        "data": int(d), "model": int(m),
+        "exchange_bytes_per_device": float(ex["bytes_per_device"]),
+        "why": why,
+    }
 
 
 def plan_analytic(
@@ -441,6 +538,20 @@ def plan_analytic(
         # payload once, priced against the reconstructed sparse batch
         base = sparse_bytes if sparse_bytes is not None else dense_bytes
         source_bytes_delta = int(round(base * delta_ratio))
+    # mesh-shape proposal: how the available device pool SHOULD split
+    # between the instance (data) and partition (model) axes — advisory
+    # when no mesh was given, a review of the split when one was
+    if mesh is not None:
+        num_devices = 1
+        for n in shape.values():
+            num_devices *= int(n)
+    else:
+        import jax
+
+        num_devices = jax.local_device_count()
+    split = propose_mesh_split(
+        num_devices, num_instances, bg.n_parts, pattern,
+        num_boundary=bg.num_boundary, boundary_nnz=nnz, comm=cm.value)
     estimates = {
         "num_vertices": int(len(bg.part_of)),
         "num_instances": int(num_instances),
@@ -458,6 +569,10 @@ def plan_analytic(
         "exchange_kind": ex["kind"],
         "exchange_hops": int(ex["hops"]),
         "exchange_bytes_per_device": float(ex["bytes_per_device"]),
+        "mesh_split_devices": int(num_devices),
+        "mesh_split_data": split["data"],
+        "mesh_split_model": split["model"],
+        "mesh_split_why": split["why"],
     }
     return ExecutionPlan(
         analytic=analytic.name,

@@ -300,11 +300,25 @@ class GopherSession:
         weights: Optional[Dict[str, np.ndarray]] = None,
         vertex_attrs: Optional[Dict[str, np.ndarray]] = None,
         staging_cache_bytes: Optional[float] = None,
+        cluster=None,
     ):
         from repro.core.graph import TimeSeriesGraph
         from repro.gofs.store import GoFSStore
 
         self.mesh = mesh
+        # ``cluster``: a repro.cluster.runtime.ClusterRuntime.  When
+        # distributed, every engine this session builds becomes one shard
+        # of the N-process run (its partition range, with the real
+        # inter-process boundary exchange) and store-backed streamed
+        # staging goes shard-local (repro.cluster.staging.shard_stream) —
+        # per-host staged bytes drop to ~1/num_processes.  Results stay
+        # bitwise-identical to the single-process session; a
+        # single-process runtime (or None) changes nothing.
+        self.cluster = cluster if (cluster is not None
+                                   and cluster.is_distributed) else None
+        if self.cluster is not None:
+            assert mesh is None, \
+                "cluster sessions are stacked per process (mesh-free)"
         self.data_axis = data_axis
         self.model_axes = tuple(model_axes)
         # kernel-mode policy: None -> the planner's auto rule picks
@@ -461,12 +475,32 @@ class GopherSession:
         return self.plan(analytic, **kw).explain()
 
     # ----------------------------------------------------------- execution
-    def run(self, plan, **params) -> AnalyticResult:
-        """Execute one plan (or plan an analytic by name and execute it)."""
+    def run(self, plan, *, resume: bool = False,
+            checkpoint_dir: Optional[str] = None,
+            checkpoint_every: int = 1,
+            checkpoint_chunk: Optional[int] = None,
+            **params) -> AnalyticResult:
+        """Execute one plan (or plan an analytic by name and execute it).
+
+        ``checkpoint_dir=`` makes the run resumable: the pass consumes
+        the instance axis in spans and snapshots its engine state (carry,
+        accumulated values, superstep counters, staging cursor) every
+        ``checkpoint_every`` spans through the atomic-rename machinery of
+        ``repro.train.checkpoint``; ``resume=True`` then continues a
+        killed run from its last committed snapshot, bitwise-identical to
+        the uninterrupted pass (:mod:`repro.cluster.checkpoint`)."""
         if isinstance(plan, str):
             plan = self.plan(plan, **params)
         else:
             assert not params, "params belong to plan(); got a built plan"
+        if checkpoint_dir is not None:
+            from repro.cluster.checkpoint import ResumableRun
+
+            return ResumableRun(
+                self, plan, checkpoint_dir=checkpoint_dir,
+                every=checkpoint_every, chunk_instances=checkpoint_chunk,
+            ).run(resume=resume)
+        assert not resume, "resume=True needs checkpoint_dir="
         return self.run_many([plan])[0]
 
     def run_many(self, plans: Sequence[ExecutionPlan]) -> List[AnalyticResult]:
@@ -549,9 +583,20 @@ class GopherSession:
                 # is comparable with the cache path
                 tf = None if transform == "raw" else \
                     (lambda rows: a0.weights(self, rows))
-                stream = self.store.load_blocked_stream(
-                    self.bg, attr, zero=zero, layout=layout,
-                    delta=use_delta, transform=tf)
+                if self.cluster is not None:
+                    # shard-local staging: read + fill only this process's
+                    # partition range (delta chains describe the full
+                    # collection, so the shard path stages from the value
+                    # slices); staged_bytes then reports the PER-HOST cost
+                    from repro.cluster.staging import shard_stream
+
+                    stream = shard_stream(
+                        self.store, self.bg, attr, self.cluster,
+                        zero=zero, layout=layout, transform=tf)
+                else:
+                    stream = self.store.load_blocked_stream(
+                        self.bg, attr, zero=zero, layout=layout,
+                        delta=use_delta, transform=tf)
                 cache.staging_passes += 1
                 outs = engine.run_many(
                     specs, stream=_counted_chunks(stream, cache))
@@ -806,7 +851,7 @@ class GopherSession:
             self._engines[key] = TemporalEngine(
                 self._blocked(graph), mesh=self.mesh,
                 data_axis=self.data_axis, model_axes=self.model_axes,
-                use_pallas=up, comm=comm,
+                use_pallas=up, comm=comm, cluster=self.cluster,
             )
         return self._engines[key]
 

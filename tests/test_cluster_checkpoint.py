@@ -1,0 +1,215 @@
+"""Resumable analytics: checkpoint atomicity, fault injection, resume parity.
+
+The acceptance this file gates: kill a run mid-save or mid-superstep, and
+(a) the previous checkpoint is never corrupted — torn writes are
+invisible to ``list_steps``/``latest`` — and (b) the resumed run is
+**bitwise identical** to an uninterrupted one.
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import TINY
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def ck_store_root(tiny_collection, tmp_path_factory):
+    from repro.gofs import deploy_collection
+
+    root = str(tmp_path_factory.mktemp("gofs_ck"))
+    deploy_collection(tiny_collection, TINY, root)
+    return root
+
+
+def _session(root):
+    from repro.gofs import GoFSStore
+    from repro.gopher import GopherSession
+
+    return GopherSession(GoFSStore(root))
+
+
+# ----------------------------------------------------------- checkpointer
+
+def test_checkpointer_roundtrip_and_fingerprint(tmp_path):
+    from repro.cluster.checkpoint import AnalyticCheckpointer, ResumeMismatch
+
+    ck = AnalyticCheckpointer(str(tmp_path), keep=2)
+    fp = {"analytic": "sssp", "chunk": 2, "params": "(('source', 0),)"}
+    assert ck.latest(fp) is None  # empty dir: fresh run
+    ck.save(2, {"final": np.arange(3, dtype=np.float32)}, fp)
+    ck.save(4, {"final": np.arange(3, dtype=np.float32) + 1}, fp)
+    state, cursor = ck.latest(fp)
+    assert cursor == 4
+    assert np.array_equal(state["final"], np.arange(3, dtype=np.float32) + 1)
+    with pytest.raises(ResumeMismatch):
+        ck.latest({"analytic": "pagerank", "chunk": 2})
+    # retention: keep=2 drops the oldest after a third save
+    ck.save(6, {"final": np.zeros(3, np.float32)}, fp)
+    from repro.train import checkpoint as _ckpt
+
+    assert _ckpt.list_steps(str(tmp_path)) == [4, 6]
+
+
+def test_torn_checkpoint_is_invisible(tmp_path):
+    """A crash mid-write leaves a .tmp dir or a dir without MANIFEST —
+    neither may ever be loaded."""
+    from repro.cluster.checkpoint import AnalyticCheckpointer
+    from repro.train import checkpoint as _ckpt
+
+    ck = AnalyticCheckpointer(str(tmp_path))
+    fp = {"analytic": "sssp"}
+    ck.save(2, {"final": np.ones(3, np.float32)}, fp)
+    # torn artifacts AFTER the good snapshot
+    os.makedirs(tmp_path / "step_00000004.tmp")
+    np.save(tmp_path / "step_00000004.tmp" / "final.npy", np.zeros(3))
+    os.makedirs(tmp_path / "step_00000006")  # renamed dir missing manifest
+    assert _ckpt.list_steps(str(tmp_path)) == [2]
+    state, cursor = ck.latest(fp)
+    assert cursor == 2 and np.array_equal(state["final"], np.ones(3))
+
+
+# ------------------------------------------------------------ run parity
+
+@pytest.mark.parametrize("app,params", [
+    ("sssp", {"source": 0}),          # sequential: carry IS the pattern
+    ("pagerank", {"iters": 5}),       # independent: cold spans
+])
+def test_checkpointed_run_bitwise_and_resume(ck_store_root, tmp_path,
+                                             app, params):
+    from repro.train import checkpoint as _ckpt
+
+    sess = _session(ck_store_root)
+    plan = sess.plan(app, **params)
+    ref = sess.run(plan)
+
+    d = str(tmp_path / app)
+    got = sess.run(plan, checkpoint_dir=d, checkpoint_chunk=1)
+    for key in ("values", "final"):
+        assert np.array_equal(np.asarray(getattr(ref.engine, key)),
+                              np.asarray(getattr(got.engine, key))), key
+    assert np.array_equal(np.asarray(ref.engine.stats["supersteps"]),
+                          np.asarray(got.engine.stats["supersteps"]))
+
+    # drop everything after the FIRST snapshot, then resume
+    steps = _ckpt.list_steps(d)
+    assert len(steps) >= 2
+    for s in steps[1:]:
+        shutil.rmtree(os.path.join(d, f"step_{s:08d}"))
+    res = sess.run(plan, checkpoint_dir=d, checkpoint_chunk=1, resume=True)
+    for key in ("values", "final"):
+        assert np.array_equal(np.asarray(getattr(ref.engine, key)),
+                              np.asarray(getattr(res.engine, key))), key
+
+
+def test_resume_refuses_different_run(ck_store_root, tmp_path):
+    from repro.cluster.checkpoint import ResumeMismatch
+
+    sess = _session(ck_store_root)
+    d = str(tmp_path / "ck")
+    sess.run(sess.plan("sssp", source=0), checkpoint_dir=d,
+             checkpoint_chunk=1)
+    with pytest.raises(ResumeMismatch):
+        sess.run(sess.plan("sssp", source=1), checkpoint_dir=d,
+                 checkpoint_chunk=1, resume=True)
+
+
+def test_resume_needs_checkpoint_dir(ck_store_root):
+    sess = _session(ck_store_root)
+    with pytest.raises(AssertionError):
+        sess.run(sess.plan("sssp", source=0), resume=True)
+
+
+# -------------------------------------------------------- fault injection
+
+CRASH_CHILD = textwrap.dedent("""\
+    import os, sys
+    import numpy as np
+    mode, root, ckdir = sys.argv[1], sys.argv[2], sys.argv[3]
+
+    from repro.train import checkpoint as _ckpt
+
+    if mode == "mid-save":
+        # die INSIDE the second commit: tmp dir fully written, rename
+        # never happens -> torn .tmp next to the intact first snapshot
+        real_rename = os.rename
+        calls = {"n": 0}
+
+        def dying_rename(src, dst):
+            if os.path.basename(dst).startswith("step_"):
+                calls["n"] += 1
+                if calls["n"] == 2:
+                    os._exit(1)
+            return real_rename(src, dst)
+
+        _ckpt.os.rename = dying_rename
+    elif mode == "mid-superstep":
+        # die during the second span's compute: first snapshot committed,
+        # nothing else written
+        from repro.core.engine import TemporalEngine
+
+        real_run_many = TemporalEngine.run_many
+        calls = {"n": 0}
+
+        def dying_run_many(self, *a, **k):
+            calls["n"] += 1
+            if calls["n"] == 2:
+                os._exit(1)
+            return real_run_many(self, *a, **k)
+
+        TemporalEngine.run_many = dying_run_many
+    else:
+        raise SystemExit(f"unknown mode {mode}")
+
+    from repro.gofs import GoFSStore
+    from repro.gopher import GopherSession
+
+    sess = GopherSession(GoFSStore(root))
+    sess.run(sess.plan("sssp", source=0), checkpoint_dir=ckdir,
+             checkpoint_chunk=1, checkpoint_every=1)
+    os._exit(0)  # should be unreachable: the crash fires first
+""")
+
+
+@pytest.mark.parametrize("mode", ["mid-save", "mid-superstep"])
+def test_kill_and_resume_bitwise(ck_store_root, tmp_path, mode):
+    child = tmp_path / "crash_child.py"
+    child.write_text(CRASH_CHILD)
+    ckdir = str(tmp_path / "ck")
+
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, str(child), mode, ck_store_root, ckdir],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 1, (proc.stdout, proc.stderr)
+
+    # previous checkpoint intact, torn state invisible
+    from repro.train import checkpoint as _ckpt
+
+    steps = _ckpt.list_steps(ckdir)
+    assert steps == [1], steps  # exactly the first span's snapshot
+    if mode == "mid-save":
+        # the interrupted commit left its torn tmp dir behind
+        assert any(d.endswith(".tmp") for d in os.listdir(ckdir))
+    with open(os.path.join(ckdir, "step_00000001",
+                           _ckpt.MANIFEST)) as f:
+        json.load(f)  # committed manifest parses
+
+    # resume finishes the run bitwise-identically to an uninterrupted one
+    sess = _session(ck_store_root)
+    plan = sess.plan("sssp", source=0)
+    ref = sess.run(plan)
+    res = sess.run(plan, checkpoint_dir=ckdir, checkpoint_chunk=1,
+                   resume=True)
+    for key in ("values", "final"):
+        assert np.array_equal(np.asarray(getattr(ref.engine, key)),
+                              np.asarray(getattr(res.engine, key))), key
+    assert np.array_equal(np.asarray(ref.engine.stats["supersteps"]),
+                          np.asarray(res.engine.stats["supersteps"]))

@@ -60,7 +60,9 @@ def test_named_module_paths_exist(md):
     ["repro.core.engine", "repro.core.comm", "repro.core.blocked",
      "repro.gofs.prefetch", "repro.dist.collectives",
      "repro.launch.mesh", "repro.gopher.session", "repro.gopher.registry",
-     "repro.gopher.planner", "repro.gopher.service"],
+     "repro.gopher.planner", "repro.gopher.service",
+     "repro.cluster.runtime", "repro.cluster.gather",
+     "repro.cluster.checkpoint"],
 )
 def test_docstring_examples_run(modname):
     """The per-pattern snippets documented on TemporalEngine /

@@ -551,6 +551,7 @@ def test_bench_check_gate(tmp_path):
         "streaming_ingest": {"speedup": 12.0, "incremental_steps": 4},
         "fused_superstep": {"fused_pallas_calls": 1, "state_vote_reduces": 0,
                             "eqn_ratio": 1.4},
+        "cluster_scaling": {"max_per_host_fraction": 0.5},
     }
     p = str(tmp_path / "base.json")
     with open(p, "w") as f:
@@ -581,6 +582,12 @@ def test_bench_check_gate(tmp_path):
     assert check_against_baseline(noisy, p) == []
     noisy["gofs_staging"]["speedup"] = 3.0  # order(s) of magnitude lost
     assert any("gofs_staging" in v for v in check_against_baseline(noisy, p))
+    # cluster staging economy is shard-derived: a host materializing the
+    # whole collection again is a sharding regression, not noise
+    bad5 = copy.deepcopy(base)
+    bad5["cluster_scaling"]["max_per_host_fraction"] = 1.0
+    assert any("max_per_host_fraction" in v
+               for v in check_against_baseline(bad5, p))
     # missing rows and missing baseline are loud
     assert any("missing" in v
                for v in check_against_baseline({"staging": {}}, p))
